@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: timing, synthetic inputs, CSV/markdown out."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_lowrank(key, m: int, n: int, rank: int, dtype=jnp.float32):
+    """The paper's synthetic input (§6.1): A = M @ N, Gaussian factors."""
+    k1, k2 = jax.random.split(key)
+    M = jax.random.normal(k1, (m, rank), dtype)
+    N = jax.random.normal(k2, (rank, n), dtype)
+    return M @ N
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+           **kw) -> tuple[float, object]:
+    """Median wall time over ``repeats`` (paper: mean of 5; median is more
+    robust at CPU-CI scale).  Blocks on the result."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def fmt_table(headers: list[str], rows: list[list]) -> str:
+    w = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+         else len(str(h)) for i, h in enumerate(headers)]
+    out = [" | ".join(str(h).ljust(w[i]) for i, h in enumerate(headers))]
+    out.append("-|-".join("-" * x for x in w))
+    for r in rows:
+        out.append(" | ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))
+    return "\n".join(out)

@@ -1,0 +1,53 @@
+"""Paper Figure 1: triplet-quality diagnostics.
+
+quality_i = |u_svd_i . u_alg_i| * |v_svd_i . v_alg_i|  (1.0 = perfect) and
+sigma error = sigma_svd_i - sigma_alg_i, for the 100 dominant triplets of a
+rank-1000 input (paper: 1e4x1e4, k=550, p=800; scaled to 2000x2000 for CPU
+with the same rank/k/p *ratios*)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, make_lowrank
+from repro.core import fsvd, rsvd
+
+M = N = 2000
+RANK = 200        # paper ratio: rank = m/10
+R_WANT = 100      # dominant triplets requested
+K_FSVD = 110      # paper: k = 5.5 * r
+P_OVER = 160      # paper: p = 8 * r... scaled: l = r + p
+
+def run() -> dict:
+    A = make_lowrank(jax.random.PRNGKey(0), M, N, RANK)
+    Ud, sd, Vtd = jnp.linalg.svd(A, full_matrices=False)
+
+    def quality(U, s, V, r):
+        qu = np.abs(np.sum(np.asarray(Ud[:, :r]) * np.asarray(U[:, :r]), 0))
+        qv = np.abs(np.sum(np.asarray(Vtd[:r].T) * np.asarray(V[:, :r]), 0))
+        return qu * qv, np.asarray(sd[:r] - s[:r])
+
+    f = fsvd(A, R_WANT, 5 * R_WANT + 50, host_loop=True)
+    q_f, ds_f = quality(f.U, f.s, f.V, R_WANT)
+    ro = rsvd(A, R_WANT, p=P_OVER, power_iters=2)
+    q_o, ds_o = quality(ro.U, ro.s, ro.V, R_WANT)
+    rd = rsvd(A, R_WANT, p=10)
+    q_d, ds_d = quality(rd.U, rd.s, rd.V, R_WANT)
+
+    rows = []
+    for name, q, ds in [("F-SVD", q_f, ds_f),
+                        ("R-SVD oversampled", q_o, ds_o),
+                        ("R-SVD default", q_d, ds_d)]:
+        rows.append([name, f"{q.min():.4f}", f"{np.median(q):.4f}",
+                     f"{(q > 0.99).mean()*100:.0f}%",
+                     f"{np.abs(ds).max():.2e}"])
+    print("\n## Figure 1 — triplet quality vs dense SVD "
+          f"(top {R_WANT} of a rank-{RANK} {M}x{N} input)")
+    print(fmt_table(["method", "min quality", "median quality",
+                     "% triplets >0.99", "max |sigma err|"], rows))
+    return {"fig1": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,116 @@
+"""§Perf hillclimb driver: re-lower a chosen cell under config variants and
+report the roofline-term deltas against the baseline artifact.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell gemma-7b/train_4k/single \
+        --variant online_attn
+    PYTHONPATH=src python -m benchmarks.hillclimb --list
+
+Each variant is one hypothesis -> change pair from EXPERIMENTS.md §Perf; the
+measured before/after terms are appended to artifacts/hillclimb/.
+"""
+# must precede any jax import (dry-run device count)
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+from benchmarks import roofline   # noqa: E402
+
+# variant name -> (ModelConfig overrides, run_cell kwargs)
+VARIANTS: dict = {
+    "baseline": ({}, {}),
+    # memory-term levers (q_chunk sized so the (B_loc, Cq, H_loc, Ck) tile
+    # fits the 16 MiB VMEM-residency threshold of the HBM model)
+    "online_attn": ({"attn_impl": "online", "q_chunk": 512}, {}),
+    "online_attn_256": ({"attn_impl": "online", "q_chunk": 256}, {}),
+    "online_attn_128": ({"attn_impl": "online", "q_chunk": 128}, {}),
+    "online_attn_32": ({"attn_impl": "online", "q_chunk": 32}, {}),
+    "chunked_attn": ({"attn_impl": "chunked", "q_chunk": 512}, {}),
+    "pin_acts": ({"pin_activations": True}, {}),
+    "pin_remat_dots": ({"pin_activations": True, "remat_policy": "dots"}, {}),
+    "pin_online": ({"pin_activations": True, "attn_impl": "online",
+                    "q_chunk": 512}, {}),
+    "remat_dots": ({"remat_policy": "dots"}, {}),
+    "online_remat_dots": ({"attn_impl": "online", "q_chunk": 256,
+                           "remat_policy": "dots"}, {}),
+    "ce_chunk_512": ({"ce_chunk": 512}, {}),
+    # decode levers
+    "dus_cache": ({"cache_update": "dus"}, {}),
+    "dus_online": ({"cache_update": "dus", "attn_impl": "online"}, {}),
+    # collective levers
+    "compressed_grads": ({}, {"compressed_grads": True}),
+    "pin_compressed": ({"pin_activations": True},
+                       {"compressed_grads": True}),
+    "online_compressed": ({"attn_impl": "online", "q_chunk": 512},
+                          {"compressed_grads": True}),
+    # decode levers on top of pinning
+    "pin_dus": ({"pin_activations": True, "cache_update": "dus"}, {}),
+}
+
+
+def run_variant(arch: str, shape: str, mesh: str, variant: str,
+                out_dir: str = "artifacts/hillclimb") -> dict:
+    from repro.launch.dryrun import run_cell
+    overrides, kwargs = VARIANTS[variant]
+    multi = mesh in ("multi", "pod2x16x16")
+    tag = f"{arch}_{shape}_{'pod2x16x16' if multi else 'pod16x16'}_{variant}"
+    os.makedirs(out_dir, exist_ok=True)
+    rec = run_cell(arch, shape, multi, cfg_overrides=overrides,
+                   save_hlo_to=os.path.join(out_dir, "hlo", tag + ".hlo.gz"),
+                   **kwargs)
+    rec["variant"] = variant
+    rec["overrides"] = overrides
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def report(rec: dict, base: dict | None = None) -> None:
+    t = roofline.terms(rec)
+    print(f"\n[{rec['arch']} {rec['shape']} {rec['mesh']} "
+          f"variant={rec.get('variant', '?')}]")
+    if t is None:
+        print("  status:", rec.get("status"), rec.get("error", "")[:300])
+        return
+    print(f"  compute    {t['compute_s']*1e3:10.1f} ms")
+    print(f"  memory     {t['memory_s']*1e3:10.1f} ms")
+    print(f"  collective {t['collective_s']*1e3:10.1f} ms")
+    print(f"  dominant: {t['dominant']}   roofline frac: "
+          f"{t['roofline_frac']*100:.1f}%")
+    if base is not None:
+        tb = roofline.terms(base)
+        if tb:
+            for k in ("compute_s", "memory_s", "collective_s"):
+                b, n = tb[k], t[k]
+                if b > 0:
+                    print(f"  {k:12s} delta: {100*(n-b)/b:+.1f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=False,
+                    help="arch/shape/mesh, e.g. gemma-7b/train_4k/single")
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(VARIANTS))
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or not args.cell:
+        for name, (ov, kw) in VARIANTS.items():
+            print(f"{name:22s} overrides={ov} kwargs={kw}")
+        return
+    arch, shape, mesh = args.cell.split("/")
+    base = None
+    base_path = os.path.join(
+        "artifacts/dryrun",
+        f"{arch}_{shape}_{'pod2x16x16' if mesh == 'multi' else 'pod16x16'}"
+        ".json")
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+    rec = run_variant(arch, shape, mesh, args.variant)
+    report(rec, base)
+
+
+if __name__ == "__main__":
+    main()

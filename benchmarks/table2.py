@@ -1,0 +1,51 @@
+"""Paper Table 2: residual + relative errors of the four SVD algorithms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, make_lowrank
+from repro.core import fsvd, rsvd
+from repro.core.fsvd import FSVDResult
+
+SIZES = [(1000, 1000), (2000, 1000), (4000, 2000), (10000, 2000)]
+RANK = 100
+R_WANT = 20
+
+
+def _errors(A, U, s, V) -> tuple[float, float]:
+    rel = float(jnp.linalg.norm(A.T @ U - V * s[None, :])
+                / jnp.linalg.norm(s))
+    res = float(jnp.linalg.norm(A - (U * s[None, :]) @ V.T))
+    return res, rel
+
+
+def run(sizes=SIZES, rank=RANK, r=R_WANT) -> dict:
+    rows = []
+    for m, n in sizes:
+        A = make_lowrank(jax.random.PRNGKey(0), m, n, rank)
+        Ud, sd, Vtd = jnp.linalg.svd(A, full_matrices=False)
+        e_svd = _errors(A, Ud[:, :r], sd[:r], Vtd[:r].T)
+        f = fsvd(A, r, 2 * rank, host_loop=True)
+        e_f = _errors(A, f.U, f.s, f.V)
+        ro = rsvd(A, r, p=rank, power_iters=2)
+        e_ro = _errors(A, ro.U, ro.s, ro.V)
+        rd = rsvd(A, r, p=10)
+        e_rd = _errors(A, rd.U, rd.s, rd.V)
+        rows.append([f"{m}x{n}",
+                     f"{e_svd[0]:.2e}", f"{e_svd[1]:.2e}",
+                     f"{e_f[0]:.2e}", f"{e_f[1]:.2e}",
+                     f"{e_ro[0]:.2e}", f"{e_ro[1]:.2e}",
+                     f"{e_rd[0]:.2e}", f"{e_rd[1]:.2e}"])
+    print("\n## Table 2 — residual ||A-USV'|| / relative ||A'U-VS||/||S|| "
+          "errors (r=20 of rank-100 inputs: residual is Eckart-Young-bounded"
+          " for ALL methods; the relative error separates them)")
+    print(fmt_table(
+        ["size", "SVD res", "SVD rel", "F-SVD res", "F-SVD rel",
+         "R-SVD(over) res", "R-SVD(over) rel", "R-SVD(def) res",
+         "R-SVD(def) rel"], rows))
+    return {"table2": rows}
+
+
+if __name__ == "__main__":
+    run()

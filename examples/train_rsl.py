@@ -1,0 +1,71 @@
+"""End-to-end driver: the paper's RSL application at 1e8-parameter scale.
+
+Learns a rank-5 similarity metric W in R^{10000 x 10000} (1e8 entries — the
+paper's "huge matrix" regime) with Riemannian mini-batch SGD (Alg 4), using
+the F-SVD retraction (Alg 2) on an IMPLICIT operator: the dense W is never
+materialized anywhere in the training loop — the point, tangent vectors and
+retraction all live in factored form, so memory is O((d1+d2) r) ~ 100k
+floats instead of 1e8.
+
+A dense-SVD retraction at this size is ~1e12 flops/step; the F-SVD step is
+~1e7.  Run it:
+
+    PYTHONPATH=src python examples/train_rsl.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import manifold as mf
+from repro.core import rsgd
+from repro.data.synthetic import make_rsl_dataset, rsl_batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d1", type=int, default=10000)
+    ap.add_argument("--d2", type=int, default=10000)
+    ap.add_argument("--rank", type=int, default=5)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3.0)
+    ap.add_argument("--fsvd-iters", type=int, default=20,
+                    help="paper Fig 2: 20 = 'lower iter', 35 = 'higher'")
+    ap.add_argument("--n-train", type=int, default=8192)
+    args = ap.parse_args()
+
+    print(f"[rsl] W: {args.d1} x {args.d2} rank {args.rank} "
+          f"({args.d1 * args.d2 / 1e6:.0f}M entries, never materialized)")
+    key = jax.random.PRNGKey(0)
+    ds = make_rsl_dataset(key, args.n_train, args.d1, args.d2, args.rank,
+                          noise=0.05)
+    W = mf.random_point(jax.random.fold_in(key, 1), args.d1, args.d2,
+                        args.rank)
+    opts = rsgd.RSGDOptions(lr=args.lr, fsvd_iters=args.fsvd_iters)
+    step = rsgd.make_step(opts)
+
+    b = rsl_batch(ds, 0, 0, args.batch)
+    jax.block_until_ready(step(W, b["x"], b["v"], b["y"], key))  # compile
+    t0 = time.perf_counter()
+    for t in range(args.steps):
+        b = rsl_batch(ds, 0, t, args.batch)
+        W, loss = step(W, b["x"], b["v"], b["y"], jax.random.fold_in(key, t))
+        if t % 50 == 0:
+            acc = float(rsgd.accuracy(W, b["x"], b["v"], b["y"]))
+            print(f"[rsl] step {t:4d}: loss {float(loss):.4f} "
+                  f"batch-acc {acc * 100:.1f}%")
+    jax.block_until_ready(W.s)
+    dt = time.perf_counter() - t0
+    acc = float(rsgd.accuracy(W, ds.X, ds.V, ds.y))
+    print(f"[rsl] {args.steps} steps in {dt:.1f}s "
+          f"({dt / args.steps * 1e3:.1f} ms/step); train acc {acc*100:.1f}%")
+    print(f"[rsl] learned spectrum: {[f'{x:.2f}' for x in W.s]}")
+    s_true = ds.true_spectrum()
+    print(f"[rsl] planted spectrum (top-5): "
+          f"{[f'{x:.2f}' for x in s_true[:5]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Fault-tolerant checkpointing: atomic directories, keep-N GC, async
+writes, and reshard-on-restore (elastic mesh changes)."""
+from repro.checkpoint.store import (CheckpointManager, latest_step,
+                                    load_checkpoint, save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,212 @@
+"""Atomic, restart-safe checkpoint store.
+
+Protocol (crash-safe at every point):
+  1. write all array leaves + manifest into ``<dir>/tmp_step_N.XXXX``,
+  2. fsync, then ``os.rename`` to ``<dir>/step_N``  (atomic on POSIX),
+  3. GC old steps beyond ``keep``.
+
+A checkpoint is *valid* iff its ``manifest.json`` exists and every leaf file
+it lists is present with the right byte size — half-written directories are
+ignored by ``latest_step`` and reaped by GC, so a training job killed
+mid-write restarts from the previous valid step.
+
+Reshard-on-restore: leaves are stored as host numpy arrays with their pytree
+paths; ``load_checkpoint`` re-``device_put``s them under whatever sharding
+the *current* mesh prescribes — restoring a 256-chip checkpoint onto 512
+chips (or 8 test devices) is the same code path (elastic scaling).
+
+Async: ``save_async`` snapshots leaves to host memory synchronously (cheap)
+and runs the disk protocol on a daemon thread, overlapping I/O with the next
+training steps; ``wait()`` joins before the next save or shutdown.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _key_name(p) -> str:
+    if hasattr(p, "key"):       # DictKey
+        return str(p.key)
+    if hasattr(p, "name"):      # GetAttrKey (NamedTuple fields)
+        return str(p.name)
+    return str(p.idx)           # SequenceKey
+
+
+def _flatten(tree: PyTree) -> list[tuple[str, np.ndarray]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(_key_name(p) for p in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save. Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    leaves = _flatten(tree)
+    tmp = tempfile.mkdtemp(prefix=f"tmp_step_{step}.", dir=directory)
+    manifest = {"step": step, "time": time.time(), "extra": extra or {},
+                "leaves": []}
+    try:
+        for i, (name, arr) in enumerate(leaves):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"name": name, "file": fname, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype),
+                 "bytes": os.path.getsize(os.path.join(tmp, fname))})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = os.path.join(directory, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def _is_valid(path: str) -> bool:
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        return False
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for leaf in manifest["leaves"]:
+            fp = os.path.join(path, leaf["file"])
+            if not os.path.exists(fp) or os.path.getsize(fp) != leaf["bytes"]:
+                return False
+        return True
+    except (json.JSONDecodeError, KeyError, OSError):
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Largest step with a *valid* checkpoint, or None."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and _is_valid(os.path.join(directory, name)):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, template: PyTree,
+                    sharding_fn: Optional[Callable[[str], Any]] = None
+                    ) -> tuple[PyTree, dict]:
+    """Restore into ``template``'s pytree structure.
+
+    ``sharding_fn(leaf_name) -> Sharding | None`` places each leaf under the
+    *current* mesh (reshard-on-restore); None leaves it on the default device.
+    Returns (tree, manifest_extra).
+    """
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {leaf["name"]: leaf for leaf in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for pth, leaf in flat:
+        name = "/".join(_key_name(p) for p in pth)
+        if name not in by_name:
+            raise KeyError(f"checkpoint {path} missing leaf {name!r}")
+        arr = np.load(os.path.join(path, by_name[name]["file"]))
+        expect = tuple(np.shape(leaf)) if leaf is not None else arr.shape
+        if tuple(arr.shape) != tuple(expect):
+            raise ValueError(
+                f"leaf {name!r}: checkpoint shape {arr.shape} != {expect}")
+        sh = sharding_fn(name) if sharding_fn else None
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [x for x in out]), manifest["extra"]
+
+
+def _gc(directory: str, keep: int) -> None:
+    if not os.path.isdir(directory):
+        return
+    valid = sorted(
+        (int(m.group(1)), name)
+        for name in os.listdir(directory)
+        for m in [_STEP_RE.match(name)]
+        if m and _is_valid(os.path.join(directory, name)))
+    for _, name in valid[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+    # reap stale tmp dirs (crashed writers)
+    for name in os.listdir(directory):
+        if name.startswith("tmp_step_"):
+            full = os.path.join(directory, name)
+            if time.time() - os.path.getmtime(full) > 300:
+                shutil.rmtree(full, ignore_errors=True)
+
+
+class CheckpointManager:
+    """Keep-N, optionally-async checkpoint writer."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: PyTree,
+             extra: Optional[dict] = None) -> None:
+        self.wait()
+        # synchronous device->host snapshot; disk I/O may be deferred
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                _gc(self.directory, self.keep)
+            except BaseException as e:       # surfaced on next wait()
+                self._error = e
+
+        if self.async_write:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self.wait()
+
+    def restore_latest(self, template: PyTree,
+                       sharding_fn: Optional[Callable] = None
+                       ) -> Optional[tuple[int, PyTree, dict]]:
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        tree, extra = load_checkpoint(self.directory, step, template,
+                                      sharding_fn)
+        return step, tree, extra

@@ -1,0 +1,22 @@
+"""Core numerics: the paper's contribution.
+
+gk        — Algorithm 1 (GK bidiagonalization + breakdown rank detection)
+fsvd      — Algorithm 2 (accurate & fast partial SVD)
+rank      — Algorithm 3 (numerical rank determination)
+rsvd      — Halko randomized-SVD baseline
+manifold  — fixed-rank Riemannian geometry (eqs. 24-27)
+rsgd      — Algorithm 4 (Riemannian mini-batch SGD for similarity learning)
+linop     — matvec-closure operator abstraction
+tridiag   — B^T B assembly + eigh
+"""
+from repro.core.fsvd import FSVDResult, fsvd
+from repro.core.gk import GKResult, gk_bidiag, gk_bidiag_host
+from repro.core.linop import LinOp, from_dense, from_factors
+from repro.core.rank import RankResult, numerical_rank
+from repro.core.rsvd import RSVDResult, rsvd
+
+__all__ = [
+    "FSVDResult", "fsvd", "GKResult", "gk_bidiag", "gk_bidiag_host",
+    "LinOp", "from_dense", "from_factors", "RankResult", "numerical_rank",
+    "RSVDResult", "rsvd",
+]

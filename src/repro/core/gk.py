@@ -1,0 +1,245 @@
+"""Algorithm 1 — Golub-Kahan bidiagonalization with reorthogonalization and
+breakdown-based numerical-rank detection.
+
+Two execution styles share the same math:
+
+  * ``gk_bidiag``      — in-graph ``lax.fori_loop`` with fixed-size buffers and
+                         breakdown *masking* (XLA-static shapes; usable inside
+                         jit / grad-compression / the RSGD retraction, and on
+                         pod-sharded operators).
+  * ``gk_bidiag_host`` — host-side Python loop with *real* early exit (what the
+                         paper benchmarks: iteration count == numerical rank).
+
+Index conventions (paper eq. 9): ``alphas[i] = alpha_{i+1}`` (diagonal of
+B_{k+1,k}), ``betas[i] = beta_{i+2}`` (subdiagonal), ``beta1`` is the
+normalization of the start vector (not part of B).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linop import LinOp, from_dense
+
+Array = jax.Array
+
+
+class GKResult(NamedTuple):
+    alphas: Array      # (k,)   diag of B_{k+1,k}; zero-masked beyond kprime
+    betas: Array       # (k,)   subdiag beta_{2..k+1}; zero-masked beyond kprime
+    beta1: Array       # ()     norm of the start vector
+    P: Array           # (n, k)   right Lanczos basis, zero cols beyond kprime
+    Q: Array           # (m, k+1) left Lanczos basis
+    kprime: Array      # ()  int32: number of valid columns (== rank estimate
+                       #     when breakdown fired before k iterations)
+    breakdown: Array   # ()  bool: did ||q_{k'+1}|| < eps fire?
+
+
+def _reorth(v: Array, basis: Array, passes: int) -> Array:
+    """Classical Gram-Schmidt against the (zero-padded) basis, ``passes`` times.
+
+    Zero-padded columns contribute nothing, so the fixed-size buffer needs no
+    masking here.  CGS2 ("twice is enough") restores orthogonality to machine
+    precision — the paper's lines 6/13 with the standard stabilization.
+    """
+    for _ in range(passes):
+        v = v - basis @ (basis.T @ v)
+    return v
+
+
+def start_vector(key: jax.Array, m: int, dtype=jnp.float32) -> Array:
+    """Paper Alg 1 line 1: q1 ~ N(2, 1)^{m x 1}."""
+    return (2.0 + jax.random.normal(key, (m,))).astype(dtype)
+
+
+def gk_bidiag(
+    op: LinOp | Array,
+    k: int,
+    *,
+    key: Optional[jax.Array] = None,
+    q1: Optional[Array] = None,
+    eps: float = 1e-8,
+    relative_eps: bool = True,
+    reorth_passes: int = 2,
+    dtype=None,
+) -> GKResult:
+    """In-graph GK bidiagonalization (fixed k iterations, breakdown masking)."""
+    if not isinstance(op, LinOp):
+        op = from_dense(op)
+    m, n = op.shape
+    if k > min(m, n):
+        k = min(m, n)
+    if dtype is None:
+        dtype = jnp.promote_types(op.dtype, jnp.float32)
+
+    if q1 is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        q1 = start_vector(key, m, dtype)
+    q1 = q1.astype(dtype)
+
+    beta1 = jnp.linalg.norm(q1)
+    q = q1 / beta1
+    p = op.rmv(q).astype(dtype)
+    alpha1 = jnp.linalg.norm(p)
+    p = p / jnp.where(alpha1 > 0, alpha1, 1.0)
+
+    Q = jnp.zeros((m, k + 1), dtype).at[:, 0].set(q)
+    P = jnp.zeros((n, k), dtype).at[:, 0].set(p)
+    alphas = jnp.zeros((k,), dtype).at[0].set(alpha1)
+    betas = jnp.zeros((k,), dtype)
+
+    # breakdown threshold: the paper uses an absolute eps=1e-8 (float64
+    # NumPy, where the CGS2 residual floor is ~1e-15).  In float32 the floor
+    # is ~40*eps_f32 ~ 5e-6 relative, so `relative_eps` scales by alpha1
+    # (~||A||) AND clamps eps to the dtype's reorthogonalization noise floor
+    # — in f64 this preserves the paper's 1e-8 semantics exactly.
+    eff_eps = max(eps, 40.0 * float(jnp.finfo(dtype).eps))
+    thresh = jnp.where(relative_eps, eff_eps * jnp.maximum(alpha1, 1.0), eps)
+
+    class Carry(NamedTuple):
+        Q: Array
+        P: Array
+        alphas: Array
+        betas: Array
+        q: Array
+        p: Array
+        kprime: Array
+        done: Array
+
+    def body(i, c: Carry):
+        # --- left vector: u = A p_i - alpha_i q_i  (paper line 5) ---
+        u = op.mv_fused(c.p, c.q, c.alphas[i - 1]).astype(dtype)
+        u = _reorth(u, c.Q, reorth_passes)                      # line 6
+        beta = jnp.linalg.norm(u)                               # line 7
+        hit = beta < thresh                                     # line 9
+        newly_done = jnp.logical_and(hit, jnp.logical_not(c.done))
+        done = jnp.logical_or(c.done, hit)
+        safe_beta = jnp.where(beta > 0, beta, 1.0)
+        qn = u / safe_beta                                      # line 8
+        # --- right vector: v = A^T q_{i+1} - beta_{i+1} p_i  (line 12) ---
+        v = op.rmv_fused(qn, c.p, beta).astype(dtype)
+        v = _reorth(v, c.P, reorth_passes)                      # line 13
+        alpha = jnp.linalg.norm(v)                              # line 14
+        hit_a = alpha < thresh
+        done2 = jnp.logical_or(done, hit_a)
+        safe_alpha = jnp.where(alpha > 0, alpha, 1.0)
+        pn = v / safe_alpha
+
+        keep = jnp.logical_not(done)        # was active at loop entry
+        keep2 = jnp.logical_not(done2)
+        Qn = jnp.where(keep, c.Q.at[:, i].set(qn).astype(dtype), c.Q)
+        Pn = jnp.where(keep2, c.P.at[:, i].set(pn), c.P)
+        alphas_n = jnp.where(keep2, c.alphas.at[i].set(alpha), c.alphas)
+        betas_n = jnp.where(keep, c.betas.at[i - 1].set(beta), c.betas)
+        kprime_n = jnp.where(done2, c.kprime, c.kprime + 1)
+        return Carry(Qn, Pn, alphas_n, betas_n,
+                     jnp.where(keep, qn, c.q), jnp.where(keep2, pn, c.p),
+                     kprime_n, done2)
+
+    init = Carry(Q, P, alphas, betas, q, p,
+                 jnp.asarray(1, jnp.int32), jnp.asarray(False))
+    c = jax.lax.fori_loop(1, k, body, init)
+
+    # final half-iteration (paper lines 5-8 at i=k): beta_{k+1} / q_{k+1}
+    # complete B_{k+1,k} — without them the last tridiagonal entry and the
+    # identity A P_k = Q_{k+1} B_{k+1,k} are truncated.
+    u = op.mv_fused(c.p, c.q, c.alphas[c.kprime - 1]).astype(dtype)
+    u = _reorth(u, c.Q, reorth_passes)
+    beta = jnp.linalg.norm(u)
+    valid = jnp.logical_not(c.done) & (beta >= thresh)
+    qn = u / jnp.where(beta > 0, beta, 1.0)
+    Qf = jnp.where(valid, c.Q.at[:, c.kprime].set(qn.astype(dtype)), c.Q)
+    betas_f = jnp.where(valid, c.betas.at[c.kprime - 1].set(beta), c.betas)
+    return GKResult(c.alphas, betas_f, beta1, c.P, Qf,
+                    c.kprime, c.done)
+
+
+def gk_bidiag_host(
+    op: LinOp | Array,
+    k: int,
+    *,
+    key: Optional[jax.Array] = None,
+    q1: Optional[Array] = None,
+    eps: float = 1e-8,
+    relative_eps: bool = True,
+    reorth_passes: int = 2,
+    dtype=None,
+) -> GKResult:
+    """Host-loop GK with real early exit (paper-style wall-time behaviour)."""
+    if not isinstance(op, LinOp):
+        op = from_dense(op)
+    m, n = op.shape
+    if k > min(m, n):
+        k = min(m, n)
+    if dtype is None:
+        dtype = jnp.promote_types(op.dtype, jnp.float32)
+
+    if q1 is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        q1 = start_vector(key, m, dtype)
+    q1 = q1.astype(dtype)
+
+    beta1 = jnp.linalg.norm(q1)
+    q = q1 / beta1
+    p = op.rmv(q).astype(dtype)
+    alpha1 = float(jnp.linalg.norm(p))
+    p = p / (alpha1 if alpha1 > 0 else 1.0)
+    eff_eps = max(eps, 40.0 * float(jnp.finfo(dtype).eps))
+    thresh = eff_eps * max(alpha1, 1.0) if relative_eps else eps
+
+    qs = [q]
+    ps = [p]
+    al = [alpha1]
+    be = []
+    breakdown = False
+    Qm = q[:, None]
+    Pm = p[:, None]
+
+    for _ in range(1, k):
+        u = op.mv_fused(ps[-1], qs[-1], al[-1]).astype(dtype)
+        for _ in range(reorth_passes):
+            u = u - Qm @ (Qm.T @ u)
+        beta = float(jnp.linalg.norm(u))
+        if beta < thresh:
+            breakdown = True
+            break
+        qn = u / beta
+        v = op.rmv_fused(qn, ps[-1], beta).astype(dtype)
+        for _ in range(reorth_passes):
+            v = v - Pm @ (Pm.T @ v)
+        alpha = float(jnp.linalg.norm(v))
+        if alpha < thresh:
+            be.append(beta)
+            qs.append(qn)
+            Qm = jnp.concatenate([Qm, qn[:, None]], axis=1)
+            breakdown = True
+            break
+        pn = v / alpha
+        qs.append(qn)
+        ps.append(pn)
+        al.append(alpha)
+        be.append(beta)
+        Qm = jnp.concatenate([Qm, qn[:, None]], axis=1)
+        Pm = jnp.concatenate([Pm, pn[:, None]], axis=1)
+
+    if not breakdown and len(al) == k:
+        # final half-iteration: beta_{k+1}, q_{k+1} complete B_{k+1,k}
+        u = op.mv_fused(ps[-1], qs[-1], al[-1]).astype(dtype)
+        for _ in range(reorth_passes):
+            u = u - Qm @ (Qm.T @ u)
+        beta = float(jnp.linalg.norm(u))
+        if beta >= thresh:
+            be.append(beta)
+            Qm = jnp.concatenate([Qm, (u / beta)[:, None]], axis=1)
+
+    kp = len(al)
+    alphas = jnp.zeros((k,), dtype).at[:kp].set(jnp.asarray(al, dtype))
+    betas = jnp.zeros((k,), dtype).at[:len(be)].set(jnp.asarray(be, dtype))
+    P = jnp.zeros((n, k), dtype).at[:, :Pm.shape[1]].set(Pm)
+    Q = jnp.zeros((m, k + 1), dtype).at[:, :Qm.shape[1]].set(Qm)
+    return GKResult(alphas, betas, jnp.asarray(beta1, dtype), P, Q,
+                    jnp.asarray(kp, jnp.int32), jnp.asarray(breakdown))

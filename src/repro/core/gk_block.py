@@ -1,0 +1,150 @@
+"""Block Golub-Kahan bidiagonalization (beyond-paper TPU adaptation).
+
+The paper's Alg 1 advances one Lanczos vector per pass over A: arithmetic
+intensity ~1 FLOP/byte — hopeless against a 197 TFLOP/s MXU behind
+819 GB/s of HBM.  The block variant advances ``b`` vectors per pass:
+
+    A P_j   : (m, n) @ (n, b)   — intensity ~b FLOP/byte
+    Aᵀ Q_j  : same on the way back
+
+so b = 128-256 turns the GK loop from bandwidth-bound GEMV streaming into
+MXU-shaped GEMM streaming (the Pallas matvec kernels in ``repro.kernels``
+then apply with the vector dimension widened to b).  The projected matrix
+is block-bidiagonal; its small dense SVD gives Ritz triplets exactly as in
+Alg 2.  Convergence per *iteration* is faster than vector Lanczos (each
+step captures a b-dimensional Krylov slab) at the cost of b× more flops
+per step — on TPU those flops are nearly free, which is the whole trade.
+
+Used as an alternative backend for F-SVD (``fsvd_block``) and validated
+against dense SVD + the vector path in ``tests/test_gk_block.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linop import LinOp, from_dense
+
+Array = jax.Array
+
+
+class BlockGKResult(NamedTuple):
+    Q: Array          # (m, (s+1) b) left basis
+    P: Array          # (n, s b) right basis
+    K: Array          # ((s+1) b, s b) projected block-bidiagonal Qᵀ A P
+    steps: int        # completed block steps s
+    breakdown: bool
+
+
+def _reorth(W: Array, basis: Array, passes: int) -> Array:
+    for _ in range(passes):
+        W = W - basis @ (basis.T @ W)
+    return W
+
+
+def gk_block_host(
+    op: LinOp | Array,
+    block: int,
+    steps: int,
+    *,
+    key: Optional[jax.Array] = None,
+    eps: float = 1e-6,
+    reorth_passes: int = 2,
+) -> BlockGKResult:
+    """Host-loop block bidiagonalization with full block reorthogonalization.
+
+    Recurrences (block analogue of paper eq. 7-8):
+        P_1 A_1ᵀ            = QR(Aᵀ Q_1)
+        Q_{j+1} B_{j+1}     = QR(A P_j − Q_j A_j)
+        P_{j+1} A_{j+1}ᵀ    = QR(Aᵀ Q_{j+1} − P_j B_{j+1}ᵀ)
+    K = Qᵀ A P is block-bidiagonal with diagonal blocks A_j and subdiagonal
+    blocks B_{j+1}.
+    """
+    if not isinstance(op, LinOp):
+        op = from_dense(op)
+    m, n = op.shape
+    b = min(block, m, n)
+    steps = min(steps, max(min(m, n) // b, 1))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    Q1, _ = jnp.linalg.qr(jax.random.normal(key, (m, b), jnp.float32))
+    Z = op.rmatmat(Q1).astype(jnp.float32)               # (n, b)
+    P1, A1t = jnp.linalg.qr(Z)
+    Qs, Ps = [Q1], [P1]
+    Adiag = [A1t.T]                                      # A_1 (b, b)
+    Bsub: list[Array] = []
+    Qmat, Pmat = Q1, P1
+    scale = float(jnp.linalg.norm(A1t)) + 1e-30
+    breakdown = False
+
+    for j in range(1, steps):
+        W = op.matmat(Ps[-1]).astype(jnp.float32) - Qs[-1] @ Adiag[-1]
+        W = _reorth(W, Qmat, reorth_passes)
+        Qj, Bj = jnp.linalg.qr(W)
+        if float(jnp.linalg.norm(Bj)) < eps * scale:
+            breakdown = True
+            break
+        Z = op.rmatmat(Qj).astype(jnp.float32) - Ps[-1] @ Bj.T
+        Z = _reorth(Z, Pmat, reorth_passes)
+        Pj, Ajt = jnp.linalg.qr(Z)
+        if float(jnp.linalg.norm(Ajt)) < eps * scale:
+            Qs.append(Qj)
+            Bsub.append(Bj)
+            Qmat = jnp.concatenate([Qmat, Qj], axis=1)
+            breakdown = True
+            break
+        Qs.append(Qj)
+        Ps.append(Pj)
+        Adiag.append(Ajt.T)
+        Bsub.append(Bj)
+        Qmat = jnp.concatenate([Qmat, Qj], axis=1)
+        Pmat = jnp.concatenate([Pmat, Pj], axis=1)
+
+    s = len(Ps)
+    K = jnp.zeros((Qmat.shape[1], Pmat.shape[1]), jnp.float32)
+    for j in range(s):
+        K = K.at[j * b:(j + 1) * b, j * b:(j + 1) * b].set(Adiag[j])
+    for j, Bj in enumerate(Bsub[:Qmat.shape[1] // b - 1]):
+        K = K.at[(j + 1) * b:(j + 2) * b, j * b:(j + 1) * b].set(Bj)
+    return BlockGKResult(Qmat, Pmat, K, s, breakdown)
+
+
+class FSVDBlockResult(NamedTuple):
+    U: Array
+    s: Array
+    V: Array
+    steps: int
+    breakdown: bool
+
+
+def fsvd_block(
+    A: LinOp | Array,
+    r: int,
+    *,
+    block: Optional[int] = None,
+    steps: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    reorth_passes: int = 2,
+) -> FSVDBlockResult:
+    """Top-r singular triplets via block GK (Alg 2 with a block backend).
+
+    ``block`` defaults to an MXU-friendly width ≥ r; ``steps`` to enough
+    slab captures for the top-r Ritz values to converge.
+    """
+    if not isinstance(A, LinOp):
+        A = from_dense(A)
+    m, n = A.shape
+    if block is None:
+        block = min(max(r, 32), min(m, n))
+    if steps is None:
+        steps = max(min(min(m, n) // block, max(2, 3 * r // block + 2)), 1)
+    res = gk_block_host(A, block, steps, key=key,
+                        reorth_passes=reorth_passes)
+    Uk, sk, Vkt = jnp.linalg.svd(res.K, full_matrices=False)
+    r = min(r, sk.shape[0])
+    U = res.Q @ Uk[:, :r]
+    V = res.P @ Vkt[:r].T
+    return FSVDBlockResult(U, sk[:r], V, res.steps, res.breakdown)

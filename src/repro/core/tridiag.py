@@ -1,0 +1,46 @@
+"""Assembly and eigendecomposition of T = B_{k+1,k}^T B_{k+1,k}.
+
+B is lower-bidiagonal (eq. 9), so T is symmetric tridiagonal:
+
+    T[i, i]   = alpha_{i+1}^2 + beta_{i+2}^2
+    T[i, i+1] = alpha_{i+2} * beta_{i+2}
+
+(with ``alphas[i] = alpha_{i+1}``, ``betas[i] = beta_{i+2}`` as stored by
+``gk.GKResult``).  k' <= a few hundred, so a dense eigh on the k' x k' matrix
+is negligible next to the O(mnk') Lanczos work — the paper's complexity
+argument (Section 3.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def btb_tridiagonal(alphas: Array, betas: Array) -> Array:
+    """Dense (k, k) assembly of the tridiagonal B^T B from the GK scalars."""
+    diag = alphas**2 + betas**2
+    off = alphas[1:] * betas[:-1]
+    return jnp.diag(diag) + jnp.diag(off, 1) + jnp.diag(off, -1)
+
+
+def btb_eigh(alphas: Array, betas: Array, kprime: Array | int | None = None
+             ) -> tuple[Array, Array]:
+    """Eigendecomposition of B^T B, eigenvalues DESCENDING.
+
+    Columns of the eigenvector matrix beyond ``kprime`` correspond to the
+    zero-masked part of the buffers; their eigenvalues are pushed to -inf so
+    any top-r selection skips them.
+    """
+    T = btb_tridiagonal(alphas, betas)
+    theta, G = jnp.linalg.eigh(T)              # ascending
+    theta = theta[::-1]
+    G = G[:, ::-1]
+    if kprime is not None:
+        k = alphas.shape[0]
+        valid = jnp.arange(k) < kprime
+        # eigenvalues of the zero-padded block are (numerically) ~0; mask them
+        # out explicitly so selection logic never picks a padding Ritz pair.
+        theta = jnp.where(valid, theta, -jnp.inf)
+    return theta, G

@@ -1,0 +1,16 @@
+"""Deterministic synthetic data pipelines.
+
+Two generators:
+  * LM token streams (per-arch vocab; optional VLM patch embeddings / audio
+    frame embeddings per the family's stub frontend),
+  * RSL similarity pairs (the paper's application; MNIST/USPS-like synthetic
+    domains with a planted low-rank ground-truth metric).
+
+Determinism & sharding: batches are a pure function of (seed, step), so any
+host can regenerate any step — restart-safe without data-loader checkpoints,
+and each host materializes only its shard (``host_slice``).
+"""
+from repro.data.synthetic import (LMBatchSpec, lm_batch, make_rsl_dataset,
+                                  rsl_batch)
+
+__all__ = ["LMBatchSpec", "lm_batch", "make_rsl_dataset", "rsl_batch"]

@@ -1,0 +1,115 @@
+"""Synthetic data generators (pure functions of (seed, step))."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+Array = jax.Array
+
+
+class LMBatchSpec(NamedTuple):
+    batch: int
+    seq_len: int
+    vocab: int
+    num_image_tokens: int = 0     # vlm stub
+    num_frames: int = 0           # audio stub
+    d_model: int = 0
+
+
+def spec_for(cfg: ModelConfig, shape: ShapeConfig,
+             batch_override: Optional[int] = None) -> LMBatchSpec:
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    img = audio = 0
+    if cfg.family == "vlm":
+        img = cfg.vlm.num_image_tokens
+        S = S - img                       # text tokens fill the remainder
+    if cfg.family == "audio":
+        audio = shape.seq_len
+    return LMBatchSpec(B, S, cfg.vocab_size, img, audio, cfg.d_model)
+
+
+def lm_batch(spec: LMBatchSpec, seed: int, step: int) -> dict:
+    """One deterministic LM training batch.
+
+    Tokens follow a repeating-ngram distribution (so tiny models can actually
+    learn structure in convergence tests, unlike iid-uniform tokens).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = jax.random.randint(k1, (spec.batch, 8), 0, spec.vocab)
+    reps = -(-(spec.seq_len + 1) // 8)
+    stream = jnp.tile(base, (1, reps))[:, :spec.seq_len + 1]
+    noise = jax.random.randint(k2, stream.shape, 0, spec.vocab)
+    flip = jax.random.bernoulli(k3, 0.05, stream.shape)
+    stream = jnp.where(flip, noise, stream)
+    batch = {"tokens": stream[:, :-1], "labels": stream[:, 1:]}
+    if spec.num_image_tokens:
+        batch["img_embeds"] = jax.random.normal(
+            k3, (spec.batch, spec.num_image_tokens, spec.d_model),
+            jnp.float32) * 0.02
+    if spec.num_frames:
+        batch["frames"] = jax.random.normal(
+            k3, (spec.batch, spec.num_frames, spec.d_model),
+            jnp.float32) * 0.02
+    return batch
+
+
+def host_slice(batch: dict, host_id: int, num_hosts: int) -> dict:
+    """Per-host shard of a global batch (multi-host input pipeline)."""
+    def f(x):
+        per = x.shape[0] // num_hosts
+        return x[host_id * per:(host_id + 1) * per]
+    return jax.tree.map(f, batch)
+
+
+# ---------------------------------------------------------------------------
+# RSL pairs (the paper's application, §6.3)
+# ---------------------------------------------------------------------------
+
+class RSLDataset(NamedTuple):
+    X: Array          # (N, d1) domain-1 samples (MNIST-like)
+    V: Array          # (N, d2) domain-2 samples (USPS-like)
+    y: Array          # (N,) ±1 similarity labels
+    Wu: Array         # planted metric factors: W* = Wu @ Wv (never dense)
+    Wv: Array
+
+    @property
+    def W_true(self) -> Array:
+        """Dense planted metric — small-dim diagnostics only."""
+        return self.Wu @ self.Wv
+
+    def true_spectrum(self) -> Array:
+        """Singular values of W* from its factors (no dense SVD)."""
+        Ru = jnp.linalg.qr(self.Wu)[1]
+        Rv = jnp.linalg.qr(self.Wv.T)[1]
+        return jnp.linalg.svd(Ru @ Rv.T, compute_uv=False)
+
+
+def make_rsl_dataset(key, n: int, d1: int, d2: int, rank: int,
+                     noise: float = 0.1) -> RSLDataset:
+    """Plant a rank-``rank`` metric W* = Wu Wv; label pairs by
+    sign(xᵀW*v + noise).  Mimics the paper's MNIST-vs-USPS setup (two
+    domains of different dimension, similarity decided by a low-rank
+    bilinear form).  Scores go through the factors, so the 1e8-entry
+    metric of the end-to-end driver is never materialized.
+    """
+    kx, kv, kw1, kw2, kn = jax.random.split(key, 5)
+    X = jax.random.normal(kx, (n, d1)) / (d1 ** 0.25)
+    V = jax.random.normal(kv, (n, d2)) / (d2 ** 0.25)
+    scale = (d1 * d2) ** -0.25
+    Wu = jax.random.normal(kw1, (d1, rank)) * scale
+    Wv = jax.random.normal(kw2, (rank, d2))
+    score = jnp.einsum("nr,nr->n", X @ Wu, (V @ Wv.T))
+    score = score + noise * jnp.std(score) * jax.random.normal(kn, (n,))
+    return RSLDataset(X, V, jnp.sign(score), Wu, Wv)
+
+
+def rsl_batch(ds: RSLDataset, seed: int, step: int, batch: int) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    idx = jax.random.randint(key, (batch,), 0, ds.X.shape[0])
+    return {"x": ds.X[idx], "v": ds.V[idx], "y": ds.y[idx]}

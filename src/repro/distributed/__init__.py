@@ -1,0 +1,6 @@
+"""Distribution layer: logical-axis partitioning rules, pod-sharded GK
+matvecs, distributed F-SVD, and Krylov low-rank gradient compression."""
+from repro.distributed.partition import (logical_to_spec, param_shardings,
+                                         spec_for_batch)
+
+__all__ = ["logical_to_spec", "param_shardings", "spec_for_batch"]

@@ -1,0 +1,179 @@
+"""Krylov low-rank gradient compression with error feedback.
+
+The paper's F-SVD as a *distributed-optimization* trick (PowerSGD-shaped,
+Lanczos-accurate).  In data-parallel training the gradient all-reduce moves
+``m*n`` floats per 2-D parameter; instead we run GK bidiagonalization on the
+**implicit mean-gradient operator**
+
+    mv(p)  = psum(G_local @ p,  axis) / n_workers
+    rmv(q) = psum(G_localᵀ @ q, axis) / n_workers
+
+so each Lanczos iteration communicates one m-vector + one n-vector, and k
+iterations deliver the top-r singular triplets of the *exact mean* gradient
+(not a mean of per-worker approximations — the psum is inside the matvec).
+Communication: ``k (m + n)`` vs ``m n`` floats — e.g. a 4096x14336 MLP block
+at k=12 moves 0.4% of the dense bytes.
+
+Error feedback (Seide et al. / PowerSGD): each worker accumulates what
+compression dropped, ``e ← (G_local + e) − lowrank(mean)``, restoring
+convergence to the uncompressed fixed point.
+
+Usage: inside ``shard_map`` over the DP axis (the examples use a pure-DP
+mesh; the multi-pod trainer applies it on the "pod" axis where the slow DCN
+hop lives, keeping plain psum over ICI).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FsvdConfig
+from repro.core.fsvd import fsvd as _fsvd
+from repro.core.linop import LinOp
+
+Array = jax.Array
+PyTree = Any
+
+
+class CompressionStats(NamedTuple):
+    dense_bytes: Array        # what a plain all-reduce would move
+    compressed_bytes: Array   # what the factor exchange moved
+    num_compressed: int
+    num_plain: int
+
+
+def _as_2d(g: Array) -> Optional[tuple[int, int]]:
+    if g.ndim < 2:
+        return None
+    n = 1
+    for d in g.shape[1:]:
+        n *= d
+    return g.shape[0], n
+
+
+def _layout(g: Array, cfg: FsvdConfig):
+    """How to compress a leaf: None (plain psum), ("2d", m, n), or
+    ("batched", L, m, n) for stacked scanned-layer parameters — those are
+    L independent 2-D gradients, compressed per layer under vmap (which
+    also batches the Lanczos all-reduces into (L, m)-shaped payloads)."""
+    if g.ndim < 2:
+        return None
+    if g.ndim >= 3:
+        L, m = g.shape[0], g.shape[1]
+        n = 1
+        for d in g.shape[2:]:
+            n *= d
+        if min(m, n) >= cfg.compression_min_dim:
+            return ("batched", L, m, n)
+        return None
+    m, n = _as_2d(g)
+    if min(m, n) >= cfg.compression_min_dim:
+        return ("2d", m, n)
+    return None
+
+
+def _compressible(g: Array, cfg: FsvdConfig) -> bool:
+    return _layout(g, cfg) is not None
+
+
+def mean_grad_operator(G_local: Array, axis) -> LinOp:
+    """Implicit mean-over-workers operator for a 2-D local gradient."""
+    m, n = G_local.shape
+    nw = jax.lax.psum(1, axis)
+
+    def mv(p):
+        return jax.lax.psum(G_local @ p, axis) / nw
+
+    def rmv(q):
+        return jax.lax.psum(G_local.T @ q, axis) / nw
+
+    return LinOp((m, n), mv, rmv, dtype=G_local.dtype)
+
+
+def compress_mean(G_local: Array, axis, rank: int, k: int,
+                  key: Optional[jax.Array] = None,
+                  reorth_passes: int = 2) -> tuple[Array, Array, Array]:
+    """(U, s, V) of the mean gradient via distributed GK (Alg 2)."""
+    op = mean_grad_operator(G_local.astype(jnp.float32), axis)
+    out = _fsvd(op, rank, k, key=key, reorth_passes=reorth_passes,
+                relative_eps=True)
+    return out.U, out.s, out.V
+
+
+def compressed_mean_grads(grads: PyTree, ef: PyTree, axis,
+                          cfg: FsvdConfig,
+                          key: Optional[jax.Array] = None
+                          ) -> tuple[PyTree, PyTree, CompressionStats]:
+    """Tree-wide compressed gradient mean with error feedback.
+
+    ``grads`` are per-worker local gradients (inside shard_map over ``axis``);
+    ``ef`` is the residual pytree from ``init_error_feedback``.
+    Returns (mean_grads, new_ef, stats).
+    """
+    nw = jax.lax.psum(1, axis)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    ef_leaves = jax.tree_util.tree_flatten(ef)[0]
+    out, new_ef = [], []
+    dense_b = jnp.zeros((), jnp.float32)
+    comp_b = jnp.zeros((), jnp.float32)
+    n_comp = n_plain = 0
+    # few Krylov iterations suffice for a rank-r factor-quality approximation;
+    # comm grows linearly in k so keep it tight (2r is the PowerSGD-comparable
+    # budget; the GK subspace converges much faster than power iteration).
+    k = min(max(2 * cfg.compression_rank, cfg.compression_rank + 2),
+            cfg.max_iters)
+
+    for i, (g, e) in enumerate(zip(leaves, ef_leaves)):
+        lay = _layout(g, cfg)
+        if lay is None:
+            out.append(jax.lax.psum(g, axis) / nw)
+            new_ef.append(e)
+            n_plain += 1
+            continue
+        sub = jax.random.fold_in(key, i)
+        r = cfg.compression_rank
+        if lay[0] == "2d":
+            _, m, n = lay
+            g2 = g.reshape(m, n).astype(jnp.float32)
+            if cfg.error_feedback:
+                g2 = g2 + e.reshape(m, n)
+            U, s, V = compress_mean(g2, axis, r, k, key=sub)
+            low = (U * s[None, :]) @ V.T
+            layers = 1
+        else:
+            _, layers, m, n = lay
+            g2 = g.reshape(layers, m, n).astype(jnp.float32)
+            if cfg.error_feedback:
+                g2 = g2 + e.reshape(layers, m, n)
+            U, s, V = jax.vmap(
+                lambda gg: compress_mean(gg, axis, r, k, key=sub))(g2)
+            low = jnp.einsum("lmr,lr,lnr->lmn", U, s, V)
+        if cfg.error_feedback:
+            new_ef.append((g2 - low).reshape(g.shape).astype(e.dtype))
+        else:
+            new_ef.append(e)
+        out.append(low.reshape(g.shape).astype(g.dtype))
+        n_comp += 1
+        dense_b = dense_b + 4.0 * layers * m * n
+        # per GK iteration: one m-vector + one n-vector all-reduced (batched
+        # over layers), plus the final r-column AV matmat for U
+        comp_b = comp_b + 4.0 * layers * (k * (m + n) + r * m)
+
+    stats = CompressionStats(dense_b, comp_b, n_comp, n_plain)
+    return jax.tree_util.tree_unflatten(treedef, out), \
+        jax.tree_util.tree_unflatten(treedef, new_ef), stats
+
+
+def init_error_feedback(params: PyTree, cfg: FsvdConfig) -> PyTree:
+    """Zeros for compressible leaves; scalar zeros elsewhere (cheap)."""
+    def f(p):
+        if _compressible(p, cfg):
+            return jnp.zeros(p.shape, jnp.float32)
+        return jnp.zeros((), jnp.float32)
+    return jax.tree.map(f, params)

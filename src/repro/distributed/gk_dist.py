@@ -1,0 +1,39 @@
+"""Distributed Algorithms 1-3: GK / F-SVD / rank on a pod-sharded operator.
+
+Thin composition: ``sharded_operator`` supplies matvecs-with-psum; the
+*same* ``repro.core`` code runs unmodified on top (the basis matrices P, Q
+are GSPMD-sharded over the vector axes automatically).  This is the paper's
+whole point carried to cluster scale: the algorithm only ever touches A
+through matvecs, so distribution is a property of the operator, not of the
+algorithm.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.fsvd import FSVDResult, fsvd as _fsvd
+from repro.core.gk import GKResult, gk_bidiag
+from repro.core.rank import RankResult, numerical_rank as _rank
+from repro.distributed.matvec import place_operator, sharded_operator
+
+Array = jax.Array
+
+
+def fsvd_sharded(A: Array, mesh: Mesh, r: int, k: Optional[int] = None,
+                 **kw) -> FSVDResult:
+    """Partial SVD of a pod-sharded dense matrix (Alg 2 at pod scale)."""
+    A = place_operator(A, mesh)
+    return _fsvd(sharded_operator(A, mesh), r, k, **kw)
+
+
+def gk_sharded(A: Array, mesh: Mesh, k: int, **kw) -> GKResult:
+    A = place_operator(A, mesh)
+    return gk_bidiag(sharded_operator(A, mesh), k, **kw)
+
+
+def rank_sharded(A: Array, mesh: Mesh, **kw) -> RankResult:
+    A = place_operator(A, mesh)
+    return _rank(sharded_operator(A, mesh), host_loop=False, **kw)

@@ -1,0 +1,90 @@
+"""Pod-sharded GK matvecs: the paper's "huge matrix" regime on a real mesh.
+
+The operator A (m, n) is sharded ``P(("pod","data"), "model")`` — rows over
+the pod+data axes, columns over model.  The Lanczos vectors live sharded on
+the matching axis:
+
+    q (m,)  P(("pod","data"))          p (n,)  P("model")
+
+Each GK half-iteration is then ONE local GEMV + ONE psum:
+
+    A p  : local (m_loc, n_loc) @ (n_loc,) -> psum over "model"
+    Aᵀ q : local transpose GEMV           -> psum over ("pod","data")
+
+so a 1e5 x 8e4 matrix (the paper's largest, NA for dense SVD) occupies
+~60 MB per device on a 512-chip mesh and each iteration moves only vectors.
+The fused three-term forms (− α q / − β p) are folded into the shard_map
+body so no extra HBM pass materializes the intermediate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.linop import LinOp
+
+Array = jax.Array
+
+
+def _row_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sharded_operator(A: Array, mesh: Mesh) -> LinOp:
+    """Wrap a (possibly already device-sharded) dense A as a pod-sharded
+    LinOp whose matvecs are shard_map'd local GEMVs + one psum."""
+    m, n = A.shape
+    rows = _row_axes(mesh)
+    col = "model" if "model" in mesh.axis_names else None
+    a_spec = P(rows or None, col)
+    q_spec = P(rows or None)
+    p_spec = P(col)
+
+    def _mv(a_blk, p_blk, y_blk, alpha):
+        out = a_blk.astype(jnp.float32) @ p_blk.astype(jnp.float32)
+        if col is not None:
+            out = jax.lax.psum(out, col)
+        return out - alpha * y_blk.astype(jnp.float32)
+
+    def _rmv(a_blk, q_blk, y_blk, beta):
+        out = a_blk.astype(jnp.float32).T @ q_blk.astype(jnp.float32)
+        if rows:
+            out = jax.lax.psum(out, rows)
+        return out - beta * y_blk.astype(jnp.float32)
+
+    mv_sm = jax.shard_map(
+        functools.partial(_mv),
+        mesh=mesh, in_specs=(a_spec, p_spec, q_spec, P()),
+        out_specs=q_spec, check_vma=False)
+    rmv_sm = jax.shard_map(
+        functools.partial(_rmv),
+        mesh=mesh, in_specs=(a_spec, q_spec, p_spec, P()),
+        out_specs=p_spec, check_vma=False)
+
+    zero = jnp.zeros((), jnp.float32)
+
+    def mv(p):
+        return mv_sm(A, p, jnp.zeros((m,), jnp.float32), zero)
+
+    def rmv(q):
+        return rmv_sm(A, q, jnp.zeros((n,), jnp.float32), zero)
+
+    def mv_fused(p, y, alpha):
+        return mv_sm(A, p, y, jnp.asarray(alpha, jnp.float32))
+
+    def rmv_fused(q, y, beta):
+        return rmv_sm(A, q, y, jnp.asarray(beta, jnp.float32))
+
+    return LinOp((m, n), mv, rmv, dtype=A.dtype,
+                 _mv_fused=mv_fused, _rmv_fused=rmv_fused)
+
+
+def place_operator(A: Array, mesh: Mesh) -> Array:
+    """device_put A under the pod-sharded layout."""
+    rows = _row_axes(mesh)
+    col = "model" if "model" in mesh.axis_names else None
+    return jax.device_put(A, NamedSharding(mesh, P(rows or None, col)))

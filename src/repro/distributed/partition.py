@@ -1,0 +1,101 @@
+"""Logical-axis -> mesh-axis partitioning.
+
+Model code annotates every parameter dimension with a *logical* name
+(``repro.models.layers.ParamBag``); this module maps those names onto the
+physical mesh:
+
+    vocab / heads / mlp / experts / ssm_inner  -> "model"   (TP / EP)
+    embed                                      -> "data"    (FSDP)
+    everything small / sequential              -> replicated
+
+Two guards make the same rules work on any mesh shape (elasticity):
+  * divisibility — a dim whose size does not divide the mesh axis falls back
+    to replicated (e.g. starcoder2's kv_heads=4 on a 16-way model axis);
+  * conflict — if an earlier dim already claimed a mesh axis, later dims
+    fall back (expert weights claim "model" for the expert dim; their mlp
+    dim then stays unsharded, matching the EP shard_map layout).
+
+The "pod" axis is deliberately *never* assigned to parameters: parameters
+are replicated across pods (pure DP over DCN) and sharded only within a pod
+(FSDP/TP over ICI) — the standard multi-slice layout.  Batch axes shard over
+("pod", "data").
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> preferred mesh axis (None = replicate)
+RULES: dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "embed": "data",
+    # replicated (small or sequential):
+    "head_dim": None, "kv_lora": None, "q_lora": None, "experts_dim": None,
+    "ssm_state": None, "ssm_heads": None, "conv_k": None, "img_in": None,
+    "layers": None,
+}
+
+
+def logical_to_spec(axes: tuple[str, ...], shape: tuple[int, ...],
+                    mesh: Mesh) -> P:
+    """PartitionSpec for one parameter from its logical axes + shape."""
+    taken: set[str] = set()
+    spec = []
+    sizes = dict(mesh.shape)
+    for name, dim in zip(axes, shape):
+        mesh_axis = RULES.get(name)
+        if (mesh_axis is None or mesh_axis not in sizes
+                or mesh_axis in taken or dim % sizes[mesh_axis] != 0):
+            spec.append(None)
+        else:
+            spec.append(mesh_axis)
+            taken.add(mesh_axis)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def param_shardings(logical: PyTree, params_shape: PyTree, mesh: Mesh
+                    ) -> PyTree:
+    """NamedSharding pytree matching the params pytree.
+
+    ``logical`` mirrors params with tuples of axis names; ``params_shape``
+    is the params pytree (arrays or ShapeDtypeStructs).
+    """
+    def f(axes, leaf):
+        return NamedSharding(mesh, logical_to_spec(tuple(axes), leaf.shape,
+                                                   mesh))
+    return jax.tree.map(f, logical, params_shape,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def spec_for_batch(mesh: Mesh, batch: int, ndim: int,
+                   seq_axis_shard: bool = False) -> P:
+    """Spec for a (B, S, ...) batch tensor.
+
+    Shards B over ("pod","data") when divisible; for B=1 long-context cells,
+    ``seq_axis_shard=True`` shards the sequence axis over "data" instead.
+    """
+    baxes = batch_axes(mesh)
+    sizes = dict(mesh.shape)
+    total = 1
+    for a in baxes:
+        total *= sizes[a]
+    if batch % total == 0 and batch >= total:
+        return P(baxes, *([None] * (ndim - 1)))
+    if seq_axis_shard and ndim >= 2:
+        return P(None, "data", *([None] * (ndim - 2)))
+    return P(*([None] * ndim))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+gk_matvec      — fused Lanczos half-iterations  u = A p − α q,  v = Aᵀ q − β p
+reorth         — CGS reorthogonalization passes  (Qᵀv then v − Qc)
+lowrank_update — W = U diag(s) Vᵀ materialization
+
+``ops`` holds the jit'd public wrappers (padding + interpret-mode switch);
+``ref`` holds the pure-jnp oracles every kernel is allclose-tested against.
+"""

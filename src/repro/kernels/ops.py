@@ -1,0 +1,98 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: (i) shape padding to tile multiples (zero rows/cols are exact for
+every kernel here), (ii) vector ⇄ column reshaping, (iii) the
+interpret-mode switch — ``interpret=True`` on CPU (this container), compiled
+Mosaic on real TPU.
+
+These wrappers expose the same signatures as ``repro.kernels.ref`` so the
+GK/F-SVD core can swap implementations via the ``use_kernels`` flag.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gk_matvec as _gk
+from repro.kernels import lowrank_update as _lr
+from repro.kernels import reorth as _ro
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _col(v: Array) -> Array:
+    return v.reshape(-1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matvec_fused(A: Array, p: Array, y: Array, alpha, *, bm: int = _gk.BM,
+                 bn: int = _gk.BN) -> Array:
+    """u = A @ p − alpha * y  (vectors 1-D in, 1-D f32 out)."""
+    m, n = A.shape
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Ap = _pad_to(_pad_to(A, bm, 0), bn, 1)
+    pp = _pad_to(_col(p), bn, 0)
+    yp = _pad_to(_col(y), bm, 0)
+    out = _gk.matvec_fused(Ap, pp, yp, alpha, bm=bm, bn=bn,
+                           interpret=_interpret())
+    return out[:m, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def rmatvec_fused(A: Array, q: Array, y: Array, beta, *, bm: int = _gk.BM,
+                  bn: int = _gk.BN) -> Array:
+    """v = Aᵀ @ q − beta * y."""
+    m, n = A.shape
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Ap = _pad_to(_pad_to(A, bm, 0), bn, 1)
+    qp = _pad_to(_col(q), bm, 0)
+    yp = _pad_to(_col(y), bn, 0)
+    out = _gk.rmatvec_fused(Ap, qp, yp, beta, bm=bm, bn=bn,
+                            interpret=_interpret())
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "bm"))
+def reorth(v: Array, Q: Array, passes: int = 2, *, bm: int = _ro.BM) -> Array:
+    """CGS^passes: v − Q(Qᵀv), repeated.  v: (m,), Q: (m, k) → (m,) f32."""
+    m, k = Q.shape
+    bm = min(bm, m) or 1
+    Qp = _pad_to(Q, bm, 0)
+    vp = _pad_to(_col(v), bm, 0)
+    interp = _interpret()
+    for _ in range(passes):
+        c = _ro.qtv(Qp, vp, bm=bm, interpret=interp)
+        vp = _ro.subtract_qc(vp, Qp, c, bm=bm, interpret=interp)
+    return vp[:m, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def lowrank_matmul(U: Array, s: Array, Vt: Array, *, bm: int = _lr.BM,
+                   bn: int = _lr.BN) -> Array:
+    """W = U diag(s) Vᵀ → (m, n) f32."""
+    m, r = U.shape
+    n = Vt.shape[1]
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Up = _pad_to(U, bm, 0)
+    Vtp = _pad_to(Vt, bn, 1)
+    out = _lr.lowrank_matmul(Up, s, Vtp, bm=bm, bn=bn, interpret=_interpret())
+    return out[:m, :n]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def matvec_fused(A: Array, p: Array, y: Array, alpha) -> Array:
+    """u = A @ p - alpha * y   (GK line 5 / 12, f32 accumulate)."""
+    return (A.astype(jnp.float32) @ p.astype(jnp.float32)
+            - jnp.asarray(alpha, jnp.float32) * y.astype(jnp.float32))
+
+
+def rmatvec_fused(A: Array, q: Array, y: Array, beta) -> Array:
+    """v = A^T @ q - beta * y."""
+    return (A.astype(jnp.float32).T @ q.astype(jnp.float32)
+            - jnp.asarray(beta, jnp.float32) * y.astype(jnp.float32))
+
+
+def qtv(Q: Array, v: Array) -> Array:
+    """c = Q^T v  (reorthogonalization coefficients)."""
+    return Q.astype(jnp.float32).T @ v.astype(jnp.float32)
+
+
+def subtract_qc(v: Array, Q: Array, c: Array) -> Array:
+    """w = v - Q c  (apply the CGS projection)."""
+    return v.astype(jnp.float32) - Q.astype(jnp.float32) @ c.astype(jnp.float32)
+
+
+def reorth(v: Array, Q: Array, passes: int = 2) -> Array:
+    for _ in range(passes):
+        v = subtract_qc(v, Q, qtv(Q, v))
+    return v
+
+
+def lowrank_matmul(U: Array, s: Array, Vt: Array) -> Array:
+    """W = U diag(s) V^T  (retraction materialization)."""
+    return (U.astype(jnp.float32) * s.astype(jnp.float32)[None, :]) \
+        @ Vt.astype(jnp.float32)

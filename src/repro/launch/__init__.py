@@ -1,0 +1,3 @@
+"""Launch layer: production meshes, abstract input specs, the multi-pod
+dry-run (AOT lower+compile for every arch x shape x mesh cell), and the
+train / serve CLI drivers."""

@@ -1,0 +1,283 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings=...).lower(*abstract_inputs).compile()`` on a
+512-placeholder-device mesh.  Sharding mismatches, OOM-at-compile and
+unsupported collectives all fail HERE.
+
+Per compiled cell we record (for EXPERIMENTS.md §Dry-run / §Roofline):
+  * ``memory_analysis()``  — per-device argument/output/temp/peak bytes,
+  * ``cost_analysis()``    — HLO FLOPs + bytes accessed,
+  * collective bytes by op kind, parsed from the post-SPMD HLO text,
+  * MODEL_FLOPS = 6·N·D (2·N·D fwd-only), N = active params.
+
+Usage:
+    python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# at first init.  Do NOT copy this into conftest/pyproject — tests and
+# benches must see 1 device.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_arch, get_shape  # noqa: E402
+from repro.configs.base import ModelConfig, OptimConfig, ShapeConfig  # noqa: E402
+from repro.launch import input_specs as ispec  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as model_mod  # noqa: E402
+from repro.runtime import steps as steps_mod  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _type_bytes(tstr: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(tstr):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes and instruction counts by collective kind."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        tstr, kind = m.groups()
+        out[kind]["bytes"] += _type_bytes(tstr)
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6·N·D)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total params, active-per-token params) from the abstract init."""
+    params, logical = ispec.abstract_init(cfg)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_l = jax.tree_util.tree_leaves(
+        logical, is_leaf=lambda x: isinstance(x, tuple))
+    total = active = 0
+    for p, axes in zip(flat_p, flat_l):
+        n = 1
+        for d in p.shape:
+            n *= d
+        total += n
+        if cfg.moe is not None and "experts" in axes:
+            active += n * cfg.moe.top_k // cfg.moe.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    _, n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             optim_cfg: OptimConfig = OptimConfig(),
+             cfg_overrides: dict | None = None,
+             save_hlo_to: str | None = None,
+             compressed_grads: bool = False) -> dict:
+    """Lower+compile one cell.  ``cfg_overrides`` patches the ModelConfig
+    (hillclimb variants); ``compressed_grads`` swaps in the pod-axis
+    Krylov-compressed train step (multi-pod train cells only)."""
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    ok, reason = cell_applicable(arch, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = ispec.cell_inputs(cfg, shape, optim_cfg, mesh)
+
+    if cell["kind"] == "train":
+        if compressed_grads:
+            from repro.configs.base import FsvdConfig
+            fn = steps_mod.build_compressed_train_step(
+                cfg, optim_cfg, mesh,
+                FsvdConfig(compression_rank=8, compression_min_dim=512,
+                           max_iters=16))
+        else:
+            fn = steps_mod.build_train_step(cfg, optim_cfg, mesh)
+        donate = (0,)
+    elif cell["kind"] == "prefill":
+        def fn(params, batch):
+            return model_mod.prefill_step(params, batch, cfg, mesh)
+        donate = ()
+    else:
+        def fn(params, cache, batch):
+            return model_mod.decode_step(params, cache, batch, cfg, mesh)
+        donate = (1,)
+
+    out_shardings = None
+    if cell["kind"] == "decode":
+        # pin the updated cache to its input layout: without this XLA may
+        # pick a different output sharding and reshard the whole multi-GiB
+        # cache every step
+        out_shardings = (None, cell["in_shardings"][1])
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=cell["in_shardings"],
+                         out_shardings=out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*cell["args_struct"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    if save_hlo_to:
+        import gzip
+        os.makedirs(os.path.dirname(save_hlo_to) or ".", exist_ok=True)
+        with gzip.open(save_hlo_to, "wt") as f:
+            f.write(hlo_text)
+    # trip-count-aware per-device analysis (cost_analysis counts while
+    # bodies ONCE — a ~num_layers x undercount on scanned models; see
+    # repro.launch.hlo_analysis)
+    hc = hlo_analysis.analyze(hlo_text)
+    n_total, n_active = active_param_count(cfg)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": cell["kind"], "status": "ok",
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": hc.dot_flops,
+        "bytes_per_device": hc.hbm_bytes,
+        "xla_flops_per_device": float(cost.get("flops", -1.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", -1)
+                              if hasattr(mem, "peak_memory_in_bytes") else -1),
+        },
+        "collectives": {
+            **{k: {"bytes": hc.collective_bytes[k],
+                   "count": hc.collective_counts[k]}
+               for k in hlo_analysis.COLLECTIVE_KINDS},
+            "total_bytes": hc.total_collective_bytes,
+        },
+        "params_total": n_total, "params_active": n_active,
+        "model_flops_global": model_flops(cfg, shape),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="also store gzipped post-SPMD HLO per cell")
+    ap.add_argument("--pin", action="store_true",
+                    help="tuned profile: pin_activations=True (see §Perf)")
+    args = ap.parse_args()
+    overrides = {"pin_activations": True} if args.pin else None
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                tag = f"{arch}_{shape}_{mesh_name}"
+                hlo_path = (os.path.join(args.out, "hlo", tag + ".hlo.gz")
+                            if args.save_hlo else None)
+                try:
+                    rec = run_cell(arch, shape, mp, save_hlo_to=hlo_path,
+                                   cfg_overrides=overrides)
+                except Exception as e:                    # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "failed", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "failed"
+                extra = ""
+                if st == "ok":
+                    gb = rec["memory"]["argument_bytes"] / 2**30
+                    extra = (f" args {gb:.2f} GiB/dev, "
+                             f"{rec['flops_per_device']:.3g} flops/dev, "
+                             f"coll {rec['collectives']['total_bytes']/2**20:.1f} MiB, "
+                             f"compile {rec['compile_s']:.1f}s")
+                elif st == "failed":
+                    extra = " " + rec["error"][:200]
+                print(f"[dryrun] {tag}: {st}{extra}", flush=True)
+    print(f"[dryrun] done: {n_ok} ok / {n_skip} skipped / {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

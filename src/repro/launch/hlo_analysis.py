@@ -1,0 +1,313 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count, so any scanned-layer model under-reports FLOPs/bytes by ~num_layers x
+(verified empirically; see EXPERIMENTS.md §Dry-run).  This module re-derives
+the three roofline inputs from the post-SPMD optimized HLO text itself:
+
+  * dot FLOPs       — every ``dot`` op: 2 x prod(result shape) x contracted
+                      size, weighted by the product of enclosing while-loop
+                      trip counts (parsed from each loop condition constant);
+  * collective bytes — result bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute,
+                      trip-weighted, by kind;
+  * HBM bytes       — trip-weighted sum of result-buffer bytes written by
+                      non-fused instructions (read traffic ~= write traffic
+                      for the big streams, so memory time uses 2x this;
+                      ``dynamic-update-slice`` counts only the update
+                      operand — it writes a slice, not the buffer).
+
+All numbers are PER DEVICE: the input is the SPMD-partitioned module.
+Elementwise FLOPs are ignored (dots dominate every cell here); fusion
+computations contribute their dots to FLOPs but not their internals to HBM
+bytes (a fusion is one kernel; intermediates stay in registers/VMEM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls)=\{?%?([\w.\-]+)\}?")
+_OPCODE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)(?:\(|\.)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_type_bytes(tstr: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(tstr):
+        dt, dims = m.groups()
+        total += _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list
+    is_entry: bool = False
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1), [],
+                                  is_entry=line.startswith("ENTRY"))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        if "=" not in line:
+            continue
+        name = line.split("=", 1)[0].strip().lstrip("%")
+        m = _OPCODE.search(line)
+        if not m:
+            continue
+        opcode = m.group(1)
+        # result type: text between '=' and the opcode
+        rt = line.split("=", 1)[1]
+        rt = rt[:rt.find(opcode)].strip()
+        cur.instructions.append(Instruction(name, opcode, rt, line))
+    return comps
+
+
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(ins: Instruction, comps: dict) -> int:
+    """Trip count of a while: prefer the compiler's known_trip_count
+    backend_config; fall back to the largest constant in the condition."""
+    m = _TRIP_CFG.search(ins.line)
+    if m:
+        return int(m.group(1))
+    mcnd = re.search(r"condition=\{?%?([\w.\-]+)\}?", ins.line)
+    if mcnd and mcnd.group(1) in comps:
+        best = 1
+        for cins in comps[mcnd.group(1)].instructions:
+            for mm in re.finditer(r"constant\((\d+)\)", cins.line):
+                best = max(best, int(mm.group(1)))
+        return best
+    return 1
+
+
+def _dot_flops(ins: Instruction, symtab: dict) -> float:
+    """2 x prod(result) x contracted-size for one dot line.
+
+    Operand types are not inline in optimized HLO — resolve the lhs type via
+    the per-computation symbol table."""
+    out_elems = 0
+    for m in _SHAPE_RE.finditer(ins.result_type):
+        out_elems += _shape_elems(m.group(2))
+    args = ins.line[ins.line.find("dot(") + 4:]
+    mo = re.match(r"\s*%?([\w.\-]+)", args)
+    if mo is None:
+        return 0.0
+    lhs_type = symtab.get(mo.group(1), "")
+    ml = _SHAPE_RE.search(lhs_type)
+    if ml is None:
+        return 0.0
+    lhs_dims = [int(d) for d in ml.group(2).split(",") if d]
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contracted = 1
+    if mc:
+        for d in mc.group(1).split(","):
+            if d:
+                contracted *= lhs_dims[int(d)]
+    return 2.0 * out_elems * contracted
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "while", "conditional", "call", "custom-call",
+    "get-dimension-size", "broadcast", "reshape",
+}
+
+
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+# ops whose operand reads we charge to HBM (weights/activations streamed
+# from HBM into the compute unit); elementwise ops are fusion-wrapped by XLA
+# so charging fusion operands covers them.
+_READ_OPS = {"dot", "fusion"} | set(COLLECTIVE_KINDS) \
+    | {k + "-start" for k in COLLECTIVE_KINDS}
+
+
+def _operand_read_bytes(ins: Instruction, symtab: dict,
+                        vmem_threshold: int = 0) -> int:
+    """Sum of operand-buffer bytes for ops that stream inputs from HBM
+    (operands smaller than ``vmem_threshold`` are assumed VMEM-resident).
+
+    Elementwise (``kind=kLoop``) fusions touch at most result-size elements
+    of each operand — a kLoop fusion that dynamic-slices one layer out of a
+    stacked (L, ...) buffer reads ONE slice, not the whole stack, so each
+    operand's charge is capped at the result size.  Reduction-rooted
+    (kInput) fusions and raw dots read their operands fully.
+    """
+    call = ins.line[ins.line.find("=") + 1:]
+    p0 = call.find("(")
+    if p0 < 0:
+        return 0
+    # cut at the matching close paren of the operand list
+    depth = 0
+    end = len(call)
+    for i, ch in enumerate(call[p0:], start=p0):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    cap = None
+    if ins.opcode == "fusion" and "kind=kLoop" in ins.line:
+        cap = _first_type_bytes(ins.result_type)
+    total = 0
+    for name in _OPERANDS_RE.findall(call[p0:end]):
+        b = _first_type_bytes(symtab.get(name, ""))
+        if cap is not None:
+            b = min(b, cap)
+        if b >= vmem_threshold:
+            total += b
+    return total
+
+
+def _is_dus(ins: Instruction) -> bool:
+    """dynamic-update-slice either as a raw op or as the root of a fusion
+    (XLA emits `..._dynamic-update-slice_fusion` for in-place stacking —
+    scan residual stashes, cache writes)."""
+    return (ins.opcode.startswith("dynamic-update-slice")
+            or (ins.opcode == "fusion" and "dynamic-update-slice" in ins.line
+                and "dynamic-update-slice" in ins.name))
+
+
+def _dus_update_bytes(ins: Instruction, symtab: dict) -> int:
+    """Bytes of the updated slice: the largest operand strictly smaller than
+    the result buffer (skips the aliased accumulator and the indices)."""
+    result = _first_type_bytes(ins.result_type)
+    best = 0
+    for name in _OPERANDS_RE.findall(ins.line[ins.line.find("("):]):
+        b = _first_type_bytes(symtab.get(name, ""))
+        if b < result:
+            best = max(best, b)
+    return best
+
+
+def _instr_write_bytes(ins: Instruction, symtab: dict) -> int:
+    if ins.opcode in _SKIP_BYTES_OPS:
+        return 0
+    if _is_dus(ins):
+        return _dus_update_bytes(ins, symtab)
+    return _first_type_bytes(ins.result_type)
+
+
+@dataclasses.dataclass
+class HLOCost:
+    dot_flops: float
+    hbm_bytes: float
+    collective_bytes: dict          # kind -> bytes
+    collective_counts: dict         # kind -> static instruction count
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# Buffers smaller than this are assumed VMEM-resident on the TPU target
+# (v5e has ~100 MiB VMEM/core; 16 MiB leaves room for double buffering and
+# concurrent live tiles) and charged zero HBM traffic.  This is what makes
+# flash-style tiled attention measurable: its per-tile intermediates fit
+# VMEM while naive attention's (B, H, S, S) logits buffer cannot.
+VMEM_THRESHOLD = 16 * 2**20
+
+
+def analyze(hlo: str, vmem_threshold: int = VMEM_THRESHOLD) -> HLOCost:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:                      # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.instructions))
+
+    flops = 0.0
+    hbm = 0.0
+    coll_b = {k: 0.0 for k in COLLECTIVE_KINDS}
+    coll_n = {k: 0 for k in COLLECTIVE_KINDS}
+
+    # (computation, weight, fused?) work-list; visited per (name, context)
+    # may legitimately repeat (a body called from two sites) — accumulate.
+    symtabs = {name: {i.name: i.result_type for i in c.instructions}
+               for name, c in comps.items()}
+
+    stack = [(entry, 1.0, False)]
+    seen_guard = 0
+    while stack:
+        comp, weight, fused = stack.pop()
+        symtab = symtabs[comp.name]
+        seen_guard += 1
+        if seen_guard > 100000:
+            break
+        for ins in comp.instructions:
+            op = ins.opcode
+            if op == "dot":
+                flops += weight * _dot_flops(ins, symtab)
+            kind = None
+            for k in COLLECTIVE_KINDS:
+                if op == k or op == k + "-start":
+                    kind = k
+                    break
+            if kind is not None:
+                coll_b[kind] += weight * _first_type_bytes(ins.result_type)
+                coll_n[kind] += 1
+            if not fused:
+                wb = _instr_write_bytes(ins, symtab)
+                if wb >= vmem_threshold:
+                    hbm += weight * wb
+                if op in _READ_OPS and not _is_dus(ins):
+                    hbm += weight * _operand_read_bytes(ins, symtab,
+                                                        vmem_threshold)
+            # recurse into called computations
+            if op == "while":
+                mb = re.search(r"body=\{?%?([\w.\-]+)\}?", ins.line)
+                trip = _trip_count(ins, comps)
+                if mb and mb.group(1) in comps:
+                    stack.append((comps[mb.group(1)], weight * trip, fused))
+            elif op == "fusion":
+                mf = re.search(r"calls=\{?%?([\w.\-]+)\}?", ins.line)
+                if mf and mf.group(1) in comps:
+                    stack.append((comps[mf.group(1)], weight, True))
+            elif op in ("call", "conditional", "map", "reduce",
+                        "reduce-window", "sort", "scatter", "select-and-scatter"):
+                for name in _CALLED.findall(ins.line):
+                    if name in comps and op in ("call", "conditional"):
+                        stack.append((comps[name], weight, fused))
+
+    return HLOCost(flops, hbm, coll_b, coll_n)

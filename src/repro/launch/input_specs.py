@@ -1,0 +1,230 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStructs + NamedShardings
+for every (arch x shape x mesh) cell — weak-type-correct, shardable, zero
+device allocation.
+
+Sharding layout (see DESIGN.md §5):
+  * batch dims shard over ("pod", "data") when divisible;
+  * the ``long_500k`` B=1 cells shard the *sequence* axis of KV caches over
+    "data" instead (and SSM head axes over "model");
+  * KV/latent caches shard kv-heads (or SSD heads) over "model" when
+    divisible;
+  * parameters + optimizer moments follow ``distributed.partition`` rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimConfig, ShapeConfig
+from repro.distributed.partition import (batch_axes, logical_to_spec,
+                                         param_shardings, spec_for_batch)
+from repro.models import model as model_mod
+from repro.optim import make_optimizer
+from repro.runtime.steps import TrainState
+
+PyTree = Any
+
+
+def abstract_init(cfg: ModelConfig) -> tuple[PyTree, PyTree]:
+    """(params ShapeDtypeStructs, logical axes) with zero allocation.
+
+    ``init_model`` returns (params, logical); the logical tree is plain
+    Python (tuples of strings), which ``eval_shape`` cannot return — capture
+    it by side effect during the abstract trace instead.
+    """
+    captured = {}
+
+    def f(key):
+        params, logical = model_mod.init_model(cfg, key)
+        captured["logical"] = logical
+        return params
+
+    struct = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return struct, captured["logical"]
+
+
+def _mesh_sizes(mesh: Mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _batch_total(mesh: Mesh) -> int:
+    sizes = _mesh_sizes(mesh)
+    total = 1
+    for a in batch_axes(mesh):
+        total *= sizes[a]
+    return total
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    sizes = _mesh_sizes(mesh)
+    return axis in sizes and n % sizes[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    s_text = S
+    if cfg.family == "vlm":
+        s_text = S - cfg.vlm.num_image_tokens
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vlm.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16)
+    batch["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+    batch["labels"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+    return batch
+
+
+def decode_batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_shardings(batch: dict, mesh: Mesh) -> dict:
+    out = {}
+    for k, v in batch.items():
+        spec = spec_for_batch(mesh, v.shape[0], len(v.shape))
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+_SEQ_LEAF_AXES = {
+    # leaf-name -> (batch_axis, seq_axis, head_axis) measured from the END of
+    # the *unstacked* shape; stacked caches add a leading layer dim that the
+    # negative indexing skips automatically.
+    "k": (-4, -3, -2), "v": (-4, -3, -2),               # gqa kv
+    "cross_k": (-4, -3, -2), "cross_v": (-4, -3, -2),   # whisper cross
+    "ckv": (-3, -2, None), "krope": (-3, -2, None),     # mla latents
+}
+_SSM_LEAF_AXES = {
+    "h": (-4, -3), "conv": (-3, None),                  # (batch, head) axes
+}
+
+
+def _cache_leaf_spec(name: str, shape: tuple, mesh: Mesh, B: int) -> P:
+    nd = len(shape)
+    spec: list = [None] * nd
+    b_shardable = B % _batch_total(mesh) == 0 and B >= _batch_total(mesh)
+    if name in _SEQ_LEAF_AXES:
+        b_ax, s_ax, h_ax = _SEQ_LEAF_AXES[name]
+        if b_shardable:
+            spec[nd + b_ax] = batch_axes(mesh)
+        elif _div(shape[nd + s_ax], mesh, "data"):
+            spec[nd + s_ax] = "data"
+        if h_ax is not None and _div(shape[nd + h_ax], mesh, "model"):
+            spec[nd + h_ax] = "model"
+        elif _div(shape[nd + s_ax], mesh, "model"):
+            # kv heads (or MLA latents) cannot shard over "model" — shard
+            # the cache SEQUENCE axis there instead, or a 32k cache for a
+            # 16-replicated-kv arch is ~90 GiB/device (> v5e HBM).  GSPMD
+            # turns the attention over the seq-sharded cache into a
+            # partial-softmax + small combine.
+            cur = spec[nd + s_ax]
+            spec[nd + s_ax] = (cur, "model") if cur else "model"
+    elif name in _SSM_LEAF_AXES:
+        b_ax, h_ax = _SSM_LEAF_AXES[name]
+        if b_shardable:
+            spec[nd + b_ax] = batch_axes(mesh)
+        if h_ax is not None and _div(shape[nd + h_ax], mesh, "model"):
+            spec[nd + h_ax] = "model"
+    return P(*spec)
+
+
+def cache_struct_and_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                               mesh: Mesh) -> tuple[PyTree, PyTree]:
+    B, S = shape.global_batch, shape.seq_len
+    struct = jax.eval_shape(
+        functools.partial(model_mod.init_cache, cfg, B, S))
+
+    def to_shard(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        return NamedSharding(mesh, _cache_leaf_spec(name, leaf.shape, mesh, B))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(struct)
+    shardings = jax.tree_util.tree_unflatten(
+        treedef, [to_shard(p, l) for p, l in flat])
+    return struct, shardings
+
+
+# ---------------------------------------------------------------------------
+# state specs
+# ---------------------------------------------------------------------------
+
+def state_struct_and_shardings(cfg: ModelConfig, optim_cfg: OptimConfig,
+                               mesh: Mesh) -> tuple[PyTree, PyTree]:
+    params_struct, logical = abstract_init(cfg)
+    p_shard = param_shardings(logical, params_struct, mesh)
+    opt_init, _ = make_optimizer(optim_cfg)
+    opt_struct = jax.eval_shape(opt_init, params_struct)
+    rep = NamedSharding(mesh, P())
+
+    def like_params(tree):
+        # moments mirror params shape-for-shape -> reuse param shardings
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree),
+            jax.tree_util.tree_leaves(p_shard))
+
+    opt_shard = type(opt_struct)(
+        step=rep,
+        mu=like_params(opt_struct.mu),
+        nu=like_params(opt_struct.nu) if opt_struct.nu is not None else None)
+    state_struct = TrainState(params_struct, opt_struct)
+    state_shard = TrainState(p_shard, opt_shard)
+    return state_struct, state_shard
+
+
+def params_struct_and_shardings(cfg: ModelConfig, mesh: Mesh
+                                ) -> tuple[PyTree, PyTree]:
+    params_struct, logical = abstract_init(cfg)
+    return params_struct, param_shardings(logical, params_struct, mesh)
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly
+# ---------------------------------------------------------------------------
+
+def cell_inputs(cfg: ModelConfig, shape: ShapeConfig, optim_cfg: OptimConfig,
+                mesh: Mesh) -> dict:
+    """Everything the dry-run needs to lower one (arch x shape) cell."""
+    if shape.kind == "train":
+        state_struct, state_shard = state_struct_and_shardings(
+            cfg, optim_cfg, mesh)
+        batch = train_batch_struct(cfg, shape)
+        return {"kind": "train",
+                "args_struct": (state_struct, batch),
+                "in_shardings": (state_shard, batch_shardings(batch, mesh))}
+    if shape.kind == "prefill":
+        p_struct, p_shard = params_struct_and_shardings(cfg, mesh)
+        batch = train_batch_struct(cfg, shape)
+        batch.pop("labels")
+        return {"kind": "prefill",
+                "args_struct": (p_struct, batch),
+                "in_shardings": (p_shard, batch_shardings(batch, mesh))}
+    if shape.kind == "decode":
+        p_struct, p_shard = params_struct_and_shardings(cfg, mesh)
+        cache_struct, cache_shard = cache_struct_and_shardings(
+            cfg, shape, mesh)
+        batch = decode_batch_struct(cfg, shape)
+        return {"kind": "decode",
+                "args_struct": (p_struct, cache_struct, batch),
+                "in_shardings": (p_shard, cache_shard,
+                                 batch_shardings(batch, mesh))}
+    raise ValueError(shape.kind)

@@ -1,0 +1,80 @@
+"""Serving CLI driver: batched prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch
+from repro.models import model as model_mod
+
+
+def generate(params, cfg, prompts: jax.Array, gen: int,
+             frames=None) -> jax.Array:
+    """Greedy generation. prompts: (B, S) -> (B, S+gen)."""
+    B, S = prompts.shape
+    max_seq = S + gen
+    batch = {"tokens": prompts}
+    if frames is not None:
+        batch["frames"] = frames
+    logits, cache = model_mod.prefill_step(params, batch, cfg)
+    cache = model_mod.pad_cache_to(cache, cfg, max_seq)
+
+    decode = jax.jit(
+        lambda params, cache, batch: model_mod.decode_step(
+            params, cache, batch, cfg),
+        donate_argnums=(1,))
+
+    tokens = prompts
+    next_tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for i in range(gen):
+        tokens = jnp.concatenate([tokens, next_tok], axis=1)
+        if i == gen - 1:
+            break
+        pos = jnp.full((B, 1), S + i, jnp.int32)
+        logits, cache = decode(params, cache,
+                               {"tokens": next_tok, "positions": pos})
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return tokens
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = model_mod.init_model(cfg, key)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    frames = None
+    if cfg.family == "audio":
+        frames = jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model)) * 0.02
+
+    t0 = time.perf_counter()
+    out = generate(params, cfg, prompts, args.gen, frames)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.gen
+    print(f"[serve] {args.arch}: generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. prefill+compile)")
+    print(out[:, args.prompt_len:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: layers, attention (GQA/MLA/cross), MoE, SSD, and the per-family
+assembly in ``repro.models.model``."""
+from repro.models.model import (decode_step, init_cache, init_model, loss_fn,
+                                prefill_step)
+
+__all__ = ["decode_step", "init_cache", "init_model", "loss_fn",
+           "prefill_step"]

@@ -1,0 +1,387 @@
+"""Attention blocks: GQA (full / sliding-window local, logit softcap), MLA
+(DeepSeek-V2 multi-head latent attention with absorbed decode), and
+encoder-decoder cross attention.
+
+Shapes: activations are ``(B, S, D)``; per-head tensors ``(B, S, H, hd)``.
+Decode path updates KV caches with a one-hot blend (never a dynamic scatter)
+so sequence-sharded caches lower cleanly under GSPMD.
+
+Layer-pattern handling: the sliding window is passed as a *scalar* ``window``
+(huge sentinel = global attention) so alternating local/global stacks (gemma2)
+can be expressed as a scanned per-layer int array — one homogeneous scan body,
+no per-layer Python branching.
+
+Memory: ``impl="chunked"`` computes attention in query chunks via ``lax.scan``
+so the (Sq, Sk) logits matrix is never materialized at once — required for
+the 32k prefill cells (a full 32k x 32k f32 logits tensor is 4 GiB *per head
+per sequence*).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBag, apply_rope
+
+Array = jax.Array
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+GLOBAL_WINDOW = jnp.iinfo(jnp.int32).max // 2   # sentinel: "no window"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_gqa(bag: ParamBag, cfg: ModelConfig, dtype, name: str = "attn"):
+    sub = bag.sub(name)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    sub.dense("wq", (d, h, hd), ("embed", "heads", "head_dim"), dtype)
+    sub.dense("wk", (d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype)
+    sub.dense("wv", (d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype)
+    sub.dense("wo", (h, hd, d), ("heads", "head_dim", "embed"), dtype)
+    if cfg.qkv_bias:
+        sub.zeros("bq", (h, hd), ("heads", "head_dim"), dtype)
+        sub.zeros("bk", (kv, hd), ("kv_heads", "head_dim"), dtype)
+        sub.zeros("bv", (kv, hd), ("kv_heads", "head_dim"), dtype)
+
+
+def init_mla(bag: ParamBag, cfg: ModelConfig, dtype, name: str = "attn"):
+    mla = cfg.mla
+    sub = bag.sub(name)
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    sub.dense("w_dq", (d, mla.q_lora_rank), ("embed", "q_lora"), dtype)
+    sub.ones("q_norm", (mla.q_lora_rank,), ("q_lora",), dtype)
+    sub.dense("w_uq", (mla.q_lora_rank, h, dn + dr),
+              ("q_lora", "heads", "head_dim"), dtype)
+    sub.dense("w_dkv", (d, mla.kv_lora_rank + dr), ("embed", "kv_lora"), dtype)
+    sub.ones("kv_norm", (mla.kv_lora_rank,), ("kv_lora",), dtype)
+    sub.dense("w_uk", (mla.kv_lora_rank, h, dn),
+              ("kv_lora", "heads", "head_dim"), dtype)
+    sub.dense("w_uv", (mla.kv_lora_rank, h, dv),
+              ("kv_lora", "heads", "head_dim"), dtype)
+    sub.dense("wo", (h, dv, d), ("heads", "head_dim", "embed"), dtype)
+
+
+def init_cross_attn(bag: ParamBag, cfg: ModelConfig, dtype, name: str = "xattn"):
+    sub = bag.sub(name)
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    sub.dense("wq", (d, h, hd), ("embed", "heads", "head_dim"), dtype)
+    sub.dense("wk", (d, h, hd), ("embed", "heads", "head_dim"), dtype)
+    sub.dense("wv", (d, h, hd), ("embed", "heads", "head_dim"), dtype)
+    sub.dense("wo", (h, hd, d), ("heads", "head_dim", "embed"), dtype)
+
+
+# ---------------------------------------------------------------------------
+# core attend
+# ---------------------------------------------------------------------------
+
+def _attend_full(q: Array, k: Array, v: Array, mask: Optional[Array],
+                 scale: float, cap: Optional[float]) -> Array:
+    """q: (B,Sq,H,hd)  k/v: (B,Sk,H,hd|hv)  mask: (B,Sq,Sk) bool or None."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhv->bqhv", probs, v)
+
+
+def _causal_window_mask(qpos: Array, kpos: Array, window) -> Array:
+    """(B,Sq,Sk) bool. ``window`` may be a traced int scalar (scan-friendly)."""
+    ok = kpos[:, None, :] <= qpos[:, :, None]
+    ok &= (qpos[:, :, None] - kpos[:, None, :]) < window
+    return ok
+
+
+def _attend_online(q: Array, k: Array, v: Array, qpos: Array, kpos: Array,
+                   window, scale: float, cap: Optional[float],
+                   q_chunk: int, kv_chunk: int, causal: bool) -> Array:
+    """Flash-style online-softmax attention at the HLO level.
+
+    Double scan: query chunks outer, KV chunks inner with running
+    (max, denominator, accumulator) statistics — the (Sq, Sk) score matrix
+    never exists; every intermediate is a (B, Cq, H, Ck) tile sized to fit
+    VMEM on the TPU target.  Numerically identical to full softmax (exact
+    online rescaling, not an approximation).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    hv = v.shape[-1]
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, Sk, q_chunk,
+                                                      kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    qpc = jnp.moveaxis(qpos.reshape(B, nq, q_chunk), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, H, hv), 1, 0)
+    kpc = jnp.moveaxis(kpos.reshape(B, nk, kv_chunk), 1, 0)
+
+    def q_step(_, xs):
+        qi, qpi = xs                                     # (B,Cq,H,hd),(B,Cq)
+
+        # checkpointed: the VJP of the kv scan then RECOMPUTES the (Cq, Ck)
+        # probability tile from (q, k) per step instead of stashing all
+        # nq*nk tiles (= the full S^2 matrix) as residuals — this is the
+        # flash-attention backward expressed at the HLO level.
+        @jax.checkpoint
+        def kv_step(carry, kxs):
+            m, l, acc = carry
+            kj, vj, kpj = kxs
+            s = jnp.einsum("bqhd,bkhd->bqhk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if cap is not None:
+                s = cap * jnp.tanh(s / cap)
+            if causal:
+                ok = _causal_window_mask(qpi, kpj, window)    # (B,Cq,Ck)
+                s = jnp.where(ok[:, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))                 # (B,Cq,H)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] \
+                + jnp.einsum("bqhk,bkhv->bqhv", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, q_chunk, H), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, H), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, H, hv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qpc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hv)
+
+
+def attend(q: Array, k: Array, v: Array, qpos: Array, kpos: Array, *,
+           window, scale: float, cap: Optional[float],
+           impl: str = "full", q_chunk: int = 1024,
+           causal: bool = True) -> Array:
+    """Masked attention with selectable implementation.
+
+    ``full``    — materialize the (Sq, Sk) score matrix (baseline);
+    ``chunked`` — query-chunked full softmax (peak-memory relief);
+    ``online``  — flash-style online softmax (no S^2 buffer at all);
+    ``auto``    — chunked when Sq > 8192 else full.
+    ``window``: int scalar (or traced scalar); GLOBAL_WINDOW for global.
+    ``causal=False`` (encoder self-attention) attends everywhere.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if (Sq > 8192 and Sq % q_chunk == 0) else "full"
+    if impl == "online":
+        qc = min(q_chunk, Sq)
+        kvc = min(q_chunk, Sk)
+        if Sq % qc == 0 and Sk % kvc == 0 and Sq > 1:
+            return _attend_online(q, k, v, qpos, kpos, window, scale, cap,
+                                  qc, kvc, causal)
+        impl = "full"
+    if impl != "chunked" or Sq <= q_chunk:
+        mask = _causal_window_mask(qpos, kpos, window) if causal else None
+        return _attend_full(q, k, v, mask, scale, cap)
+
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    nc = Sq // q_chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, q_chunk, H, hd), 1, 0)
+    pc = jnp.moveaxis(qpos.reshape(B, nc, q_chunk), 1, 0)
+
+    def one(_, xs):
+        qi, qpi = xs
+        mask = _causal_window_mask(qpi, kpos, window) if causal else None
+        return None, _attend_full(qi, k, v, mask, scale, cap)
+
+    _, outs = jax.lax.scan(one, None, (qc, pc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, -1)
+
+
+def _repeat_kv(x: Array, h: int) -> Array:
+    kv = x.shape[2]
+    if kv == h:
+        return x
+    return jnp.repeat(x, h // kv, axis=2)
+
+
+def _blend(cache: Array, new: Array, pos: Array,
+           impl: str = "blend") -> Array:
+    """Write ``new: (B,1,...)`` into ``cache: (B,S,...)`` at positions ``pos:
+    (B,)``.
+
+    ``blend`` — one-hot convex blend: reads AND rewrites the whole cache
+    every step (scatter-free, safe under sequence sharding — the long_500k
+    layout).  ``dus`` — per-row dynamic_update_slice: writes one token slot
+    (the decode-bandwidth fix; requires the sequence axis unsharded, i.e.
+    the batch-sharded decode_32k layout).
+    """
+    if impl == "dus":
+        def upd(c, n, p):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), p, axis=0)
+        return jax.vmap(upd)(cache, new, pos)
+    S = cache.shape[1]
+    oh = jax.nn.one_hot(pos, S, dtype=cache.dtype)        # (B, S)
+    oh = oh.reshape(oh.shape + (1,) * (cache.ndim - 2))
+    return cache * (1 - oh) + oh * new.astype(cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward
+# ---------------------------------------------------------------------------
+
+def gqa_attention(p: dict, x: Array, positions: Array, cfg: ModelConfig,
+                  window=GLOBAL_WINDOW, cache: Optional[dict] = None,
+                  collect_kv: bool = False, causal: bool = True,
+                  ) -> tuple[Array, Optional[dict]]:
+    """GQA self-attention.
+
+    Train: ``x: (B,S,D)``, ``positions: (B,S)``, ``cache=None``.
+    Prefill: additionally ``collect_kv=True`` -> returns {"k","v"} as the
+    decode cache (kv-head layout, pre-repeat).
+    Decode: ``x: (B,1,D)``, ``positions: (B,1)`` = current index,
+    ``cache = {"k": (B,Smax,Kv,hd), "v": ...}``; returns updated cache.
+    ``window`` is a (possibly traced) int scalar; GLOBAL_WINDOW = global attn.
+    """
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary_factor)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor)
+
+    if cache is None:
+        ctx = attend(q, _repeat_kv(k, h), _repeat_kv(v, h), positions,
+                     positions, window=window, scale=scale,
+                     cap=cfg.attn_logit_softcap, impl=cfg.attn_impl,
+                     q_chunk=cfg.q_chunk, causal=causal)
+        new_cache = {"k": k, "v": v} if collect_kv else None
+    else:
+        pos = positions[:, 0]                              # (B,)
+        ck = _blend(cache["k"], k, pos, cfg.cache_update)
+        cv = _blend(cache["v"], v, pos, cfg.cache_update)
+        S = ck.shape[1]
+        kpos = jnp.broadcast_to(jnp.arange(S, dtype=positions.dtype)[None, :],
+                                (x.shape[0], S))
+        ctx = attend(q, _repeat_kv(ck, h), _repeat_kv(cv, h), positions, kpos,
+                     window=window, scale=scale, cap=cfg.attn_logit_softcap,
+                     impl="full")
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _rmsn(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_attention(p: dict, x: Array, positions: Array, cfg: ModelConfig,
+                  window=GLOBAL_WINDOW, cache: Optional[dict] = None,
+                  collect_kv: bool = False, causal: bool = True,
+                  ) -> tuple[Array, Optional[dict]]:
+    """Multi-head latent attention.
+
+    Cache stores only the latents: ``{"ckv": (B,Smax,kv_lora), "krope":
+    (B,Smax,dr)}`` — the MLA memory win.  Decode uses the *absorbed* form
+    (q folded through W_uk, context combined in latent space) so per-head
+    K/V are never materialized over the cache length.
+    """
+    mla = cfg.mla
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    cq = _rmsn(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    qfull = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = qfull[..., :dn], qfull[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    ckv, krope = ckv_full[..., :mla.kv_lora_rank], ckv_full[..., mla.kv_lora_rank:]
+    ckv = _rmsn(ckv, p["kv_norm"])
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        # full sequence: materialize per-head K/V (train / prefill)
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      k_nope.shape[:3] + (dr,))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        ctx = attend(q, k, v, positions, positions, window=window,
+                     scale=scale, cap=cfg.attn_logit_softcap,
+                     impl=cfg.attn_impl, q_chunk=cfg.q_chunk)
+        out = jnp.einsum("bshv,hvd->bsd", ctx, p["wo"])
+        new_cache = {"ckv": ckv, "krope": krope} if collect_kv else None
+        return out, new_cache
+
+    # --- absorbed decode ---
+    pos = positions[:, 0]
+    c_ckv = _blend(cache["ckv"], ckv, pos, cfg.cache_update)   # (B,S,r)
+    c_kr = _blend(cache["krope"], krope, pos, cfg.cache_update)  # (B,S,dr)
+    S = c_ckv.shape[1]
+    # fold q through W_uk: (B,1,H,dn) x (r,H,dn) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, c_ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, c_kr,
+                           preferred_element_type=jnp.float32)) * scale
+    kpos = jnp.arange(S, dtype=positions.dtype)[None, :]
+    mask = kpos[:, None, :] <= pos[:, None, None]
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(c_ckv.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_ckv)     # (B,1,H,r)
+    ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, p["w_uv"])   # (B,1,H,dv)
+    out = jnp.einsum("bshv,hvd->bsd", ctx, p["wo"])
+    return out, {"ckv": c_ckv, "krope": c_kr}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p: dict, x: Array, enc_kv: tuple[Array, Array],
+                    cfg: ModelConfig) -> Array:
+    """x: (B,S,D); enc_kv: precomputed (K, V) each (B,T,H,hd)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    B, Sq = x.shape[:2]
+    T = enc_kv[0].shape[1]
+    qpos = jnp.zeros((B, Sq), jnp.int32)
+    kpos = jnp.zeros((B, T), jnp.int32)
+    ctx = attend(q, enc_kv[0], enc_kv[1], qpos, kpos, window=GLOBAL_WINDOW,
+                 scale=hd ** -0.5, cap=None, causal=False,
+                 impl=cfg.attn_impl, q_chunk=cfg.q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+
+def encode_cross_kv(p: dict, enc_out: Array) -> tuple[Array, Array]:
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    return k, v
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, max_seq, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_seq, kv, hd), dtype)}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    mla = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_seq, mla.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, mla.qk_rope_head_dim), dtype)}

@@ -1,0 +1,186 @@
+"""Shared layer primitives: norms, initializers, RoPE, activations, softcap.
+
+Everything is a pure function over explicit parameter pytrees; parameter
+initialization returns ``(params, logical_axes)`` twins so the distribution
+layer (``repro.distributed.partition``) can map logical axis names to mesh
+axes without the model code knowing about meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameter spec plumbing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParamBag:
+    """Collects (param, logical-axes) pairs during init.
+
+    ``logical`` mirrors the params pytree with tuples of logical axis names
+    (strings) per array dimension, e.g. ``("embed", "heads", "head_dim")``.
+    """
+
+    key: jax.Array
+    params: dict = dataclasses.field(default_factory=dict)
+    logical: dict = dataclasses.field(default_factory=dict)
+
+    def next_key(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, name: str, shape: Sequence[int], axes: Sequence[str],
+              dtype, scale: Optional[float] = None, mode: str = "normal"):
+        """He/LeCun-style init: normal with std = scale or 1/sqrt(fan_in)."""
+        shape = tuple(shape)
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+            scale = fan_in ** -0.5
+        if mode == "zeros":
+            w = jnp.zeros(shape, dtype)
+        else:
+            w = (scale * jax.random.normal(self.next_key(), shape)).astype(dtype)
+        self.params[name] = w
+        self.logical[name] = tuple(axes)
+        return w
+
+    def ones(self, name: str, shape: Sequence[int], axes: Sequence[str], dtype):
+        self.params[name] = jnp.ones(tuple(shape), dtype)
+        self.logical[name] = tuple(axes)
+
+    def zeros(self, name: str, shape: Sequence[int], axes: Sequence[str], dtype):
+        self.params[name] = jnp.zeros(tuple(shape), dtype)
+        self.logical[name] = tuple(axes)
+
+    def sub(self, name: str) -> "ParamBag":
+        child = ParamBag(self.next_key())
+        self.params[name] = child.params
+        self.logical[name] = child.logical
+        return child
+
+    def done(self) -> tuple[dict, dict]:
+        return self.params, self.logical
+
+
+def stack_bags(bags: list[tuple[dict, dict]], axis_name: str = "layers"
+               ) -> tuple[dict, dict]:
+    """Stack per-layer (params, logical) pairs along a new leading axis."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *[b[0] for b in bags])
+    logical = jax.tree.map(lambda ax: (axis_name,) + tuple(ax),
+                           bags[0][1], is_leaf=lambda x: isinstance(x, tuple))
+    return params, logical
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(bag: ParamBag, name: str, dim: int, kind: str, dtype):
+    sub = bag.sub(name)
+    sub.ones("scale", (dim,), ("embed",), dtype)
+    if kind == "layernorm":
+        sub.zeros("bias", (dim,), ("embed",), dtype)
+
+
+def apply_norm(p: dict, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        # gemma convention: scale as (1 + w); generic rmsnorm uses w directly.
+        return (y * p["scale"].astype(jnp.float32)).astype(dt)
+    elif kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(dt)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rotary_dim: Optional[int] = None
+               ) -> Array:
+    rd = rotary_dim or head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               rotary_frac: float = 1.0) -> Array:
+    """Apply RoPE to ``x: (..., S, H, D)`` with ``positions: (..., S)``.
+
+    ``rotary_frac < 1`` rotates only the first ``frac * D`` dims (StableLM's
+    partial-rotary convention); the remainder passes through untouched.
+    """
+    d = x.shape[-1]
+    rd = int(d * rotary_frac)
+    rd -= rd % 2
+    if rd == 0:
+        return x
+    xr, xp = x[..., :rd], x[..., rd:]
+    inv = rope_freqs(d, theta, rd)                           # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., S, rd/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, rd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < d else out
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def activate(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind in ("gelu_mlp", "gelu_exact"):
+        return jax.nn.gelu(x, approximate=False)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def causal_mask(q_pos: Array, k_pos: Array,
+                window: Optional[int] = None) -> Array:
+    """Boolean (..., Sq, Sk) mask: True = attend. Local window if given."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return ok
+
+
+def cross_entropy(logits: Array, labels: Array,
+                  ignore_id: int = -1) -> tuple[Array, Array]:
+    """Mean token cross-entropy in f32. Returns (loss, n_valid)."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore_id
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    n = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / n, valid.sum()

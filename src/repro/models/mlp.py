@@ -1,0 +1,31 @@
+"""Feed-forward blocks: gated (SwiGLU / GeGLU) and plain 2-layer MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBag, activate
+
+Array = jax.Array
+
+
+def init_mlp(bag: ParamBag, d_model: int, d_ff: int, act: str, dtype,
+             name: str = "mlp"):
+    sub = bag.sub(name)
+    gated = act in ("silu", "gelu")
+    if gated:
+        sub.dense("w_gate", (d_model, d_ff), ("embed", "mlp"), dtype)
+        sub.dense("w_up", (d_model, d_ff), ("embed", "mlp"), dtype)
+    else:
+        sub.dense("w_up", (d_model, d_ff), ("embed", "mlp"), dtype)
+    sub.dense("w_down", (d_ff, d_model), ("mlp", "embed"), dtype)
+
+
+def mlp(p: dict, x: Array, act: str) -> Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = activate(gate, act) * up
+    else:
+        h = activate(up, act)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,210 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul form.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060):
+within-chunk quadratic ("attention-like") term + inter-chunk state recurrence
+via ``lax.scan``.  The recurrence state ``(B, H, P, N)`` is the decode cache —
+O(1) per generated token, which is why the ``long_500k`` cell is assigned to
+the SSM/hybrid architectures.
+
+SSD internals run in float32 (cumulative-sum exponentials); projections stay
+in the model dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBag
+
+Array = jax.Array
+
+
+def init_ssm(bag: ParamBag, cfg: ModelConfig, dtype, name: str = "ssm"):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    G, N = ssm.n_groups, ssm.d_state
+    sub = bag.sub(name)
+    sub.dense("wz", (d, d_in), ("embed", "ssm_inner"), dtype)
+    sub.dense("wx", (d, d_in), ("embed", "ssm_inner"), dtype)
+    sub.dense("wB", (d, G * N), ("embed", "ssm_state"), dtype)
+    sub.dense("wC", (d, G * N), ("embed", "ssm_state"), dtype)
+    sub.dense("wdt", (d, H), ("embed", "ssm_heads"), dtype)
+    sub.zeros("dt_bias", (H,), ("ssm_heads",), jnp.float32)
+    # A_log init ~ log(uniform[1,16]) (mamba2 default)
+    sub.params["A_log"] = jnp.log(
+        1.0 + 15.0 * jax.random.uniform(sub.next_key(), (H,))).astype(jnp.float32)
+    sub.logical["A_log"] = ("ssm_heads",)
+    sub.ones("D_skip", (H,), ("ssm_heads",), jnp.float32)
+    conv_dim = d_in + 2 * G * N
+    sub.dense("conv_w", (ssm.d_conv, conv_dim), ("conv_k", "ssm_inner"), dtype,
+              scale=ssm.d_conv ** -0.5)
+    sub.zeros("conv_b", (conv_dim,), ("ssm_inner",), dtype)
+    sub.ones("out_norm", (d_in,), ("ssm_inner",), dtype)
+    sub.dense("w_out", (d_in, d), ("ssm_inner", "embed"), dtype)
+
+
+def _causal_depthwise_conv(x: Array, w: Array, b: Array) -> Array:
+    """x: (B,S,C); w: (K,C) depthwise causal conv + silu."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.promote_types(x.dtype, w.dtype))
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _gated_rmsnorm(y: Array, z: Array, w: Array, eps: float = 1e-6) -> Array:
+    """Mamba2 output norm: RMSNorm(y * silu(z))."""
+    y32 = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), -1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32))
+
+
+def _ssd_chunked(xd: Array, a: Array, Bm: Array, Cm: Array, L: int,
+                 h0: Optional[Array] = None) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    xd: (B,S,H,P)  — dt-premultiplied inputs (f32)
+    a:  (B,S,H)    — dt * A  (negative, f32)
+    Bm/Cm: (B,S,G,N); heads map to groups by ``H // G`` blocks.
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, Pd = xd.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    NC = S // L
+    xc = xd.reshape(Bsz, NC, L, H, Pd)
+    ac = a.reshape(Bsz, NC, L, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, NC, L, G, N), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(Bsz, NC, L, G, N), rep, axis=3)
+
+    acs = jnp.cumsum(ac, axis=2)                                 # inclusive
+    # --- intra-chunk quadratic term ---
+    seg = acs[:, :, :, None, :] - acs[:, :, None, :, :]          # (B,NC,l,s,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: the masked (future) entries have seg > 0 and exp(seg)
+    # overflows; an inf in the untaken where-branch turns the softmax VJP
+    # into 0 * inf = NaN (fwd was fine, grads were not).
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    Lmat = jnp.exp(seg)
+    CB = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc)
+    y_diag = jnp.einsum("bclsh,bclsh,bcshp->bclhp", CB, Lmat, xc)
+
+    # --- chunk states and inter-chunk recurrence ---
+    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)              # (B,NC,L,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchnp", Bc, decay_states, xc)
+    chunk_total = jnp.exp(acs[:, :, -1, :])                      # (B,NC,H)
+
+    def step(h, inp):
+        st, tot = inp                                            # (B,H,N,P),(B,H)
+        h_prev = h
+        h = h * tot[:, :, None, None] + st
+        return h, h_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, Pd), xd.dtype)
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                        # (B,NC,H,N,P)
+
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp", Cc, h_prevs, jnp.exp(acs))
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    # state layout (B,H,P,N) for the decode cache
+    return y, jnp.swapaxes(hT, -1, -2)
+
+
+def ssm_block(p: dict, x: Array, cfg: ModelConfig,
+              cache: Optional[dict] = None, collect_state: bool = False
+              ) -> tuple[Array, Optional[dict]]:
+    """Mamba2 block.
+
+    Train: ``cache=None`` -> full chunked SSD (no state returned).
+    Prefill: ``cache=None, collect_state=True`` -> returns the final SSD
+    state + conv window as the decode cache.
+    Decode: ``cache={"h": (B,H,P,N), "conv": (B,K-1,conv_dim)}``.
+    """
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in = ssm.expand * d
+    H = d_in // ssm.head_dim
+    G, N, Pd = ssm.n_groups, ssm.d_state, ssm.head_dim
+    Bsz, S, _ = x.shape
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Braw = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Craw = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    xBC = jnp.concatenate([xin, Braw, Craw], axis=-1)
+    if cache is None:
+        xBC_raw = xBC
+        xBC = _causal_depthwise_conv(xBC, p["conv_w"], p["conv_b"]).astype(x.dtype)
+        K = ssm.d_conv
+        if collect_state:
+            padded = jnp.pad(xBC_raw, ((0, 0), (max(0, K - 1 - S), 0), (0, 0)))
+            new_conv = padded[:, -(K - 1):, :]
+        else:
+            new_conv = None
+    else:
+        window = jnp.concatenate([cache["conv"], xBC], axis=1)   # (B,K,conv)
+        out = (window * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+        xBC = jax.nn.silu(out)[:, None, :].astype(x.dtype)
+        new_conv = window[:, 1:, :]
+
+    xin = xBC[..., :d_in]
+    Bm = xBC[..., d_in:d_in + G * N].reshape(Bsz, S, G, N).astype(jnp.float32)
+    Cm = xBC[..., d_in + G * N:].reshape(Bsz, S, G, N).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    xh = xin.reshape(Bsz, S, H, Pd).astype(jnp.float32)
+    xd = xh * dt[..., None]
+    a = dt * A
+
+    if cache is None:
+        L = min(ssm.chunk_size, S)
+        pad = (-S) % L
+        if pad:
+            # zero-pad to a chunk multiple: xd/B/C = 0 adds nothing to the
+            # state and a = 0 (decay exp(0)=1) preserves it, so the final
+            # state is exact despite padding.
+            xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, hT = _ssd_chunked(xd, a, Bm, Cm, L)
+        y = y[:, :S]
+        new_cache = ({"h": hT.astype(jnp.float32), "conv": new_conv}
+                     if collect_state else None)
+    else:
+        h = cache["h"].astype(jnp.float32)                      # (B,H,P,N)
+        rep = H // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)                  # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        h = (h * jnp.exp(a[:, 0])[:, :, None, None]
+             + xd[:, 0][..., None] * Bh[:, :, None, :])         # (B,H,P,N)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch)[:, None]         # (B,1,H,P)
+        hT = h
+        new_cache = {"h": hT.astype(cache["h"].dtype), "conv": new_conv}
+
+    y = y + xh * p["D_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_in)
+    y = _gated_rmsnorm(y, z, p["out_norm"]).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    H = d_in // ssm.head_dim
+    conv_dim = d_in + 2 * ssm.n_groups * ssm.d_state
+    return {
+        "h": jnp.zeros((batch, H, ssm.head_dim, ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,10 @@
+"""Optimizers: AdamW / SGD(+momentum) with warmup-cosine schedules and global
+gradient clipping.  Self-contained (no optax dependency): states are plain
+pytrees that shard exactly like the parameters they mirror.
+"""
+from repro.optim.optimizers import (OptState, adamw_init, apply_updates,
+                                    global_norm, make_optimizer, sgd_init)
+from repro.optim.schedules import make_schedule
+
+__all__ = ["OptState", "adamw_init", "sgd_init", "apply_updates",
+           "global_norm", "make_optimizer", "make_schedule"]

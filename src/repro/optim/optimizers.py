@@ -1,0 +1,120 @@
+"""AdamW / SGD with decoupled weight decay and global-norm clipping.
+
+Moments are kept in f32 regardless of the (possibly bf16) parameter dtype —
+the standard mixed-precision recipe.  Every state leaf mirrors its parameter
+leaf's shape, so the parameter PartitionSpecs apply verbatim to the state
+(FSDP: optimizer state shards with the weights).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+from repro.optim.schedules import make_schedule
+
+Array = jax.Array
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: Array                  # () int32
+    mu: PyTree                   # first moment (f32) — zeros pytree for sgd
+    nu: Optional[PyTree]         # second moment (f32) — None for sgd
+
+
+def _f32_zeros_like(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def adamw_init(params: PyTree) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _f32_zeros_like(params),
+                    _f32_zeros_like(params))
+
+
+def sgd_init(params: PyTree) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _f32_zeros_like(params), None)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def make_optimizer(cfg: OptimConfig) -> tuple[
+        Callable[[PyTree], OptState],
+        Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState, dict]]]:
+    """Returns (init_fn, update_fn).
+
+    ``update_fn(params, state, grads) -> (new_params, new_state, stats)``.
+    """
+    sched = make_schedule(cfg)
+
+    if cfg.name == "adamw":
+        def update(params, state, grads):
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            step = state.step + 1
+            t = step.astype(jnp.float32)
+            lr = sched(state.step)
+            b1, b2 = cfg.b1, cfg.b2
+
+            def upd(p, g, m, v):
+                g32 = g.astype(jnp.float32)
+                m = b1 * m + (1 - b1) * g32
+                v = b2 * v + (1 - b2) * jnp.square(g32)
+                mh = m / (1 - b1 ** t)
+                vh = v / (1 - b2 ** t)
+                delta = mh / (jnp.sqrt(vh) + cfg.eps)
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+            out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+            new_params = jax.tree.map(lambda o: o[0], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+            mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+            nu = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+            return new_params, OptState(step, mu, nu), \
+                {"grad_norm": gnorm, "lr": lr}
+
+        return adamw_init, update
+
+    if cfg.name == "sgd":
+        def update(params, state, grads):
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            step = state.step + 1
+            lr = sched(state.step)
+
+            def upd(p, g, m):
+                g32 = g.astype(jnp.float32) \
+                    + cfg.weight_decay * p.astype(jnp.float32)
+                m = cfg.b1 * m + g32
+                return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+            out = jax.tree.map(upd, params, grads, state.mu)
+            new_params = jax.tree.map(lambda o: o[0], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+            mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+            return new_params, OptState(step, mu, None), \
+                {"grad_norm": gnorm, "lr": lr}
+
+        return sgd_init, update
+
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

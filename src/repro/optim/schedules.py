@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+
+def make_schedule(cfg: OptimConfig):
+    """step (int32) -> lr (f32)."""
+    base, warm, total = cfg.lr, cfg.warmup_steps, cfg.total_steps
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = base * (step + 1.0) / max(warm, 1)
+        frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            rest = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "linear":
+            rest = base * (1.0 - frac)
+        else:                       # constant
+            rest = jnp.full_like(frac, base)
+        return jnp.where(step < warm, warm_lr, rest)
+
+    return sched

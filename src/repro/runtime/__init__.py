@@ -1,0 +1,5 @@
+"""Runtime: train-state/step builders and the fault-tolerant training loop."""
+from repro.runtime.steps import TrainState, build_eval_step, build_train_step
+from repro.runtime.trainer import Trainer
+
+__all__ = ["TrainState", "build_train_step", "build_eval_step", "Trainer"]

@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests must see the
+1 real CPU device; only the dry-run forces 512 placeholder devices (and the
+distributed tests spawn subprocesses with their own flags)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jit_caches():
+    """Drop compiled-executable caches between test modules.
+
+    The suite compiles hundreds of distinct programs (kernel sweeps, ten
+    architectures, trainer graphs); without this the CPU JIT's resident
+    code pushes the host OOM near the end of a full run ("LLVM compilation
+    error: Cannot allocate memory")."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_lowrank(key, m: int, n: int, rank: int, dtype=jnp.float32):
+    """Synthetic fixed-rank matrix, the paper's test input (§6.1)."""
+    k1, k2 = jax.random.split(key)
+    M = jax.random.normal(k1, (m, rank), dtype)
+    N = jax.random.normal(k2, (rank, n), dtype)
+    return M @ N

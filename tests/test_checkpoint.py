@@ -1,0 +1,85 @@
+"""Checkpoint store: atomicity, validity checks, keep-N GC, async writes,
+resume, reshard-on-restore."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              load_checkpoint, save_checkpoint)
+
+
+@pytest.fixture
+def tree(rng):
+    k1, k2 = jax.random.split(rng)
+    return {"params": {"w": jax.random.normal(k1, (8, 4)),
+                       "b": jnp.zeros((4,))},
+            "opt": [jax.random.normal(k2, (8, 4)),
+                    jnp.asarray(3, jnp.int32)]}
+
+
+def test_roundtrip(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    out, extra = load_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_checkpoint_ignored(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    # corrupt step 2: truncate a leaf file
+    p2 = tmp_path / "step_2"
+    leaf = next(f for f in os.listdir(p2) if f.endswith(".npy"))
+    with open(p2 / leaf, "wb") as f:
+        f.write(b"xx")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_missing_manifest_ignored(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 3, tree)
+    os.remove(tmp_path / "step_3" / "manifest.json")
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_keep_n_gc(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    names = sorted(os.listdir(tmp_path))
+    assert "step_3" in names and "step_4" in names
+    assert "step_1" not in names and "step_2" not in names
+
+
+def test_async_writer(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=True)
+    mgr.save(5, tree)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_restore_latest_roundtrip(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(9, tree, extra={"note": "hi"})
+    got = mgr.restore_latest(tree)
+    assert got is not None
+    step, out, extra = got
+    assert step == 9 and extra["note"] == "hi"
+
+
+def test_shape_mismatch_raises(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    bad = jax.tree.map(lambda x: jnp.zeros((2,) + x.shape, x.dtype), tree)
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 1, bad)
+
+
+def test_extra_metadata_survives(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 4, tree, extra={"mesh": [16, 16]})
+    _, extra = load_checkpoint(str(tmp_path), 4, tree)
+    assert extra["mesh"] == [16, 16]

@@ -1,0 +1,93 @@
+"""Algorithm 1 invariants: orthonormal bases, the bidiagonal identity,
+breakdown-based rank detection, host/in-graph agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.core import gk_bidiag, gk_bidiag_host
+from repro.core.linop import from_dense
+from repro.core.tridiag import btb_tridiagonal
+
+
+def bidiag_matrix(res, k):
+    """Assemble B_{k+1,k} from the stored scalars."""
+    B = np.zeros((k + 1, k))
+    al = np.asarray(res.alphas)
+    be = np.asarray(res.betas)
+    for i in range(k):
+        B[i, i] = al[i]
+        B[i + 1, i] = be[i]
+    return B
+
+
+@pytest.mark.parametrize("runner", [gk_bidiag, gk_bidiag_host])
+@pytest.mark.parametrize("m,n", [(120, 80), (64, 150)])
+def test_orthonormal_bases(rng, runner, m, n):
+    A = jax.random.normal(rng, (m, n))
+    k = 40
+    res = runner(A, k)
+    kp = int(res.kprime)
+    P = np.asarray(res.P[:, :kp])
+    Q = np.asarray(res.Q[:, :kp + 1])
+    np.testing.assert_allclose(P.T @ P, np.eye(kp), atol=5e-5)
+    np.testing.assert_allclose(Q[:, :kp].T @ Q[:, :kp], np.eye(kp),
+                               atol=5e-5)
+
+
+@pytest.mark.parametrize("runner", [gk_bidiag, gk_bidiag_host])
+def test_bidiag_identity(rng, runner):
+    """A P_k = Q_{k+1} B_{k+1,k} (paper eq. 10)."""
+    m, n, k = 90, 70, 25
+    A = jax.random.normal(rng, (m, n))
+    res = runner(A, k)
+    kp = int(res.kprime)
+    B = bidiag_matrix(res, kp)
+    lhs = np.asarray(A) @ np.asarray(res.P[:, :kp])
+    rhs = np.asarray(res.Q[:, :kp + 1]) @ B[:kp + 1, :kp]
+    np.testing.assert_allclose(lhs, rhs, atol=2e-3)
+
+
+@pytest.mark.parametrize("runner", [gk_bidiag, gk_bidiag_host])
+@pytest.mark.parametrize("rank", [5, 17])
+def test_breakdown_detects_rank(rng, runner, rank):
+    """Krylov breakdown fires within a couple of iterations of the numerical
+    rank (paper Table 1a: 102-105 iterations for rank-100 inputs)."""
+    A = make_lowrank(rng, 100, 80, rank)
+    res = runner(A, 60)
+    assert bool(res.breakdown)
+    assert rank <= int(res.kprime) <= rank + 3
+
+
+def test_host_and_graph_agree(rng):
+    rank = 10
+    A = make_lowrank(rng, 80, 60, rank)
+    r1 = gk_bidiag(A, 30, key=jax.random.PRNGKey(7))
+    r2 = gk_bidiag_host(A, 30, key=jax.random.PRNGKey(7))
+    assert int(r1.kprime) == int(r2.kprime)
+    kp = int(r1.kprime)
+    # the final direction at breakdown is roundoff-dominated (it spans the
+    # exhausted complement); compare only the converged entries + top Ritz
+    np.testing.assert_allclose(np.asarray(r1.alphas[:kp - 1]),
+                               np.asarray(r2.alphas[:kp - 1]), rtol=2e-3)
+    t1 = np.linalg.eigvalsh(np.asarray(btb_tridiagonal(r1.alphas, r1.betas)))
+    t2 = np.linalg.eigvalsh(np.asarray(btb_tridiagonal(r2.alphas, r2.betas)))
+    np.testing.assert_allclose(t1[-rank:], t2[-rank:], rtol=1e-2)
+
+
+def test_start_vector_convention(rng):
+    """Paper line 1: q1 ~ N(2, 1) — mean ~2 (sanity on the odd convention)."""
+    from repro.core.gk import start_vector
+    v = start_vector(rng, 10000)
+    assert 1.9 < float(v.mean()) < 2.1
+
+
+def test_fused_matvec_linop_equivalence(rng):
+    """LinOp default fused path == explicit composition."""
+    A = jax.random.normal(rng, (50, 40))
+    op = from_dense(A)
+    p = jax.random.normal(jax.random.PRNGKey(1), (40,))
+    y = jax.random.normal(jax.random.PRNGKey(2), (50,))
+    np.testing.assert_allclose(np.asarray(op.mv_fused(p, y, 0.5)),
+                               np.asarray(A @ p - 0.5 * y), rtol=1e-5)

@@ -1,0 +1,68 @@
+"""Block GK bidiagonalization (beyond-paper MXU adaptation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.core.gk_block import fsvd_block, gk_block_host
+from repro.core.fsvd import fsvd
+
+
+def test_block_bases_orthonormal(rng):
+    A = jax.random.normal(rng, (200, 150))
+    res = gk_block_host(A, block=16, steps=4)
+    Q, P = np.asarray(res.Q), np.asarray(res.P)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(Q.shape[1]), atol=1e-4)
+    np.testing.assert_allclose(P.T @ P, np.eye(P.shape[1]), atol=1e-4)
+
+
+def test_projection_identity(rng):
+    """K == Qᵀ A P (the block-bidiagonal assembly is consistent)."""
+    A = jax.random.normal(rng, (120, 90))
+    res = gk_block_host(A, block=8, steps=5)
+    K_direct = np.asarray(res.Q).T @ np.asarray(A) @ np.asarray(res.P)
+    np.testing.assert_allclose(np.asarray(res.K), K_direct, atol=2e-3)
+
+
+@pytest.mark.parametrize("m,n,rank,r", [(300, 200, 40, 10), (150, 220, 25, 25)])
+def test_fsvd_block_matches_dense(rng, m, n, rank, r):
+    A = make_lowrank(rng, m, n, rank)
+    out = fsvd_block(A, r, block=max(16, r), steps=6)
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:r]
+    np.testing.assert_allclose(np.asarray(out.s), np.asarray(s_true),
+                               rtol=2e-3)
+    # triplet quality against dense SVD
+    U, s, Vt = jnp.linalg.svd(A, full_matrices=False)
+    qual = np.abs(np.sum(np.asarray(out.U) * np.asarray(U[:, :r]), 0)) \
+        * np.abs(np.sum(np.asarray(out.V) * np.asarray(Vt[:r].T), 0))
+    assert qual.min() > 0.99
+
+
+def test_block_and_vector_paths_agree(rng):
+    A = make_lowrank(rng, 256, 180, 30)
+    out_b = fsvd_block(A, 8, block=32, steps=4)
+    out_v = fsvd(A, 8, 120, host_loop=True)
+    np.testing.assert_allclose(np.asarray(out_b.s), np.asarray(out_v.s),
+                               rtol=1e-3)
+
+
+def test_block_breakdown_on_lowrank(rng):
+    """Rank < block: the second step's slab is rank-deficient -> breakdown
+    fires and the captured spectrum is still exact."""
+    A = make_lowrank(rng, 150, 100, 12)
+    out = fsvd_block(A, 12, block=16, steps=6)
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:12]
+    np.testing.assert_allclose(np.asarray(out.s), np.asarray(s_true),
+                               rtol=1e-3)
+
+
+def test_fewer_passes_than_vector_lanczos(rng):
+    """The block method reaches top-r convergence in ~3r/b + 2 passes over A
+    vs ~4r passes for vector Lanczos — the A-traffic win."""
+    A = make_lowrank(rng, 400, 300, 60)
+    r, b = 16, 64
+    out = fsvd_block(A, r, block=b, steps=3)   # 3 passes over A
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:r]
+    np.testing.assert_allclose(np.asarray(out.s), np.asarray(s_true),
+                               rtol=1e-3)

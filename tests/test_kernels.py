@@ -1,0 +1,88 @@
+"""Per-kernel allclose sweeps (shapes x dtypes) against the ref.py oracles,
+in interpret mode (the kernel body runs in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(64, 48, 4), (300, 200, 17), (1024, 512, 64), (100, 700, 5),
+          (512, 128, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=3e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_matvec_fused(m, n, k, dt):
+    key = jax.random.PRNGKey(m * n)
+    ks = jax.random.split(key, 3)
+    A = jax.random.normal(ks[0], (m, n)).astype(dt)
+    p = jax.random.normal(ks[1], (n,))
+    y = jax.random.normal(ks[2], (m,))
+    got = ops.matvec_fused(A, p, y, 0.37)
+    want = ref.matvec_fused(A, p, y, 0.37)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dt))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_rmatvec_fused(m, n, k, dt):
+    key = jax.random.PRNGKey(m + n)
+    ks = jax.random.split(key, 3)
+    A = jax.random.normal(ks[0], (m, n)).astype(dt)
+    q = jax.random.normal(ks[1], (m,))
+    y = jax.random.normal(ks[2], (n,))
+    got = ops.rmatvec_fused(A, q, y, 1.7)
+    want = ref.rmatvec_fused(A, q, y, 1.7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dt))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("passes", [1, 2])
+def test_reorth(m, n, k, passes):
+    key = jax.random.PRNGKey(k)
+    ks = jax.random.split(key, 2)
+    Q = jnp.linalg.qr(jax.random.normal(ks[0], (m, k)))[0]
+    v = jax.random.normal(ks[1], (m,))
+    got = ops.reorth(v, Q, passes)
+    want = ref.reorth(v, Q, passes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # the result is orthogonal to the basis
+    assert float(jnp.max(jnp.abs(Q.T @ got))) < 1e-4 * float(
+        jnp.linalg.norm(v))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_lowrank_matmul(m, n, k, dt):
+    key = jax.random.PRNGKey(m - n + k)
+    ks = jax.random.split(key, 3)
+    U = jax.random.normal(ks[0], (m, k)).astype(dt)
+    s = jnp.abs(jax.random.normal(ks[1], (k,)))
+    Vt = jax.random.normal(ks[2], (k, n)).astype(dt)
+    got = ops.lowrank_matmul(U, s, Vt)
+    want = ref.lowrank_matmul(U, s, Vt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dt))
+
+
+def test_kernel_tile_override():
+    """Non-default block shapes still correct (hillclimb knob)."""
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (512, 384))
+    p = jax.random.normal(jax.random.fold_in(key, 1), (384,))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (512,))
+    for bm, bn in [(128, 128), (512, 384), (64, 256)]:
+        got = ops.matvec_fused(A, p, y, 0.1, bm=bm, bn=bn)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.matvec_fused(A, p, y, 0.1)),
+                                   rtol=2e-4, atol=2e-4)

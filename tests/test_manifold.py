@@ -1,0 +1,97 @@
+"""Fixed-rank manifold geometry: tangent-space invariants, metric, and
+retraction correctness (QR closed form vs F-SVD implicit form)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import manifold as mf
+
+
+@pytest.fixture
+def point(rng):
+    return mf.random_point(rng, 60, 45, 5)
+
+
+def test_point_orthonormal(point):
+    np.testing.assert_allclose(np.asarray(point.U.T @ point.U), np.eye(5),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(point.V.T @ point.V), np.eye(5),
+                               atol=1e-5)
+
+
+def test_tangent_constraints(rng, point):
+    G = jax.random.normal(jax.random.PRNGKey(3), (60, 45))
+    xi = mf.project_tangent(point, G)
+    assert float(jnp.max(jnp.abs(point.U.T @ xi.Up))) < 1e-5
+    assert float(jnp.max(jnp.abs(point.V.T @ xi.Vp))) < 1e-5
+
+
+def test_projection_idempotent(rng, point):
+    G = jax.random.normal(jax.random.PRNGKey(3), (60, 45))
+    xi = mf.project_tangent(point, G)
+    xi2 = mf.project_tangent(point, mf.tangent_to_dense(point, xi))
+    np.testing.assert_allclose(np.asarray(xi.M), np.asarray(xi2.M),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xi.Up), np.asarray(xi2.Up),
+                               atol=1e-5)
+
+
+def test_projection_is_metric_projection(rng, point):
+    """<G - P(G), Z> = 0 for any tangent Z (orthogonal projection)."""
+    kg, kz = jax.random.split(jax.random.PRNGKey(4))
+    G = jax.random.normal(kg, (60, 45))
+    xi = mf.project_tangent(point, G)
+    Z = mf.project_tangent(point, jax.random.normal(kz, (60, 45)))
+    resid = G - mf.tangent_to_dense(point, xi)
+    ip = float(jnp.vdot(resid, mf.tangent_to_dense(point, Z)))
+    assert abs(ip) < 1e-3
+
+
+def test_inner_matches_dense(rng, point):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    xi = mf.project_tangent(point, jax.random.normal(k1, (60, 45)))
+    zt = mf.project_tangent(point, jax.random.normal(k2, (60, 45)))
+    dense = float(jnp.vdot(mf.tangent_to_dense(point, xi),
+                           mf.tangent_to_dense(point, zt)))
+    assert abs(float(mf.inner(xi, zt)) - dense) < 1e-3 * (1 + abs(dense))
+
+
+@pytest.mark.parametrize("step", [0.05, 0.5])
+def test_retractions_agree(rng, point, step):
+    """QR closed form == F-SVD implicit retraction (both = rank-r SVD of
+    W + t xi)."""
+    G = jax.random.normal(jax.random.PRNGKey(6), (60, 45))
+    xi = mf.project_tangent(point, G)
+    Wq = mf.retract_qr(point, xi, -step)
+    Wf = mf.retract_fsvd(point, xi, -step, fsvd_iters=25)
+    np.testing.assert_allclose(np.asarray(mf.to_dense(Wq)),
+                               np.asarray(mf.to_dense(Wf)),
+                               atol=1e-3)
+
+
+def test_retraction_first_order(rng, point):
+    """R_W(t xi) = W + t xi + O(t^2)."""
+    G = jax.random.normal(jax.random.PRNGKey(7), (60, 45))
+    xi = mf.project_tangent(point, G)
+    W0 = mf.to_dense(point)
+    Xi = mf.tangent_to_dense(point, xi)
+    errs = []
+    for t in (1e-2, 5e-3):
+        Rt = mf.to_dense(mf.retract_qr(point, xi, t))
+        errs.append(float(jnp.linalg.norm(Rt - (W0 + t * Xi))))
+    # halving t should shrink the error ~4x (second order)
+    assert errs[1] < errs[0] / 2.5
+
+
+def test_linop_matches_dense(rng, point):
+    G = jax.random.normal(jax.random.PRNGKey(8), (60, 45))
+    xi = mf.project_tangent(point, G)
+    op = mf.as_linop(point, xi, 0.3)
+    dense = mf.to_dense(point) + 0.3 * mf.tangent_to_dense(point, xi)
+    p = jax.random.normal(jax.random.PRNGKey(9), (45,))
+    q = jax.random.normal(jax.random.PRNGKey(10), (60,))
+    np.testing.assert_allclose(np.asarray(op.mv(p)), np.asarray(dense @ p),
+                               rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(op.rmv(q)), np.asarray(dense.T @ q),
+                               rtol=2e-4, atol=1e-4)

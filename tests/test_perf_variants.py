@@ -1,0 +1,140 @@
+"""Numerical equivalence of the §Perf hillclimb variants:
+online-softmax attention, DUS cache update, remat policies, and the
+trip-count-aware HLO analyzer itself."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as A
+from repro.configs import get_arch
+from repro.launch import hlo_analysis as H
+from repro.models import model as M
+from repro.models.layers import ParamBag
+
+
+@pytest.fixture(scope="module")
+def attn_setup():
+    cfg = get_arch("gemma2-9b").reduced(sliding_window=16, num_layers=1)
+    bag = ParamBag(jax.random.PRNGKey(0))
+    A.init_gqa(bag, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    return cfg, bag.params["attn"], x, pos
+
+
+@pytest.mark.parametrize("window", [A.GLOBAL_WINDOW, 16])
+@pytest.mark.parametrize("cap", [None, 50.0])
+@pytest.mark.parametrize("q_chunk", [16, 32])
+def test_online_softmax_matches_full(attn_setup, window, cap, q_chunk):
+    cfg, p, x, pos = attn_setup
+    c_full = dataclasses.replace(cfg, attn_impl="full",
+                                 attn_logit_softcap=cap)
+    c_onl = dataclasses.replace(cfg, attn_impl="online", q_chunk=q_chunk,
+                                attn_logit_softcap=cap)
+    o1, _ = A.gqa_attention(p, x, pos, c_full, window=window)
+    o2, _ = A.gqa_attention(p, x, pos, c_onl, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_online_softmax_grads_match(attn_setup):
+    cfg, p, x, pos = attn_setup
+    c_full = dataclasses.replace(cfg, attn_impl="full")
+    c_onl = dataclasses.replace(cfg, attn_impl="online", q_chunk=16)
+
+    def loss(impl_cfg, xx):
+        out, _ = A.gqa_attention(p, xx, pos, impl_cfg)
+        return jnp.sum(out ** 2)
+
+    g1 = jax.grad(lambda xx: loss(c_full, xx))(x)
+    g2 = jax.grad(lambda xx: loss(c_onl, xx))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dus_cache_update_matches_blend(attn_setup):
+    cfg, p, x, pos = attn_setup
+    cache = A.init_gqa_cache(cfg, 2, 64, jnp.float32)
+    tok, tpos = x[:, 10:11], jnp.full((2, 1), 10, jnp.int32)
+    _, c1 = A.gqa_attention(p, tok, tpos, cfg, cache=cache)
+    _, c2 = A.gqa_attention(
+        p, tok, tpos, dataclasses.replace(cfg, cache_update="dus"),
+        cache=cache)
+    for k in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(c1[k]), np.asarray(c2[k]))
+
+
+def test_online_impl_full_model_loss():
+    cfg = get_arch("gemma-7b").reduced()
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    l_full, _ = M.loss_fn(params, batch,
+                          dataclasses.replace(cfg, attn_impl="full"))
+    l_onl, _ = M.loss_fn(params, batch,
+                         dataclasses.replace(cfg, attn_impl="online",
+                                             q_chunk=16))
+    assert abs(float(l_full) - float(l_onl)) < 1e-3
+
+
+@pytest.mark.parametrize("policy", ["none", "dots", "nothing"])
+def test_remat_policies_same_loss(policy):
+    cfg = get_arch("stablelm-1.6b").reduced(remat_policy=policy)
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    loss, _ = M.loss_fn(params, batch, cfg)
+    g = jax.grad(lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree_util.tree_leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer ground truths
+# ---------------------------------------------------------------------------
+
+def test_hlo_analyzer_scan_trip_count():
+    m = 256
+    A_ = jax.ShapeDtypeStruct((m, m), jnp.float32)
+
+    def scanned(a):
+        def body(x, _):
+            return x @ x, None
+        out, _ = jax.lax.scan(body, a, None, length=7)
+        return out
+
+    txt = jax.jit(scanned).lower(A_).compile().as_text()
+    cost = H.analyze(txt, vmem_threshold=0)
+    expect = 7 * 2 * m ** 3
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+
+
+def test_hlo_analyzer_plain_matmul():
+    m = 512
+    A_ = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    txt = jax.jit(lambda a, b: a @ b).lower(A_, A_).compile().as_text()
+    cost = H.analyze(txt, vmem_threshold=0)
+    assert abs(cost.dot_flops - 2 * m ** 3) / (2 * m ** 3) < 0.01
+    # reads 2 x 1MB + writes 1MB
+    assert 2.5e6 < cost.hbm_bytes < 4e6
+
+
+def test_hlo_analyzer_vmem_threshold():
+    m = 128   # 64 KiB buffers — below any reasonable VMEM threshold
+    A_ = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    txt = jax.jit(lambda a, b: a @ b).lower(A_, A_).compile().as_text()
+    cost = H.analyze(txt, vmem_threshold=2**20)
+    assert cost.hbm_bytes == 0.0
+    assert cost.dot_flops > 0    # flops still counted
+
+
+def test_hlo_analyzer_type_bytes():
+    from repro.launch.hlo_analysis import _first_type_bytes
+    assert _first_type_bytes("bf16[2,3]{1,0}") == 12
+    assert _first_type_bytes("(f32[4]{0}, s32[2]{0})") == 24
+    assert _first_type_bytes("f32[]") == 4

@@ -1,0 +1,43 @@
+"""Gradient-rank telemetry (Alg 3 as a training-health metric)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_lowrank
+from repro.configs import get_arch
+from repro.configs.base import FsvdConfig
+from repro.models import model as M
+from repro.runtime.telemetry import grad_spectrum, gradient_rank_summary
+
+
+def test_grad_spectrum_lowrank(rng):
+    g = make_lowrank(rng, 300, 200, 5)
+    out = grad_spectrum(g, k=12)
+    assert int(out["rank"]) == 5
+    s_true = jnp.linalg.svd(g, compute_uv=False)[:5]
+    np.testing.assert_allclose(np.asarray(out["sigma"][:5]),
+                               np.asarray(s_true), rtol=1e-3)
+    assert float(out["energy_r"]) > 0.999   # rank-5 captures everything
+
+
+def test_grad_spectrum_full_rank(rng):
+    g = jax.random.normal(rng, (128, 96))
+    out = grad_spectrum(g, k=8)
+    assert int(out["rank"]) == 8            # >= k Ritz values above tol
+    assert float(out["energy_r"]) < 0.9     # white spectrum: top-8 is partial
+
+
+def test_summary_on_model_grads():
+    cfg = get_arch("stablelm-1.6b").reduced()
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                             cfg.vocab_size)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    grads = jax.grad(lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    summary = gradient_rank_summary(
+        grads, FsvdConfig(compression_min_dim=64), k=8, max_leaves=4)
+    assert len(summary) >= 1
+    for name, s in summary.items():
+        assert s["sigma"].shape == (8,)
+        assert bool(jnp.all(jnp.isfinite(s["sigma"])))
+        assert 0 <= int(s["rank"]) <= 8

@@ -1,0 +1,129 @@
+"""Fault-tolerant trainer: NaN guard, resume, straggler watchdog, drain."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_arch
+from repro.configs.base import (CheckpointConfig, OptimConfig, RuntimeConfig,
+                                ShapeConfig)
+from repro.data.synthetic import LMBatchSpec, lm_batch
+from repro.runtime import Trainer, build_train_step
+from repro.runtime.steps import init_state
+from repro.runtime.trainer import StragglerWatchdog
+
+
+def _setup(tmp_path, every=10, async_write=False):
+    cfg = get_arch("stablelm-1.6b").reduced(num_layers=2)
+    opt = OptimConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", "train", 32, 4),
+                    optim=opt,
+                    checkpoint=CheckpointConfig(directory=str(tmp_path),
+                                                every_steps=every,
+                                                async_write=async_write),
+                    runtime=RuntimeConfig(max_nan_skips=3, log_every=0))
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(cfg, opt))
+    spec = LMBatchSpec(4, 32, cfg.vocab_size)
+    return cfg, run, state, step, spec
+
+
+def test_loss_decreases(tmp_path):
+    cfg, run, state, step, spec = _setup(tmp_path)
+    tr = Trainer(run, step, lambda s: lm_batch(spec, 0, s), state,
+                 install_sigterm=False, log_fn=lambda s: None)
+    hist = tr.run(40)
+    assert np.mean([h["loss"] for h in hist[-5:]]) \
+        < np.mean([h["loss"] for h in hist[:5]])
+
+
+def test_resume_continues_from_checkpoint(tmp_path):
+    cfg, run, state, step, spec = _setup(tmp_path, every=10)
+    tr = Trainer(run, step, lambda s: lm_batch(spec, 0, s), state,
+                 install_sigterm=False, log_fn=lambda s: None)
+    tr.run(15)   # checkpoints at 10 and a final one at 15
+
+    state2 = init_state(cfg, run.optim, jax.random.PRNGKey(42))
+    tr2 = Trainer(run, step, lambda s: lm_batch(spec, 0, s), state2,
+                  install_sigterm=False, log_fn=lambda s: None)
+    assert tr2.maybe_resume()
+    assert tr2.step == 15
+    # resumed params identical to saved ones
+    a = jax.tree.leaves(tr.state)[0]
+    b = jax.tree.leaves(tr2.state)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nan_guard_skips_and_aborts(tmp_path):
+    cfg, run, state, step, spec = _setup(tmp_path)
+
+    def poisoned_batch(s):
+        b = lm_batch(spec, 0, s)
+        # out-of-range label -> gather fetches garbage? No: labels are used
+        # via take_along_axis on logits; poison via an inf in img-less path
+        # is cleanest through a huge token embedding lookup — instead poison
+        # the model by passing label ids < -1 (masked) and tokens NaN-free:
+        # easier: wrap the step below.
+        return b
+
+    # wrap the jitted step to inject a NaN loss every step
+    def bad_step(state, batch):
+        new_state, metrics = step(state, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = jnp.asarray(jnp.nan)
+        metrics["skipped"] = jnp.asarray(1, jnp.int32)
+        return state, metrics   # state unchanged = skip semantics
+
+    tr = Trainer(run, bad_step, poisoned_batch, state,
+                 install_sigterm=False, log_fn=lambda s: None)
+    with pytest.raises(RuntimeError, match="consecutive"):
+        tr.run(10)
+    assert tr.consecutive_nans >= 4
+
+
+def test_in_graph_nan_guard_preserves_state():
+    cfg = get_arch("stablelm-1.6b").reduced(num_layers=1)
+    opt = OptimConfig(lr=1e-3)
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(cfg, opt, nan_guard=True))
+    spec = LMBatchSpec(2, 16, cfg.vocab_size)
+    batch = lm_batch(spec, 0, 0)
+    # poison the embedding row of a token that actually OCCURS in the batch
+    tok0 = int(batch["tokens"][0, 0])
+    bad_params = dict(state.params)
+    bad_params["embed"] = state.params["embed"].at[tok0].set(jnp.nan)
+    bad_state = state._replace(params=bad_params)
+    new_state, metrics = step(bad_state, batch)
+    assert int(metrics["skipped"]) == 1
+    a = jax.tree.leaves(bad_state.params)
+    b = jax.tree.leaves(new_state.params)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_straggler_watchdog_flags_outlier():
+    wd = StragglerWatchdog(zscore=3.0, window=50)
+    for i in range(30):
+        assert not wd.observe(i, 0.1 + 0.001 * (i % 3))
+    assert wd.observe(31, 1.5)          # 10x step time -> alarm
+    assert len(wd.alarms) == 1
+
+
+def test_sigterm_drain(tmp_path):
+    cfg, run, state, step, spec = _setup(tmp_path, every=1000)
+    tr = Trainer(run, step, lambda s: lm_batch(spec, 0, s), state,
+                 install_sigterm=False, log_fn=lambda s: None)
+
+    orig_step = tr.train_step
+    def step_then_term(st, b):
+        out = orig_step(st, b)
+        if tr.step == 5:
+            tr._on_sigterm(None, None)    # simulate SIGTERM mid-run
+        return out
+    tr.train_step = step_then_term
+    tr.run(50)
+    assert tr.step == 6                    # drained right after step 5
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 6   # final checkpoint written
