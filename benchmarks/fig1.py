@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import fmt_table, make_lowrank
-from repro.core import fsvd, rsvd
+from repro.api import SVDSpec, factorize
 
 M = N = 2000
 RANK = 200        # paper ratio: rank = m/10
@@ -28,11 +28,16 @@ def run() -> dict:
         qv = np.abs(np.sum(np.asarray(Vtd[:r].T) * np.asarray(V[:, :r]), 0))
         return qu * qv, np.asarray(sd[:r] - s[:r])
 
-    f = fsvd(A, R_WANT, 5 * R_WANT + 50, host_loop=True)
+    key = jax.random.PRNGKey(0)
+    f = factorize(A, SVDSpec(method="fsvd", rank=R_WANT,
+                             max_iters=5 * R_WANT + 50, host_loop=True),
+                  key=key)
     q_f, ds_f = quality(f.U, f.s, f.V, R_WANT)
-    ro = rsvd(A, R_WANT, p=P_OVER, power_iters=2)
+    ro = factorize(A, SVDSpec(method="rsvd", rank=R_WANT, oversample=P_OVER,
+                              power_iters=2), key=key)
     q_o, ds_o = quality(ro.U, ro.s, ro.V, R_WANT)
-    rd = rsvd(A, R_WANT, p=10)
+    rd = factorize(A, SVDSpec(method="rsvd", rank=R_WANT, oversample=10),
+                   key=key)
     q_d, ds_d = quality(rd.U, rd.s, rd.V, R_WANT)
 
     rows = []

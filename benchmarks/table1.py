@@ -11,13 +11,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import fmt_table, make_lowrank, timeit
-from repro.core import fsvd, numerical_rank, rsvd
+from repro.api import SVDSpec, estimate_rank, factorize
 from repro.core.gk_block import fsvd_block
 
 SIZES = [(1000, 1000), (2000, 1000), (5000, 1000), (4000, 2000),
          (10000, 2000), (20000, 2000)]
 RANK = 100
 R_WANT = 20
+KEY = jax.random.PRNGKey(0)
 
 
 def run(sizes=SIZES, rank=RANK, r=R_WANT, repeats=3) -> dict:
@@ -28,30 +29,34 @@ def run(sizes=SIZES, rank=RANK, r=R_WANT, repeats=3) -> dict:
         # --- Table 1a: rank estimation ---
         t_svd_rank, s = timeit(
             lambda: jnp.linalg.svd(A, compute_uv=False), repeats=repeats)
-        t_alg1 = t_alg3 = None
-        out = None
         import time as _t
         t0 = _t.perf_counter()
-        out = numerical_rank(A, max_iters=min(m, n))
+        out = estimate_rank(A, max_iters=min(m, n), key=KEY)
         t_alg3 = _t.perf_counter() - t0
         rows_a.append([f"{m}x{n}", f"{t_svd_rank:.3f}", f"{t_alg3:.3f}",
-                       int(out.gk_iterations), int(out.rank)])
+                       int(out.iterations), int(out.rank)])
 
-        # --- Table 1b: partial SVD ---
+        # --- Table 1b: partial SVD (one facade, four specs) ---
+        spec_f = SVDSpec(method="fsvd", rank=r, max_iters=2 * rank,
+                         host_loop=True)
+        spec_rd = SVDSpec(method="rsvd", rank=r, oversample=10)
+        spec_ro = SVDSpec(method="rsvd", rank=r, oversample=rank,
+                          power_iters=2)
         t_svd, _ = timeit(lambda: jnp.linalg.svd(A, full_matrices=False),
                           repeats=repeats)
         t_fsvd, fout = timeit(
-            lambda: fsvd(A, r, 2 * rank, host_loop=True), repeats=repeats)
-        t_rsvd_d, _ = timeit(lambda: jax.block_until_ready(rsvd(A, r, p=10)),
-                             repeats=repeats)
+            lambda: factorize(A, spec_f, key=KEY), repeats=repeats)
+        t_rsvd_d, _ = timeit(
+            lambda: jax.block_until_ready(factorize(A, spec_rd, key=KEY)),
+            repeats=repeats)
         t_rsvd_o, _ = timeit(
-            lambda: jax.block_until_ready(rsvd(A, r, p=rank, power_iters=2)),
+            lambda: jax.block_until_ready(factorize(A, spec_ro, key=KEY)),
             repeats=repeats)
         # beyond-paper: block GK (b vectors per pass over A; see
         # core/gk_block.py) — same accuracy class as F-SVD, fewer A passes
         t_block, _ = timeit(
             lambda: jax.block_until_ready(
-                fsvd_block(A, r, block=max(64, r), steps=4)),
+                fsvd_block(A, r, block=max(64, r), steps=4, key=KEY)),
             repeats=repeats)
         rows_b.append([f"{m}x{n}", f"{t_svd:.3f}", f"{t_fsvd:.3f}",
                        f"{t_block:.3f}", f"{t_rsvd_d:.3f}",

@@ -5,12 +5,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import fmt_table, make_lowrank
-from repro.core import fsvd, rsvd
-from repro.core.fsvd import FSVDResult
+from repro.api import SVDSpec, factorize
 
 SIZES = [(1000, 1000), (2000, 1000), (4000, 2000), (10000, 2000)]
 RANK = 100
 R_WANT = 20
+KEY = jax.random.PRNGKey(0)
 
 
 def _errors(A, U, s, V) -> tuple[float, float]:
@@ -26,11 +26,14 @@ def run(sizes=SIZES, rank=RANK, r=R_WANT) -> dict:
         A = make_lowrank(jax.random.PRNGKey(0), m, n, rank)
         Ud, sd, Vtd = jnp.linalg.svd(A, full_matrices=False)
         e_svd = _errors(A, Ud[:, :r], sd[:r], Vtd[:r].T)
-        f = fsvd(A, r, 2 * rank, host_loop=True)
+        f = factorize(A, SVDSpec(method="fsvd", rank=r, max_iters=2 * rank,
+                                 host_loop=True), key=KEY)
         e_f = _errors(A, f.U, f.s, f.V)
-        ro = rsvd(A, r, p=rank, power_iters=2)
+        ro = factorize(A, SVDSpec(method="rsvd", rank=r, oversample=rank,
+                                  power_iters=2), key=KEY)
         e_ro = _errors(A, ro.U, ro.s, ro.V)
-        rd = rsvd(A, r, p=10)
+        rd = factorize(A, SVDSpec(method="rsvd", rank=r, oversample=10),
+                       key=KEY)
         e_rd = _errors(A, rd.U, rd.s, rd.V)
         rows.append([f"{m}x{n}",
                      f"{e_svd[0]:.2e}", f"{e_svd[1]:.2e}",

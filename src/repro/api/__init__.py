@@ -1,0 +1,40 @@
+"""repro.api — the spec-driven solver facade (the public entry point).
+
+    from repro.api import SVDSpec, factorize, estimate_rank
+
+    fact = factorize(A, SVDSpec(method="fsvd", rank=20), key=key)
+    fact.reconstruct();  fact.errors(A);  fact.warm_start()
+
+    est = estimate_rank(A, key=key)      # paper Alg 3
+    int(est.rank), int(est.iterations)
+
+Everything — dense arrays, implicit low-rank operators (``LowRankOp``),
+operator algebra (``A.T``, ``A + B``, ``alpha * A``), pod-sharded operators
+(``repro.distributed.ShardedOp``) — goes through the same two calls; the
+solver registry (``register_solver``) lets extensions plug in new methods.
+
+The legacy per-solver entry points (``repro.core.fsvd/rsvd/numerical_rank``)
+remain as deprecated shims.
+"""
+from repro.api.facade import estimate_rank, factorize, resolve_method
+from repro.api.registry import (available_solvers, get_solver,
+                                register_solver)
+from repro.api.results import Factorization, RankEstimate
+from repro.api.spec import METHODS, SVDSpec
+from repro.core._keys import ImplicitKeyWarning, resolve_key
+from repro.core.operators import (DenseOp, LowRankOp, Operator, ScaledOp,
+                                  SumOp, TransposedOp, as_operator)
+
+# importing the module registers the built-in solvers
+from repro.api import solvers as _solvers  # noqa: E402,F401  (side effect)
+
+_resolve_key = resolve_key   # the facade's canonical key helper
+
+__all__ = [
+    "SVDSpec", "METHODS", "factorize", "estimate_rank", "resolve_method",
+    "Factorization", "RankEstimate",
+    "register_solver", "get_solver", "available_solvers",
+    "Operator", "DenseOp", "LowRankOp", "SumOp", "ScaledOp",
+    "TransposedOp", "as_operator",
+    "resolve_key", "ImplicitKeyWarning",
+]

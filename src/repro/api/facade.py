@@ -1,0 +1,90 @@
+"""`factorize` / `estimate_rank` — the one seam every workload goes through.
+
+Dense arrays, implicit low-rank operators, pod-sharded operators and legacy
+``LinOp`` closures all enter here; the spec picks the solver; a unified
+``Factorization`` / ``RankEstimate`` comes back.  Because operators and
+results are pytrees, the facade composes with jax transforms:
+
+    batched = jax.vmap(lambda op: factorize(op, spec, key=key))(stacked_op)
+
+runs a batched partial SVD over a stacked ``DenseOp`` with no extra code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.api.registry import get_solver
+from repro.api.results import Factorization, RankEstimate
+from repro.api.spec import SVDSpec
+from repro.core._keys import resolve_key
+from repro.core.operators import as_operator
+from repro.core.rank import numerical_rank as _numerical_rank
+
+Array = jax.Array
+
+# "auto" heuristic: the GK solver tracks the paper's accuracy (relative
+# errors at roundoff level); the sketch is cheaper per pass but its tail
+# triplets degrade (paper Fig 1).  A loose tolerance or an explicit
+# power-iteration request signals the caller is on the sketch side of the
+# trade-off curve.
+_AUTO_SKETCH_TOL = 1e-4
+
+
+def resolve_method(spec: SVDSpec) -> str:
+    """Resolve ``method="auto"`` to a registered solver name."""
+    if spec.method != "auto":
+        return spec.method
+    if spec.power_iters > 0 or spec.tol >= _AUTO_SKETCH_TOL:
+        return "rsvd"
+    return "fsvd"
+
+
+def factorize(A, spec: Optional[SVDSpec] = None, *,
+              key: Optional[Array] = None, q1: Optional[Array] = None,
+              **overrides) -> Factorization:
+    """Rank-``spec.rank`` partial SVD of ``A`` under ``spec``.
+
+    ``A`` — dense array, any ``repro.core.operators`` operator, a sharded
+    operator, or a legacy ``LinOp``.
+    ``key`` — PRNG key for the start vector / sketch (warns and falls back
+    to ``PRNGKey(0)`` when omitted).
+    ``q1`` — optional GK warm-start vector (e.g. ``prev.warm_start()``).
+    Keyword overrides are merged into the spec:
+    ``factorize(A, rank=20)`` == ``factorize(A, SVDSpec(rank=20))``.
+    """
+    spec = (spec or SVDSpec())
+    if overrides:
+        spec = spec.replace(**overrides)
+    op = as_operator(A, backend=spec.backend)
+    solver = get_solver(resolve_method(spec))
+    return solver(op, spec, key=key, q1=q1)
+
+
+def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
+                  key: Optional[Array] = None,
+                  sigma_tol: Optional[float] = None,
+                  **overrides) -> RankEstimate:
+    """Numerical rank of ``A`` (paper Alg 3) under ``spec``.
+
+    ``spec.max_iters`` caps the GK sweep (default: ``min(m, n)``);
+    ``spec.tol`` is the Alg-1 breakdown epsilon; ``sigma_tol`` optionally
+    overrides the Alg-3 counting threshold on the Ritz values of BᵀB.
+    ``spec.host_loop=None`` defaults to the early-exit host loop (the
+    paper's wall-time behaviour — iteration count == rank estimate).
+    """
+    spec = (spec or SVDSpec())
+    if overrides:
+        spec = spec.replace(**overrides)
+    op = as_operator(A, backend=spec.backend)
+    key = resolve_key(key, caller="estimate_rank")
+    host_loop = True if spec.host_loop is None else spec.host_loop
+    res = _numerical_rank(op, max_iters=spec.max_iters, eps=spec.tol,
+                          relative_eps=spec.relative_tol,
+                          sigma_tol=sigma_tol, key=key,
+                          host_loop=host_loop,
+                          reorth_passes=spec.reorth_passes,
+                          dtype=spec.dtype)
+    return RankEstimate(res.rank, res.gk_iterations, res.eigenvalues,
+                        method="gk")

@@ -1,0 +1,111 @@
+"""Unified result types for the solver facade.
+
+``Factorization`` subsumes the per-solver result tuples (FSVDResult,
+RSVDResult): same fields whichever solver produced it, registered as a
+pytree (``method`` rides in aux data) so results flow through jit / vmap /
+checkpointing like any array bundle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Factorization:
+    """Partial SVD  A ≈ U diag(s) Vᵀ.
+
+    iterations — GK iterations actually used (F-SVD; doubles as the Alg-1
+                 rank estimate) or power iterations performed (R-SVD).
+    breakdown  — did the GK breakdown criterion fire (always False for
+                 sketch-based solvers).
+    method     — solver that produced this (static; survives pytree ops).
+    """
+
+    U: Array
+    s: Array
+    V: Array
+    iterations: Array
+    breakdown: Array
+    method: str = "fsvd"
+
+    @property
+    def rank(self) -> int:
+        return self.s.shape[0]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.U.shape[0], self.V.shape[0])
+
+    def reconstruct(self) -> Array:
+        """Materialize U diag(s) Vᵀ (tests / retraction only)."""
+        return (self.U * self.s[None, :]) @ self.V.T
+
+    def errors(self, A) -> dict:
+        """The paper's Table-2 metrics: relative ||AᵀU − VΣ||_F/||Σ||_F and
+        (for dense operands) residual ||A − UΣVᵀ||_F."""
+        from repro.core.fsvd import truncated_svd_errors
+        return truncated_svd_errors(A, self)
+
+    def as_operator(self):
+        """The factorization itself as a LowRankOp (e.g. to feed back into
+        the solvers or the manifold machinery)."""
+        from repro.core.operators import LowRankOp
+        return LowRankOp(self.U, self.s, self.V.T)
+
+    def warm_start(self) -> Array:
+        """Left start vector q1 for warm-starting the next GK solve on the
+        same or a nearby operator: the sigma-weighted blend ``U @ s`` of the
+        computed left subspace.  (A single exact singular vector would be an
+        invariant direction — GK would break down after one step — so the
+        blend spreads the start across all computed directions, letting the
+        solver re-extract the whole subspace in ~rank iterations.)"""
+        return self.U @ self.s
+
+
+def _fact_flatten(f: Factorization):
+    return ((f.U, f.s, f.V, f.iterations, f.breakdown), (f.method,))
+
+
+def _fact_unflatten(aux, children):
+    return Factorization(*children, method=aux[0])
+
+
+jax.tree_util.register_pytree_node(Factorization, _fact_flatten,
+                                   _fact_unflatten)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RankEstimate:
+    """Numerical-rank determination result (paper Alg 3).
+
+    rank        — accurate numerical rank (eigenvalue count above tol).
+    iterations  — Alg-1 GK iteration count at termination (the first,
+                  slightly loose estimate).
+    eigenvalues — Ritz values of BᵀB, descending (−inf padded).
+    """
+
+    rank: Array
+    iterations: Array
+    eigenvalues: Array
+    method: str = "gk"
+
+    def __int__(self) -> int:
+        return int(self.rank)
+
+
+def _rank_flatten(r: RankEstimate):
+    return ((r.rank, r.iterations, r.eigenvalues), (r.method,))
+
+
+def _rank_unflatten(aux, children):
+    return RankEstimate(*children, method=aux[0])
+
+
+jax.tree_util.register_pytree_node(RankEstimate, _rank_flatten,
+                                   _rank_unflatten)

@@ -1,0 +1,52 @@
+"""Built-in solver registrations for the facade.
+
+Both solvers take the same (operator, spec, key, q1) inputs and return the
+same :class:`~repro.api.results.Factorization` — HMT randomized SVD and GK
+block-Krylov F-SVD are interchangeable points on one accuracy/cost curve.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import register_solver
+from repro.api.results import Factorization
+from repro.api.spec import SVDSpec
+from repro.core._keys import resolve_key
+from repro.core.fsvd import fsvd as _fsvd
+from repro.core.rsvd import rsvd as _rsvd
+
+Array = jax.Array
+
+
+@register_solver("fsvd")
+def solve_fsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
+               q1: Optional[Array] = None) -> Factorization:
+    """Paper Alg 2: k-step GK bidiagonalization + Ritz extraction."""
+    if q1 is None:
+        key = resolve_key(key, caller="factorize(method='fsvd')")
+    res = _fsvd(A, spec.rank, spec.max_iters, key=key, q1=q1,
+                eps=spec.tol, relative_eps=spec.relative_tol,
+                reorth_passes=spec.reorth_passes,
+                host_loop=bool(spec.host_loop), dtype=spec.dtype)
+    return Factorization(res.U, res.s, res.V, res.kprime, res.breakdown,
+                         method="fsvd")
+
+
+@register_solver("rsvd")
+def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
+               q1: Optional[Array] = None) -> Factorization:
+    """HMT 2011 randomized range sketch (+ optional power iterations).
+
+    ``q1`` is accepted for signature parity but unused — sketching has no
+    warm-start seam.
+    """
+    key = resolve_key(key, caller="factorize(method='rsvd')")
+    res = _rsvd(A, spec.rank, p=spec.oversample,
+                power_iters=spec.power_iters, key=key, dtype=spec.dtype)
+    return Factorization(
+        res.U, res.s, res.V,
+        iterations=jnp.asarray(spec.power_iters, jnp.int32),
+        breakdown=jnp.asarray(False), method="rsvd")

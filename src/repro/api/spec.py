@@ -1,0 +1,65 @@
+"""SVDSpec — one declarative knob set for every low-rank solver.
+
+Halko-Martinsson-Tropp randomized SVD and GK block-Krylov F-SVD are points
+on one accuracy/cost trade-off curve; the spec names the point and
+:func:`repro.api.factorize` picks/runs the solver.  The spec is a frozen,
+hashable dataclass so it can be closed over by ``jit`` (it is static
+configuration, never traced).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+METHODS = ("auto", "fsvd", "rsvd")
+
+
+@dataclasses.dataclass(frozen=True)
+class SVDSpec:
+    """Declarative description of a partial-SVD / rank-estimation solve.
+
+    method        "fsvd" (paper Alg 2), "rsvd" (HMT baseline), "auto"
+                  (heuristic: F-SVD unless the tolerance is loose enough
+                  that a sketch is sufficient), or any name registered via
+                  ``repro.api.register_solver``.
+    rank          number of dominant triplets wanted (r).
+    max_iters     GK iteration budget k (fsvd) or the iteration cap for
+                  rank estimation; None = per-method default
+                  (``min(4 rank, min(m, n))`` for F-SVD, ``min(m, n)``
+                  for rank estimation).
+    tol           breakdown / termination epsilon (paper eps, default 1e-8).
+    relative_tol  scale tol by ||A|| (float32-safe reading of the paper's
+                  absolute threshold; see core/gk.py).
+    reorth_passes CGS passes per Lanczos step ("twice is enough").
+    oversample    R-SVD oversampling p (paper default 10).
+    power_iters   R-SVD subspace iterations q.
+    backend       "xla" | "pallas" — how dense inputs are wrapped
+                  (subsumes the old ``from_dense(use_kernels=...)``).
+    dtype         compute dtype override (None = promote input to f32).
+    host_loop     True = host-side Python loop with real early exit
+                  (paper wall-time behaviour); False = in-graph fori_loop
+                  (jit/vmap-able); None = per-entry-point default
+                  (False for factorize, True for estimate_rank).
+    """
+
+    method: str = "auto"
+    rank: int = 10
+    max_iters: Optional[int] = None
+    tol: float = 1e-8
+    relative_tol: bool = True
+    reorth_passes: int = 2
+    oversample: int = 10
+    power_iters: int = 0
+    backend: str = "xla"
+    dtype: Any = None
+    host_loop: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
+        if self.backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"backend must be 'xla' or 'pallas', got {self.backend!r}")
+
+    def replace(self, **changes) -> "SVDSpec":
+        return dataclasses.replace(self, **changes)

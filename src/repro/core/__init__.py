@@ -6,17 +6,46 @@ rank      — Algorithm 3 (numerical rank determination)
 rsvd      — Halko randomized-SVD baseline
 manifold  — fixed-rank Riemannian geometry (eqs. 24-27)
 rsgd      — Algorithm 4 (Riemannian mini-batch SGD for similarity learning)
-linop     — matvec-closure operator abstraction
+operators — pytree operator algebra (DenseOp, LowRankOp, SumOp, ...)
+linop     — legacy matvec-closure operator abstraction (deprecated)
 tridiag   — B^T B assembly + eigh
+
+The per-solver entry points below (``fsvd``, ``rsvd``, ``numerical_rank``)
+are kept as deprecated shims; new code should go through the
+``repro.api`` facade (``factorize`` / ``estimate_rank`` + ``SVDSpec``).
 """
-from repro.core.fsvd import FSVDResult, fsvd
+import functools
+import warnings
+
+from repro.core.fsvd import FSVDResult, fsvd as _fsvd_impl
 from repro.core.gk import GKResult, gk_bidiag, gk_bidiag_host
 from repro.core.linop import LinOp, from_dense, from_factors
-from repro.core.rank import RankResult, numerical_rank
-from repro.core.rsvd import RSVDResult, rsvd
+from repro.core.operators import (DenseOp, LowRankOp, Operator, ScaledOp,
+                                  SumOp, TransposedOp, as_operator,
+                                  register_operator)
+from repro.core.rank import RankResult, numerical_rank as _rank_impl
+from repro.core.rsvd import RSVDResult, rsvd as _rsvd_impl
+
+
+def _deprecated(fn, replacement: str):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.{fn.__name__}(...) is a deprecated entry point; "
+            f"use {replacement} (repro.api).", DeprecationWarning,
+            stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper
+
+
+fsvd = _deprecated(_fsvd_impl, "factorize(A, SVDSpec(method='fsvd', ...))")
+rsvd = _deprecated(_rsvd_impl, "factorize(A, SVDSpec(method='rsvd', ...))")
+numerical_rank = _deprecated(_rank_impl, "estimate_rank(A, SVDSpec(...))")
 
 __all__ = [
     "FSVDResult", "fsvd", "GKResult", "gk_bidiag", "gk_bidiag_host",
     "LinOp", "from_dense", "from_factors", "RankResult", "numerical_rank",
     "RSVDResult", "rsvd",
+    "Operator", "DenseOp", "LowRankOp", "SumOp", "ScaledOp", "TransposedOp",
+    "as_operator", "register_operator",
 ]

@@ -1,0 +1,36 @@
+"""One PRNG-key policy for every solver (re-exported by ``repro.api``).
+
+The seed handled implicit keys inconsistently: ``rsvd`` silently fell back
+to ``PRNGKey(0)`` while ``gk_bidiag`` did the same only when no warm-start
+vector was given, with no signal either way.  Every entry point now funnels
+through :func:`resolve_key`, which keeps the deterministic default (exact
+reproducibility of the paper tables) but *warns* so implicit seeding is
+always visible.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+import jax
+
+IMPLICIT_KEY_MSG = (
+    "{caller}: no PRNG key was supplied; falling back to "
+    "jax.random.PRNGKey(0). Pass key= explicitly (or a warm-start q1) to "
+    "silence this warning and control reproducibility."
+)
+
+
+class ImplicitKeyWarning(UserWarning):
+    """Raised (as a warning) when a solver self-seeds with PRNGKey(0)."""
+
+
+def resolve_key(key: Optional[jax.Array], *, caller: str = "solver",
+                warn: bool = True) -> jax.Array:
+    """Return ``key`` or the deterministic default, warning on the latter."""
+    if key is None:
+        if warn:
+            warnings.warn(IMPLICIT_KEY_MSG.format(caller=caller),
+                          ImplicitKeyWarning, stacklevel=3)
+        return jax.random.PRNGKey(0)
+    return key

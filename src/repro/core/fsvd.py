@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.gk as gk_mod
-from repro.core.linop import LinOp, from_dense
+from repro.core.linop import LinOp
+from repro.core.operators import DenseOp, Operator, as_operator
 from repro.core.tridiag import btb_eigh
 
 Array = jax.Array
@@ -31,7 +32,7 @@ class FSVDResult(NamedTuple):
     breakdown: Array
 
 
-def _assemble(op: LinOp, res: gk_mod.GKResult, r: int) -> FSVDResult:
+def _assemble(op, res: gk_mod.GKResult, r: int) -> FSVDResult:
     theta, G = btb_eigh(res.alphas, res.betas, res.kprime)
     r = min(r, res.alphas.shape[0])
     theta_r = theta[:r]
@@ -49,7 +50,7 @@ def _assemble(op: LinOp, res: gk_mod.GKResult, r: int) -> FSVDResult:
 
 
 def fsvd(
-    A: LinOp | Array,
+    A: Operator | LinOp | Array,
     r: int,
     k: Optional[int] = None,
     *,
@@ -67,8 +68,7 @@ def fsvd(
     slack beyond r for the top-r Ritz values to converge (paper uses e.g.
     k=550 for r=100).  ``host_loop=True`` uses the early-exit host loop.
     """
-    if not isinstance(A, LinOp):
-        A = from_dense(A)
+    A = as_operator(A)
     if k is None:
         k = min(4 * r, min(A.shape))
     k = max(k, r)
@@ -83,14 +83,14 @@ def fsvd_dense_reconstruct(out: FSVDResult) -> Array:
     return (out.U * out.s[None, :]) @ out.V.T
 
 
-def truncated_svd_errors(A: LinOp | Array, out: FSVDResult) -> dict:
-    """The paper's Table-2 error metrics for a computed partial SVD."""
-    if not isinstance(A, LinOp):
-        Aop = from_dense(A)
-        dense = A
-    else:
-        Aop = A
-        dense = None
+def truncated_svd_errors(A: Operator | LinOp | Array, out) -> dict:
+    """The paper's Table-2 error metrics for a computed partial SVD.
+
+    ``out`` is any (U, s, V, ...) result — FSVDResult, RSVDResult or an
+    ``repro.api`` Factorization.
+    """
+    Aop = as_operator(A)
+    dense = Aop.A if isinstance(Aop, DenseOp) else None
     # relative error: ||A^T U - V Sigma||_F / ||Sigma||_F
     ATU = Aop.rmatmat(out.U)
     rel = jnp.linalg.norm(ATU - out.V * out.s[None, :]) / jnp.linalg.norm(out.s)

@@ -21,7 +21,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linop import LinOp, from_dense
+from repro.core._keys import resolve_key
+from repro.core.linop import LinOp
+from repro.core.operators import Operator, as_operator
 
 Array = jax.Array
 
@@ -55,7 +57,7 @@ def start_vector(key: jax.Array, m: int, dtype=jnp.float32) -> Array:
 
 
 def gk_bidiag(
-    op: LinOp | Array,
+    op: Operator | LinOp | Array,
     k: int,
     *,
     key: Optional[jax.Array] = None,
@@ -66,8 +68,7 @@ def gk_bidiag(
     dtype=None,
 ) -> GKResult:
     """In-graph GK bidiagonalization (fixed k iterations, breakdown masking)."""
-    if not isinstance(op, LinOp):
-        op = from_dense(op)
+    op = as_operator(op)
     m, n = op.shape
     if k > min(m, n):
         k = min(m, n)
@@ -75,8 +76,7 @@ def gk_bidiag(
         dtype = jnp.promote_types(op.dtype, jnp.float32)
 
     if q1 is None:
-        if key is None:
-            key = jax.random.PRNGKey(0)
+        key = resolve_key(key, caller="gk_bidiag")
         q1 = start_vector(key, m, dtype)
     q1 = q1.astype(dtype)
 
@@ -158,7 +158,7 @@ def gk_bidiag(
 
 
 def gk_bidiag_host(
-    op: LinOp | Array,
+    op: Operator | LinOp | Array,
     k: int,
     *,
     key: Optional[jax.Array] = None,
@@ -169,8 +169,7 @@ def gk_bidiag_host(
     dtype=None,
 ) -> GKResult:
     """Host-loop GK with real early exit (paper-style wall-time behaviour)."""
-    if not isinstance(op, LinOp):
-        op = from_dense(op)
+    op = as_operator(op)
     m, n = op.shape
     if k > min(m, n):
         k = min(m, n)
@@ -178,8 +177,7 @@ def gk_bidiag_host(
         dtype = jnp.promote_types(op.dtype, jnp.float32)
 
     if q1 is None:
-        if key is None:
-            key = jax.random.PRNGKey(0)
+        key = resolve_key(key, caller="gk_bidiag_host")
         q1 = start_vector(key, m, dtype)
     q1 = q1.astype(dtype)
 

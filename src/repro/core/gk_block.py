@@ -25,7 +25,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linop import LinOp, from_dense
+from repro.core._keys import resolve_key
+from repro.core.linop import LinOp
+from repro.core.operators import Operator, as_operator
 
 Array = jax.Array
 
@@ -45,7 +47,7 @@ def _reorth(W: Array, basis: Array, passes: int) -> Array:
 
 
 def gk_block_host(
-    op: LinOp | Array,
+    op: Operator | LinOp | Array,
     block: int,
     steps: int,
     *,
@@ -62,13 +64,11 @@ def gk_block_host(
     K = Qᵀ A P is block-bidiagonal with diagonal blocks A_j and subdiagonal
     blocks B_{j+1}.
     """
-    if not isinstance(op, LinOp):
-        op = from_dense(op)
+    op = as_operator(op)
     m, n = op.shape
     b = min(block, m, n)
     steps = min(steps, max(min(m, n) // b, 1))
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = resolve_key(key, caller="gk_block_host")
 
     Q1, _ = jnp.linalg.qr(jax.random.normal(key, (m, b), jnp.float32))
     Z = op.rmatmat(Q1).astype(jnp.float32)               # (n, b)
@@ -121,7 +121,7 @@ class FSVDBlockResult(NamedTuple):
 
 
 def fsvd_block(
-    A: LinOp | Array,
+    A: Operator | LinOp | Array,
     r: int,
     *,
     block: Optional[int] = None,
@@ -134,8 +134,7 @@ def fsvd_block(
     ``block`` defaults to an MXU-friendly width ≥ r; ``steps`` to enough
     slab captures for the top-r Ritz values to converge.
     """
-    if not isinstance(A, LinOp):
-        A = from_dense(A)
+    A = as_operator(A)
     m, n = A.shape
     if block is None:
         block = min(max(r, 32), min(m, n))

@@ -67,62 +67,43 @@ class LinOp:
         return jax.vmap(self.rmv, in_axes=1, out_axes=1)(Q)
 
 
-def from_dense(A: Array, use_kernels: bool = False) -> LinOp:
-    """Dense-matrix operator; ``use_kernels=True`` backs the fused Lanczos
-    matvecs with the Pallas kernels (``repro.kernels``)."""
-    A = jnp.asarray(A)
-    m, n = A.shape
+def from_dense(A: Array, use_kernels: bool = False):
+    """Deprecated: use ``repro.core.operators.DenseOp`` (or pass the raw
+    array straight to the solvers / ``repro.api.factorize``).
 
-    def mv(p):
-        return A @ p
+    ``use_kernels=True`` maps to ``DenseOp(..., backend="pallas")``.
+    """
+    import warnings
 
-    def rmv(q):
-        return A.T @ q
-
-    mv_f = rmv_f = None
-    if use_kernels:
-        from repro.kernels import ops as kops
-
-        def mv_f(p, y, alpha):
-            return kops.matvec_fused(A, p, y, alpha)
-
-        def rmv_f(q, y, beta):
-            return kops.rmatvec_fused(A, q, y, beta)
-
-    return LinOp((m, n), mv, rmv, dtype=A.dtype,
-                 _mv_fused=mv_f, _rmv_fused=rmv_f)
+    from repro.core.operators import DenseOp
+    warnings.warn(
+        "from_dense() is deprecated; construct repro.core.operators.DenseOp"
+        "(A, backend='pallas'|'xla') instead (operators are pytrees and "
+        "cross jit/vmap boundaries).", DeprecationWarning, stacklevel=2)
+    return DenseOp(jnp.asarray(A),
+                   backend="pallas" if use_kernels else "xla")
 
 
 def from_factors(U: Array, s: Array, Vt: Array,
                  extra: Optional[list[tuple[Array, Array]]] = None,
-                 scale: float | Array = 1.0) -> LinOp:
-    """Operator  scale * (U @ diag(s) @ Vt  +  sum_i  L_i @ R_i).
+                 scale: float | Array = 1.0):
+    """Deprecated: use ``repro.core.operators.LowRankOp``.
 
-    ``extra`` is a list of (L_i (m,k_i), R_i (k_i,n)) low-rank addends — this
-    expresses ``W - eta * Z`` (point minus tangent step) without ever forming
-    the dense (m, n) matrix.
+    Operator  scale * (U @ diag(s) @ Vt  +  sum_i  L_i @ R_i)  where
+    ``extra`` is a list of (L_i (m,k_i), R_i (k_i,n)) low-rank addends.
     """
-    U, s, Vt = jnp.asarray(U), jnp.asarray(s), jnp.asarray(Vt)
-    m = U.shape[0]
-    n = Vt.shape[1]
-    extra = extra or []
+    import warnings
 
-    def mv(p):
-        y = U @ (s * (Vt @ p))
-        for L, R in extra:
-            y = y + L @ (R @ p)
-        return scale * y
-
-    def rmv(q):
-        y = Vt.T @ (s * (U.T @ q))
-        for L, R in extra:
-            y = y + R.T @ (L.T @ q)
-        return scale * y
-
-    return LinOp((m, n), mv, rmv, dtype=U.dtype)
+    from repro.core.operators import LowRankOp
+    warnings.warn(
+        "from_factors() is deprecated; construct repro.core.operators."
+        "LowRankOp(U, s, Vt, extra=..., scale=...) instead.",
+        DeprecationWarning, stacklevel=2)
+    return LowRankOp(jnp.asarray(U), jnp.asarray(s), jnp.asarray(Vt),
+                     extra=tuple(extra or ()), scale=scale)
 
 
-def to_dense(op: LinOp) -> Array:
-    """Materialize (tests only)."""
+def to_dense(op) -> Array:
+    """Materialize (tests only).  Works for LinOp and Operator alike."""
     eye = jnp.eye(op.n, dtype=op.dtype)
     return op.matmat(eye)

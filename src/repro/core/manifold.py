@@ -21,8 +21,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.fsvd import fsvd as _fsvd
-from repro.core.linop import LinOp, from_factors
+from repro.core.operators import LowRankOp, Operator
 
 Array = jax.Array
 
@@ -66,40 +65,37 @@ def to_dense(W: FixedRankPoint) -> Array:
 
 
 def as_linop(W: FixedRankPoint, tangent: Optional[TangentVector] = None,
-             tangent_scale: float | Array = 1.0) -> LinOp:
-    """LinOp of W (+ tangent_scale * xi) without densifying.
+             tangent_scale: float | Array = 1.0) -> LowRankOp:
+    """Pytree operator of W (+ tangent_scale * xi) without densifying.
 
     ``W + c xi = U (diag(s) + c M) V^T + c U_p V^T + c U V_p^T`` — each term
-    is an explicit low-rank factor pair.
+    is an explicit low-rank factor pair, carried as a ``LowRankOp`` so the
+    retraction threads through jit/vmap whole.  (Name kept from the closure
+    era; ``as_operator`` is an alias.)
     """
     if tangent is None:
-        return from_factors(W.U, W.s, W.V.T)
+        return LowRankOp(W.U, W.s, W.V.T)
     c = tangent_scale
     mid = jnp.diag(W.s) + c * tangent.M
-
-    def mv(p):
-        vtp = W.V.T @ p
-        return W.U @ (mid @ vtp) + c * (tangent.Up @ vtp) \
-            + c * (W.U @ (tangent.Vp.T @ p))
-
-    def rmv(q):
-        utq = W.U.T @ q
-        return W.V @ (mid.T @ utq) + c * (tangent.Vp @ utq) \
-            + c * (W.V @ (tangent.Up.T @ q))
-
-    m, n = W.shape
-    return LinOp((m, n), mv, rmv, dtype=W.U.dtype)
+    ones = jnp.ones_like(W.s)
+    return LowRankOp(W.U @ mid, ones, W.V.T,
+                     extra=((c * tangent.Up, W.V.T),
+                            (W.U, c * tangent.Vp.T)))
 
 
-def project_tangent(W: FixedRankPoint, G: LinOp | Array) -> TangentVector:
+as_operator = as_linop
+
+
+def project_tangent(W: FixedRankPoint, G: Operator | Array) -> TangentVector:
     """Riemannian gradient / tangent projection (eq. 27).
 
     ``P_W(G) = UU^T G VV^T + (I-UU^T) G VV^T + UU^T G (I-VV^T)`` carried as
     (M, U_p, V_p):  M = U^T G V;  U_p = G V - U M;  V_p = G^T U - V M^T.
-    Only needs G through matmats with r columns — G may be a LinOp (e.g. the
-    sparse-sampled Euclidean gradient of the RSL loss).
+    Only needs G through matmats with r columns — G may be any operator
+    (e.g. the sparse-sampled Euclidean gradient of the RSL loss, carried as
+    a ``LowRankOp``/``SumOp``) or a dense array.
     """
-    if isinstance(G, LinOp):
+    if hasattr(G, "matmat"):          # Operator / legacy LinOp
         GV = G.matmat(W.V)            # (m, r)
         GtU = G.rmatmat(W.U)          # (n, r)
     else:
@@ -146,10 +142,12 @@ def retract_fsvd(W: FixedRankPoint, xi: TangentVector, step: float | Array,
     ``fsvd_iters`` is the paper's inner-iteration knob ("lower iter" 20 vs
     "higher iter" 35, Fig 2).
     """
+    from repro.api import SVDSpec, factorize
     r = W.rank
     op = as_linop(W, xi, step)
     k = min(max(fsvd_iters, r + 2), min(op.shape))
-    out = _fsvd(op, r, k, key=key, reorth_passes=reorth_passes)
+    out = factorize(op, SVDSpec(method="fsvd", rank=r, max_iters=k,
+                                reorth_passes=reorth_passes), key=key)
     return FixedRankPoint(out.U, out.s, out.V)
 
 

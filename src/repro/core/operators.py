@@ -1,0 +1,416 @@
+"""Pytree-registered operator algebra.
+
+The paper's algorithms touch A only through ``A @ p`` / ``A.T @ q``; the seed
+expressed that as closure-based :class:`~repro.core.linop.LinOp` objects,
+which work but cannot cross ``jit`` / ``vmap`` / ``shard_map`` boundaries
+(closures are not pytrees).  This module replaces them with small
+dataclass operators whose array fields are pytree leaves:
+
+  * ``DenseOp(A, backend=...)``    — in-memory matrix; ``backend="pallas"``
+    routes the fused Lanczos matvecs through ``repro.kernels`` (subsumes the
+    old ``from_dense(use_kernels=True)`` flag).
+  * ``LowRankOp(U, s, Vt, extra=..., scale=...)`` — ``scale * (U diag(s) Vt
+    + Σ L_i R_i)`` never materialized (the RSL gradient / retraction
+    operand).
+  * ``SumOp``, ``ScaledOp``, ``TransposedOp`` — closure of the algebra under
+    ``A + B``, ``alpha * A`` and ``A.T``.
+
+Because operators are pytrees, ``jax.vmap(factorize_impl)`` over a stacked
+``DenseOp`` yields a batched partial SVD with no extra code, and a sharded
+operator (``repro.distributed.ShardedOp``) threads through ``jit`` whole.
+
+All operators satisfy the same duck protocol as ``LinOp`` (``shape``,
+``dtype``, ``mv``, ``rmv``, ``mv_fused``, ``rmv_fused``, ``matmat``,
+``rmatmat``) so the GK / F-SVD / rank cores run unchanged on either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_BACKENDS = ("xla", "pallas")
+
+
+def register_operator(cls):
+    """Register an operator dataclass as a pytree.
+
+    ``_data_fields`` become children (traced/vmapped/sharded);
+    ``_meta_fields`` become static aux data (must be hashable).  Unflatten
+    bypasses no logic — constructors must stay dumb so tree transforms can
+    pass placeholders.  Extensions (e.g. ``repro.distributed.ShardedOp``)
+    use this too.
+    """
+    data = cls._data_fields
+    meta = cls._meta_fields
+
+    def flatten(op):
+        return (tuple(getattr(op, f) for f in data),
+                tuple(getattr(op, f) for f in meta))
+
+    def unflatten(aux, children):
+        kw = dict(zip(data, children))
+        kw.update(zip(meta, aux))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+class Operator:
+    """Base class: linear-map protocol + algebra sugar.
+
+    Subclasses define ``shape``, ``dtype``, ``mv``, ``rmv`` and may override
+    the fused three-term forms, the block forms and ``T`` with cheaper
+    specializations.
+    """
+
+    _data_fields: Tuple[str, ...] = ()
+    _meta_fields: Tuple[str, ...] = ()
+
+    # --- protocol -----------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        raise NotImplementedError
+
+    @property
+    def dtype(self):
+        raise NotImplementedError
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    def mv(self, p: Array) -> Array:
+        raise NotImplementedError
+
+    def rmv(self, q: Array) -> Array:
+        raise NotImplementedError
+
+    def mv_fused(self, p: Array, y: Array, alpha) -> Array:
+        """Lanczos three-term form ``A p − alpha y``."""
+        return self.mv(p) - alpha * y
+
+    def rmv_fused(self, q: Array, y: Array, beta) -> Array:
+        return self.rmv(q) - beta * y
+
+    def matmat(self, V: Array) -> Array:
+        return jax.vmap(self.mv, in_axes=1, out_axes=1)(V)
+
+    def rmatmat(self, Q: Array) -> Array:
+        return jax.vmap(self.rmv, in_axes=1, out_axes=1)(Q)
+
+    def to_dense(self) -> Array:
+        return self.matmat(jnp.eye(self.n, dtype=self.dtype))
+
+    # --- algebra ------------------------------------------------------
+    @property
+    def T(self) -> "Operator":
+        return TransposedOp(self)
+
+    def __matmul__(self, x):
+        if isinstance(x, Operator):
+            return NotImplemented
+        x = jnp.asarray(x)
+        return self.mv(x) if x.ndim == 1 else self.matmat(x)
+
+    def _check_same_shape(self, other: "Operator"):
+        if tuple(self.shape) != tuple(other.shape):
+            raise ValueError(
+                f"operator shapes disagree: {tuple(self.shape)} + "
+                f"{tuple(other.shape)}")
+        return other
+
+    def __add__(self, other):
+        return SumOp((self, self._check_same_shape(as_operator(other))))
+
+    def __radd__(self, other):
+        return SumOp((self._check_same_shape(as_operator(other)), self))
+
+    def __sub__(self, other):
+        return SumOp((self, ScaledOp(
+            -1.0, self._check_same_shape(as_operator(other)))))
+
+    def __mul__(self, alpha):
+        return ScaledOp(alpha, self)
+
+    __rmul__ = __mul__
+
+    def __neg__(self):
+        return ScaledOp(-1.0, self)
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class DenseOp(Operator):
+    """In-memory (m, n) matrix.  ``backend="pallas"`` backs the fused
+    Lanczos matvecs with the single-pass Pallas kernels (A streamed through
+    VMEM once per half-iteration); ``"xla"`` composes plain GEMVs."""
+
+    A: Array
+    backend: str = "xla"
+
+    _data_fields = ("A",)
+    _meta_fields = ("backend",)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.A.shape)
+
+    @property
+    def dtype(self):
+        return self.A.dtype
+
+    def mv(self, p):
+        return self.A @ p
+
+    def rmv(self, q):
+        return self.A.T @ q
+
+    def mv_fused(self, p, y, alpha):
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            return kops.matvec_fused(self.A, p, y, alpha)
+        return self.A @ p - alpha * y
+
+    def rmv_fused(self, q, y, beta):
+        if self.backend == "pallas":
+            from repro.kernels import ops as kops
+            return kops.rmatvec_fused(self.A, q, y, beta)
+        return self.A.T @ q - beta * y
+
+    def matmat(self, V):
+        return self.A @ V
+
+    def rmatmat(self, Q):
+        return self.A.T @ Q
+
+    def to_dense(self):
+        return self.A
+
+    @property
+    def T(self):
+        return DenseOp(self.A.T, backend=self.backend)
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class LowRankOp(Operator):
+    """``scale * (U diag(s) Vt + Σ_i L_i R_i)`` — never materialized.
+
+    ``extra`` is a tuple of (L_i (m, k_i), R_i (k_i, n)) addend factor pairs;
+    this expresses e.g. ``W − eta Z`` (manifold point minus tangent step) or
+    the RSL batch gradient ``X_bᵀ diag(c) V_b + wd · W``.
+    """
+
+    U: Array                      # (m, r)
+    s: Array                      # (r,)
+    Vt: Array                     # (r, n)
+    extra: Tuple[Tuple[Array, Array], ...] = ()
+    scale: Any = 1.0              # python scalar or 0-d array (leaf)
+
+    _data_fields = ("U", "s", "Vt", "extra", "scale")
+    _meta_fields = ()
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.U.shape[0], self.Vt.shape[1])
+
+    @property
+    def dtype(self):
+        return self.U.dtype
+
+    def mv(self, p):
+        y = self.U @ (self.s * (self.Vt @ p))
+        for L, R in self.extra:
+            y = y + L @ (R @ p)
+        return self.scale * y
+
+    def rmv(self, q):
+        y = self.Vt.T @ (self.s * (self.U.T @ q))
+        for L, R in self.extra:
+            y = y + R.T @ (L.T @ q)
+        return self.scale * y
+
+    def matmat(self, V):
+        y = self.U @ (self.s[:, None] * (self.Vt @ V))
+        for L, R in self.extra:
+            y = y + L @ (R @ V)
+        return self.scale * y
+
+    def rmatmat(self, Q):
+        y = self.Vt.T @ (self.s[:, None] * (self.U.T @ Q))
+        for L, R in self.extra:
+            y = y + R.T @ (L.T @ Q)
+        return self.scale * y
+
+    @property
+    def T(self):
+        return LowRankOp(self.Vt.T, self.s, self.U.T,
+                         extra=tuple((R.T, L.T) for L, R in self.extra),
+                         scale=self.scale)
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class SumOp(Operator):
+    """A + B (+ ...): matvecs distribute over the terms."""
+
+    terms: Tuple[Operator, ...]
+
+    _data_fields = ("terms",)
+    _meta_fields = ()
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.terms[0].shape
+
+    @property
+    def dtype(self):
+        return jnp.result_type(*(t.dtype for t in self.terms))
+
+    def mv(self, p):
+        y = self.terms[0].mv(p)
+        for t in self.terms[1:]:
+            y = y + t.mv(p)
+        return y
+
+    def rmv(self, q):
+        y = self.terms[0].rmv(q)
+        for t in self.terms[1:]:
+            y = y + t.rmv(q)
+        return y
+
+    def matmat(self, V):
+        y = self.terms[0].matmat(V)
+        for t in self.terms[1:]:
+            y = y + t.matmat(V)
+        return y
+
+    def rmatmat(self, Q):
+        y = self.terms[0].rmatmat(Q)
+        for t in self.terms[1:]:
+            y = y + t.rmatmat(Q)
+        return y
+
+    @property
+    def T(self):
+        return SumOp(tuple(t.T for t in self.terms))
+
+    def __add__(self, other):     # flatten nested sums
+        other = self._check_same_shape(as_operator(other))
+        more = other.terms if isinstance(other, SumOp) else (other,)
+        return SumOp(self.terms + more)
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class ScaledOp(Operator):
+    """alpha * A (alpha a scalar leaf — may be traced)."""
+
+    alpha: Any
+    op: Operator
+
+    _data_fields = ("alpha", "op")
+    _meta_fields = ()
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.op.shape
+
+    @property
+    def dtype(self):
+        return self.op.dtype
+
+    def mv(self, p):
+        return self.alpha * self.op.mv(p)
+
+    def rmv(self, q):
+        return self.alpha * self.op.rmv(q)
+
+    def matmat(self, V):
+        return self.alpha * self.op.matmat(V)
+
+    def rmatmat(self, Q):
+        return self.alpha * self.op.rmatmat(Q)
+
+    @property
+    def T(self):
+        return ScaledOp(self.alpha, self.op.T)
+
+    def __mul__(self, a):
+        return ScaledOp(a * self.alpha, self.op)
+
+    __rmul__ = __mul__
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class TransposedOp(Operator):
+    """A.T for operators without a cheaper specialized transpose."""
+
+    inner: Operator
+
+    _data_fields = ("inner",)
+    _meta_fields = ()
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        m, n = self.inner.shape
+        return (n, m)
+
+    @property
+    def dtype(self):
+        return self.inner.dtype
+
+    def mv(self, p):
+        return self.inner.rmv(p)
+
+    def rmv(self, q):
+        return self.inner.mv(q)
+
+    def mv_fused(self, p, y, alpha):
+        return self.inner.rmv_fused(p, y, alpha)
+
+    def rmv_fused(self, q, y, beta):
+        return self.inner.mv_fused(q, y, beta)
+
+    def matmat(self, V):
+        return self.inner.rmatmat(V)
+
+    def rmatmat(self, Q):
+        return self.inner.matmat(Q)
+
+    @property
+    def T(self):
+        return self.inner
+
+
+def as_operator(A, *, backend: str = "xla"):
+    """Coerce to the operator protocol.
+
+    Operators and legacy ``LinOp`` closures pass through (both satisfy the
+    same duck protocol); raw arrays wrap into a :class:`DenseOp`.
+    """
+    if isinstance(A, Operator):
+        return A
+    if hasattr(A, "mv") and hasattr(A, "rmv"):   # LinOp & look-alikes
+        return A
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+    return DenseOp(jnp.asarray(A), backend=backend)
+
+
+def to_dense(op) -> Array:
+    """Materialize any protocol object (tests / small operands only)."""
+    if isinstance(op, Operator):
+        return op.to_dense()
+    return op.matmat(jnp.eye(op.n, dtype=op.dtype))

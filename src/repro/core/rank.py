@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.gk as gk_mod
-from repro.core.linop import LinOp, from_dense
+from repro.core.linop import LinOp
+from repro.core.operators import Operator, as_operator
 from repro.core.tridiag import btb_eigh
 
 Array = jax.Array
@@ -25,7 +26,7 @@ class RankResult(NamedTuple):
 
 
 def numerical_rank(
-    A: LinOp | Array,
+    A: Operator | LinOp | Array,
     *,
     max_iters: Optional[int] = None,
     eps: float = 1e-8,
@@ -44,8 +45,7 @@ def numerical_rank(
     float32-safe reading of the paper's absolute 1e-8 (the paper ran float64
     NumPy where absolute thresholds are meaningful).
     """
-    if not isinstance(A, LinOp):
-        A = from_dense(A)
+    A = as_operator(A)
     if max_iters is None:
         max_iters = min(A.shape)
     max_iters = min(max_iters, min(A.shape))

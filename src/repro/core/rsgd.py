@@ -8,7 +8,8 @@ Scale design: the mini-batch Euclidean gradient is
 
     Gr = (1/b) X_b^T diag(c) V_b  + wd * W,     c_i = dl/dyhat_i * ...,
 
-i.e. rank <= b + r — it is carried as a ``LinOp`` and *never* materialized,
+i.e. rank <= b + r — it is carried as a pytree operator
+(``LowRankOp`` / ``SumOp``) and *never* materialized,
 so a 1e8-entry W (the paper's "huge matrix" regime) trains with O((d1+d2)
 (b + r)) memory per step.  The tangent projection (Alg 4 line 8) needs Gr
 only through r-column matmats, and the retraction (line 9) runs F-SVD on the
@@ -34,8 +35,8 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.manifold as mf
-from repro.core.fsvd import fsvd as _fsvd
-from repro.core.linop import LinOp
+from repro.api import SVDSpec, factorize
+from repro.core.operators import LowRankOp, Operator
 
 Array = jax.Array
 
@@ -68,16 +69,19 @@ LOSSES: dict[str, Callable] = {"hinge": hinge_loss, "logistic": logistic_loss}
 
 class BatchGrad(NamedTuple):
     loss: Array       # () mean batch loss (without the wd term)
-    op: LinOp         # implicit Euclidean gradient (d1, d2)
+    op: Operator      # implicit Euclidean gradient (d1, d2), a pytree
 
 
 def batch_euclidean_grad(W: mf.FixedRankPoint, Xb: Array, Vb: Array, y: Array,
                          loss: str = "hinge", weight_decay: float = 0.0
                          ) -> BatchGrad:
-    """Gr = (1/b) X_b^T diag(c) V_b + wd * W as a LinOp.
+    """Gr = (1/b) X_b^T diag(c) V_b + wd * W through the operator algebra.
 
     Xb: (b, d1), Vb: (b, d2), y: (b,) in {-1, +1}.
-    ``f_W(x_i, v_i) = x_i^T W v_i`` evaluated through W's factors.
+    ``f_W(x_i, v_i) = x_i^T W v_i`` evaluated through W's factors.  The
+    data term is ``LowRankOp(Xbᵀ, c, Vb)`` (rank ≤ b); weight decay adds
+    ``wd * LowRankOp(U, s, Vᵀ)`` (rank r) — the whole gradient is a pytree
+    ``SumOp`` that crosses the jit boundary of the training step.
     """
     b = Xb.shape[0]
     loss_fn = LOSSES[loss]
@@ -88,21 +92,9 @@ def batch_euclidean_grad(W: mf.FixedRankPoint, Xb: Array, Vb: Array, y: Array,
     per_pair, dl = loss_fn(yhat, y)
     c = dl / b                         # (b,)
 
-    def mv(p):                         # Gr @ p : (d2,) -> (d1,)
-        t = Vb @ p                     # (b,)
-        out = Xb.T @ (c * t)
-        if weight_decay:
-            out = out + weight_decay * (W.U @ (W.s * (W.V.T @ p)))
-        return out
-
-    def rmv(q):                        # Gr^T @ q : (d1,) -> (d2,)
-        t = Xb @ q
-        out = Vb.T @ (c * t)
-        if weight_decay:
-            out = out + weight_decay * (W.V @ (W.s * (W.U.T @ q)))
-        return out
-
-    op = LinOp((Xb.shape[1], Vb.shape[1]), mv, rmv, dtype=Xb.dtype)
+    op: Operator = LowRankOp(Xb.T, c, Vb)          # (d1, d2), rank <= b
+    if weight_decay:
+        op = op + weight_decay * LowRankOp(W.U, W.s, W.V.T)
     return BatchGrad(per_pair.mean(), op)
 
 
@@ -131,8 +123,10 @@ def rsgd_step(W: mf.FixedRankPoint, Xb: Array, Vb: Array, y: Array,
         # literal Alg 4 lines 7-8: factor the gradient itself with F-SVD,
         # project Gr onto the tangent cone at its own top-r factors.
         r = W.rank
-        g_out = _fsvd(bg.op, r, max(opts.fsvd_iters, r + 2), key=key,
-                      reorth_passes=opts.reorth_passes)
+        g_out = factorize(
+            bg.op, SVDSpec(method="fsvd", rank=r,
+                           max_iters=max(opts.fsvd_iters, r + 2),
+                           reorth_passes=opts.reorth_passes), key=key)
         Wg = mf.FixedRankPoint(g_out.U, g_out.s, g_out.V)
         xi = mf.project_tangent(Wg, bg.op)
         # re-express in the tangent space at W for the retraction step

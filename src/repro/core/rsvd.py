@@ -9,7 +9,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linop import LinOp, from_dense
+from repro.core._keys import resolve_key
+from repro.core.linop import LinOp
+from repro.core.operators import Operator, as_operator
 
 Array = jax.Array
 
@@ -21,7 +23,7 @@ class RSVDResult(NamedTuple):
 
 
 def rsvd(
-    A: LinOp | Array,
+    A: Operator | LinOp | Array,
     k: int,
     *,
     p: int = 10,
@@ -35,13 +37,11 @@ def rsvd(
     experiments push it to hundreds when the spectrum decays slowly).
     ``power_iters`` = q subspace/power iterations with QR re-orthonormalization.
     """
-    if not isinstance(A, LinOp):
-        A = from_dense(A)
+    A = as_operator(A)
     m, n = A.shape
     if dtype is None:
         dtype = jnp.promote_types(A.dtype, jnp.float32)
-    if key is None:
-        key = jax.random.PRNGKey(0)
+    key = resolve_key(key, caller="rsvd")
     l = min(k + p, min(m, n))
 
     Omega = jax.random.normal(key, (n, l), dtype)

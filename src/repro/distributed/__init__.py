@@ -1,6 +1,12 @@
 """Distribution layer: logical-axis partitioning rules, pod-sharded GK
-matvecs, distributed F-SVD, and Krylov low-rank gradient compression."""
+matvecs (``ShardedOp``), distributed F-SVD through the ``repro.api``
+facade, and Krylov low-rank gradient compression."""
+from repro.distributed.matvec import (ShardedOp, place_operator,
+                                      sharded_operator)
 from repro.distributed.partition import (logical_to_spec, param_shardings,
                                          spec_for_batch)
 
-__all__ = ["logical_to_spec", "param_shardings", "spec_for_batch"]
+__all__ = [
+    "logical_to_spec", "param_shardings", "spec_for_batch",
+    "ShardedOp", "place_operator", "sharded_operator",
+]

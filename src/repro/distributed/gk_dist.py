@@ -1,11 +1,18 @@
 """Distributed Algorithms 1-3: GK / F-SVD / rank on a pod-sharded operator.
 
-Thin composition: ``sharded_operator`` supplies matvecs-with-psum; the
-*same* ``repro.core`` code runs unmodified on top (the basis matrices P, Q
-are GSPMD-sharded over the vector axes automatically).  This is the paper's
+Thin composition: ``ShardedOp`` supplies matvecs-with-psum; the *same*
+``repro.core`` solvers run unmodified on top (the basis matrices P, Q are
+GSPMD-sharded over the vector axes automatically).  This is the paper's
 whole point carried to cluster scale: the algorithm only ever touches A
 through matvecs, so distribution is a property of the operator, not of the
 algorithm.
+
+Importing this module registers the ``"fsvd_sharded"`` solver with
+``repro.api``; it requires a :class:`ShardedOp` operand —
+``factorize(ShardedOp(place_operator(A, mesh), mesh), spec)`` or the
+:func:`sharded_fsvd` convenience, which places the matrix first.  Simpler
+still: pass a ``ShardedOp`` to the plain ``"fsvd"`` method — the facade is
+operator-agnostic.
 """
 from __future__ import annotations
 
@@ -14,26 +21,91 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh
 
-from repro.core.fsvd import FSVDResult, fsvd as _fsvd
+from repro.api import SVDSpec, estimate_rank, factorize, register_solver
+from repro.api.results import Factorization, RankEstimate
+from repro.api.solvers import solve_fsvd
 from repro.core.gk import GKResult, gk_bidiag
-from repro.core.rank import RankResult, numerical_rank as _rank
-from repro.distributed.matvec import place_operator, sharded_operator
+from repro.distributed.matvec import ShardedOp, place_operator
 
 Array = jax.Array
 
 
+@register_solver("fsvd_sharded")
+def solve_fsvd_sharded(A, spec: SVDSpec, *, key=None, q1=None
+                       ) -> Factorization:
+    """F-SVD on a pod-sharded operator.
+
+    ``A`` must already be a :class:`ShardedOp` (use :func:`sharded_fsvd`
+    to place a dense matrix on a mesh first).  ``host_loop=None`` defaults
+    to the in-graph GK loop (a host loop round-trips device vectors every
+    iteration); an explicit ``host_loop=True`` is honored.
+    """
+    if not isinstance(A, ShardedOp):
+        raise TypeError(
+            "method='fsvd_sharded' needs a ShardedOp operand; wrap the "
+            "matrix with repro.distributed.sharded_fsvd(A, mesh, ...) or "
+            "ShardedOp(place_operator(A, mesh), mesh).")
+    out = solve_fsvd(A, spec, key=key, q1=q1)
+    return Factorization(out.U, out.s, out.V, out.iterations,
+                         out.breakdown, method="fsvd_sharded")
+
+
+def sharded_fsvd(A: Array, mesh: Mesh, spec: SVDSpec, *, key=None,
+                 q1=None) -> Factorization:
+    """Place A pod-sharded on ``mesh`` and run the facade on it."""
+    op = ShardedOp(place_operator(A, mesh), mesh)
+    return factorize(op, spec.replace(method="fsvd_sharded"), key=key, q1=q1)
+
+
+def sharded_rank(A: Array, mesh: Mesh, spec: Optional[SVDSpec] = None, *,
+                 key=None, **overrides) -> RankEstimate:
+    """Numerical rank of a pod-sharded matrix through the facade."""
+    op = ShardedOp(place_operator(A, mesh), mesh)
+    spec = (spec or SVDSpec()).replace(host_loop=False)
+    return estimate_rank(op, spec, key=key, **overrides)
+
+
+# --------------------------------------------------------------------------
+# legacy signatures (deprecated shims over the facade)
+# --------------------------------------------------------------------------
+
 def fsvd_sharded(A: Array, mesh: Mesh, r: int, k: Optional[int] = None,
-                 **kw) -> FSVDResult:
-    """Partial SVD of a pod-sharded dense matrix (Alg 2 at pod scale)."""
-    A = place_operator(A, mesh)
-    return _fsvd(sharded_operator(A, mesh), r, k, **kw)
+                 **kw) -> Factorization:
+    """Deprecated: use :func:`sharded_fsvd` with an :class:`SVDSpec`."""
+    import warnings
+    warnings.warn("fsvd_sharded(A, mesh, r, k) is deprecated; use "
+                  "sharded_fsvd(A, mesh, SVDSpec(rank=r, max_iters=k)).",
+                  DeprecationWarning, stacklevel=2)
+    key = kw.pop("key", None)
+    q1 = kw.pop("q1", None)
+    spec = SVDSpec(method="fsvd_sharded", rank=r, max_iters=k, **{
+        {"eps": "tol", "relative_eps": "relative_tol"}.get(a, a): v
+        for a, v in kw.items()})
+    return sharded_fsvd(A, mesh, spec, key=key, q1=q1)
 
 
 def gk_sharded(A: Array, mesh: Mesh, k: int, **kw) -> GKResult:
     A = place_operator(A, mesh)
-    return gk_bidiag(sharded_operator(A, mesh), k, **kw)
+    return gk_bidiag(ShardedOp(A, mesh), k, **kw)
 
 
-def rank_sharded(A: Array, mesh: Mesh, **kw) -> RankResult:
-    A = place_operator(A, mesh)
-    return _rank(sharded_operator(A, mesh), host_loop=False, **kw)
+def rank_sharded(A: Array, mesh: Mesh, **kw) -> RankEstimate:
+    """Deprecated alias of :func:`sharded_rank` (kwargs pass through in the
+    legacy ``repro.core.rank.numerical_rank`` spellings)."""
+    import warnings
+    warnings.warn("rank_sharded(A, mesh, **kw) is deprecated; use "
+                  "sharded_rank(A, mesh, SVDSpec(...)).",
+                  DeprecationWarning, stacklevel=2)
+    key = kw.pop("key", None)
+    spec = SVDSpec(
+        max_iters=kw.pop("max_iters", None),
+        tol=kw.pop("eps", 1e-8),
+        relative_tol=kw.pop("relative_eps", True),
+        reorth_passes=kw.pop("reorth_passes", 2),
+        dtype=kw.pop("dtype", None),
+    )
+    sigma_tol = kw.pop("sigma_tol", None)
+    if kw:
+        raise TypeError(f"rank_sharded() got unsupported kwargs: "
+                        f"{sorted(kw)}")
+    return sharded_rank(A, mesh, spec, key=key, sigma_tol=sigma_tol)

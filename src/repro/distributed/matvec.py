@@ -15,17 +15,23 @@ so a 1e5 x 8e4 matrix (the paper's largest, NA for dense SVD) occupies
 ~60 MB per device on a 512-chip mesh and each iteration moves only vectors.
 The fused three-term forms (− α q / − β p) are folded into the shard_map
 body so no extra HBM pass materializes the intermediate.
+
+``ShardedOp`` is a pytree operator (``repro.core.operators``): the sharded
+matrix is the only leaf, the mesh rides as static aux data, so a whole
+F-SVD solve over it jits as one program and plugs into ``repro.api``
+unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.linop import LinOp
+from repro import compat
+from repro.core.operators import Operator, register_operator
 
 Array = jax.Array
 
@@ -34,10 +40,13 @@ def _row_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def sharded_operator(A: Array, mesh: Mesh) -> LinOp:
-    """Wrap a (possibly already device-sharded) dense A as a pod-sharded
-    LinOp whose matvecs are shard_map'd local GEMVs + one psum."""
-    m, n = A.shape
+@functools.lru_cache(maxsize=None)
+def _sharded_matvecs(mesh: Mesh):
+    """shard_map'd fused GEMV+psum kernels for ``mesh`` (cached per mesh).
+
+    Both take ``(A_blk, vec, y, scalar)`` and compute the three-term Lanczos
+    form; plain matvecs pass ``y=0, scalar=0``.
+    """
     rows = _row_axes(mesh)
     col = "model" if "model" in mesh.axis_names else None
     a_spec = P(rows or None, col)
@@ -56,31 +65,66 @@ def sharded_operator(A: Array, mesh: Mesh) -> LinOp:
             out = jax.lax.psum(out, rows)
         return out - beta * y_blk.astype(jnp.float32)
 
-    mv_sm = jax.shard_map(
-        functools.partial(_mv),
-        mesh=mesh, in_specs=(a_spec, p_spec, q_spec, P()),
+    mv_sm = compat.shard_map(
+        _mv, mesh=mesh, in_specs=(a_spec, p_spec, q_spec, P()),
         out_specs=q_spec, check_vma=False)
-    rmv_sm = jax.shard_map(
-        functools.partial(_rmv),
-        mesh=mesh, in_specs=(a_spec, q_spec, p_spec, P()),
+    rmv_sm = compat.shard_map(
+        _rmv, mesh=mesh, in_specs=(a_spec, q_spec, p_spec, P()),
         out_specs=p_spec, check_vma=False)
+    return mv_sm, rmv_sm
 
-    zero = jnp.zeros((), jnp.float32)
 
-    def mv(p):
-        return mv_sm(A, p, jnp.zeros((m,), jnp.float32), zero)
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedOp(Operator):
+    """Pod-sharded dense operator: matvecs are local GEMVs + one psum.
 
-    def rmv(q):
-        return rmv_sm(A, q, jnp.zeros((n,), jnp.float32), zero)
+    The (device-sharded) matrix is the pytree leaf; the mesh is static aux
+    data, so the operator crosses ``jit`` boundaries whole and the GK /
+    F-SVD cores (and ``repro.api.factorize``) run on it unmodified.
+    Use :func:`place_operator` / :func:`sharded_operator` to lay A out
+    first.
+    """
 
-    def mv_fused(p, y, alpha):
-        return mv_sm(A, p, y, jnp.asarray(alpha, jnp.float32))
+    A: Array
+    mesh: Mesh
 
-    def rmv_fused(q, y, beta):
-        return rmv_sm(A, q, y, jnp.asarray(beta, jnp.float32))
+    _data_fields = ("A",)
+    _meta_fields = ("mesh",)
 
-    return LinOp((m, n), mv, rmv, dtype=A.dtype,
-                 _mv_fused=mv_fused, _rmv_fused=rmv_fused)
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.A.shape)
+
+    @property
+    def dtype(self):
+        return self.A.dtype
+
+    def mv(self, p):
+        mv_sm, _ = _sharded_matvecs(self.mesh)
+        m = self.A.shape[0]
+        return mv_sm(self.A, p, jnp.zeros((m,), jnp.float32),
+                     jnp.zeros((), jnp.float32))
+
+    def rmv(self, q):
+        _, rmv_sm = _sharded_matvecs(self.mesh)
+        n = self.A.shape[1]
+        return rmv_sm(self.A, q, jnp.zeros((n,), jnp.float32),
+                      jnp.zeros((), jnp.float32))
+
+    def mv_fused(self, p, y, alpha):
+        mv_sm, _ = _sharded_matvecs(self.mesh)
+        return mv_sm(self.A, p, y, jnp.asarray(alpha, jnp.float32))
+
+    def rmv_fused(self, q, y, beta):
+        _, rmv_sm = _sharded_matvecs(self.mesh)
+        return rmv_sm(self.A, q, y, jnp.asarray(beta, jnp.float32))
+
+
+def sharded_operator(A: Array, mesh: Mesh) -> ShardedOp:
+    """Wrap a (possibly already device-sharded) dense A as a pod-sharded
+    operator whose matvecs are shard_map'd local GEMVs + one psum."""
+    return ShardedOp(A, mesh)
 
 
 def place_operator(A: Array, mesh: Mesh) -> Array:

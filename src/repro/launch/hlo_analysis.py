@@ -130,10 +130,17 @@ def _dot_flops(ins: Instruction, symtab: dict) -> float:
     for m in _SHAPE_RE.finditer(ins.result_type):
         out_elems += _shape_elems(m.group(2))
     args = ins.line[ins.line.find("dot(") + 4:]
-    mo = re.match(r"\s*%?([\w.\-]+)", args)
-    if mo is None:
-        return 0.0
-    lhs_type = symtab.get(mo.group(1), "")
+    # older jaxlibs print operand types inline: ``dot(f32[64,64]{1,0}
+    # %Arg_0.1, ...)`` — use the inline lhs type directly when present.
+    m_inline = re.match(r"\s*(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+%?[\w.\-]+",
+                        args)
+    if m_inline:
+        lhs_type = m_inline.group(1)
+    else:
+        mo = re.match(r"\s*%?([\w.\-]+)", args)
+        if mo is None:
+            return 0.0
+        lhs_type = symtab.get(mo.group(1), "")
     ml = _SHAPE_RE.search(lhs_type)
     if ml is None:
         return 0.0

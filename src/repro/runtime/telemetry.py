@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FsvdConfig
 from repro.core.gk import gk_bidiag
-from repro.core.linop import from_dense
+from repro.core.operators import DenseOp
 from repro.core.tridiag import btb_eigh
 
 Array = jax.Array
@@ -37,7 +37,8 @@ def grad_spectrum(g: Array, k: int = 16, eps: float = 1e-6) -> dict:
         g = g.reshape(g.shape[0], -1)
     m, n = g.shape
     k = min(k, m, n)
-    res = gk_bidiag(from_dense(g.astype(jnp.float32)), k, reorth_passes=2)
+    res = gk_bidiag(DenseOp(g.astype(jnp.float32)), k, reorth_passes=2,
+                    key=jax.random.PRNGKey(0))  # deterministic diagnostic
     theta, _ = btb_eigh(res.alphas, res.betas, res.kprime)
     finite = jnp.where(jnp.isfinite(theta), jnp.clip(theta, 0.0, None), 0.0)
     sigma = jnp.sqrt(finite[:k])

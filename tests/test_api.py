@@ -1,0 +1,142 @@
+"""repro.api facade: spec-driven solves agree with the legacy entry points,
+the unified result type behaves, keys are handled uniformly, and the
+registry is open for extension."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.api import (Factorization, ImplicitKeyWarning, RankEstimate,
+                       SVDSpec, available_solvers, estimate_rank, factorize,
+                       register_solver, resolve_method)
+from repro.core.fsvd import fsvd as legacy_fsvd
+from repro.core.rank import numerical_rank as legacy_rank
+from repro.core.rsvd import rsvd as legacy_rsvd
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def A():
+    return make_lowrank(jax.random.PRNGKey(0), 120, 80, 15)
+
+
+def test_same_result_type_across_methods(A):
+    f = factorize(A, SVDSpec(method="fsvd", rank=6), key=KEY)
+    r = factorize(A, SVDSpec(method="rsvd", rank=6), key=KEY)
+    assert type(f) is Factorization and type(r) is Factorization
+    assert f.method == "fsvd" and r.method == "rsvd"
+    assert f.s.shape == r.s.shape == (6,)
+    # both reproduce the dominant triplets of a rank-15 input
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:6]
+    np.testing.assert_allclose(np.asarray(f.s), np.asarray(s_true),
+                               rtol=1e-3)
+
+
+def test_facade_matches_legacy_fsvd(A):
+    new = factorize(A, SVDSpec(method="fsvd", rank=8, max_iters=60,
+                               reorth_passes=2), key=KEY)
+    old = legacy_fsvd(A, 8, 60, key=KEY, reorth_passes=2)
+    np.testing.assert_allclose(np.asarray(new.s), np.asarray(old.s),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new.U), np.asarray(old.U),
+                               rtol=1e-5, atol=1e-5)
+    assert int(new.iterations) == int(old.kprime)
+
+
+def test_facade_matches_legacy_rsvd(A):
+    new = factorize(A, SVDSpec(method="rsvd", rank=8, oversample=20,
+                               power_iters=1), key=KEY)
+    old = legacy_rsvd(A, 8, p=20, power_iters=1, key=KEY)
+    np.testing.assert_allclose(np.asarray(new.s), np.asarray(old.s),
+                               rtol=1e-6)
+
+
+def test_estimate_rank_matches_legacy(A):
+    est = estimate_rank(A, key=KEY)
+    old = legacy_rank(A, key=KEY)
+    assert int(est.rank) == int(old.rank) == 15
+    assert int(est.iterations) == int(old.gk_iterations)
+    assert isinstance(est, RankEstimate)
+
+
+def test_spec_overrides_and_validation(A):
+    out = factorize(A, rank=4, method="fsvd", key=KEY)   # kwargs-only form
+    assert out.rank == 4
+    with pytest.raises(ValueError):
+        SVDSpec(rank=0)
+    with pytest.raises(ValueError):
+        SVDSpec(backend="cuda")
+    s = SVDSpec(rank=3)
+    assert s.replace(rank=9).rank == 9 and s.rank == 3
+
+
+def test_auto_method_resolution():
+    assert resolve_method(SVDSpec(method="auto")) == "fsvd"
+    assert resolve_method(SVDSpec(method="auto", tol=1e-2)) == "rsvd"
+    assert resolve_method(SVDSpec(method="auto", power_iters=2)) == "rsvd"
+    assert resolve_method(SVDSpec(method="fsvd", tol=1e-2)) == "fsvd"
+
+
+def test_implicit_key_warns_explicit_does_not(A):
+    spec = SVDSpec(method="rsvd", rank=4)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        factorize(A, spec)
+    assert any(issubclass(w.category, ImplicitKeyWarning) for w in rec)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        factorize(A, spec, key=KEY)
+    assert not any(issubclass(w.category, ImplicitKeyWarning) for w in rec)
+
+
+def test_factorization_reconstruct_and_errors(A):
+    out = factorize(A, SVDSpec(method="fsvd", rank=15, max_iters=80),
+                    key=KEY)
+    R = out.reconstruct()
+    assert float(jnp.linalg.norm(A - R)) < 1e-2 * float(jnp.linalg.norm(A))
+    errs = out.errors(A)
+    assert float(errs["relative"]) < 5e-5
+    assert errs["residual"] is not None
+
+
+def test_warm_start_round_trip(A):
+    first = factorize(A, SVDSpec(method="fsvd", rank=6), key=KEY)
+    again = factorize(A, SVDSpec(method="fsvd", rank=6),
+                      q1=first.warm_start())
+    np.testing.assert_allclose(np.asarray(again.s), np.asarray(first.s),
+                               rtol=1e-4)
+
+
+def test_factorization_is_pytree(A):
+    out = factorize(A, SVDSpec(method="fsvd", rank=4), key=KEY)
+    leaves, treedef = jax.tree_util.tree_flatten(out)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.method == out.method
+    np.testing.assert_allclose(np.asarray(back.s), np.asarray(out.s))
+
+
+def test_registry_extension(A):
+    @register_solver("constant")
+    def solve_constant(op, spec, *, key=None, q1=None):
+        m, n = op.shape
+        return Factorization(jnp.zeros((m, spec.rank)),
+                             jnp.zeros((spec.rank,)),
+                             jnp.zeros((n, spec.rank)),
+                             jnp.asarray(0, jnp.int32),
+                             jnp.asarray(False), method="constant")
+
+    assert "constant" in available_solvers()
+    out = factorize(A, SVDSpec(method="constant", rank=2))
+    assert out.method == "constant" and float(out.s.sum()) == 0.0
+
+
+def test_legacy_entry_points_warn_deprecation(A):
+    import repro.core as core
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        core.fsvd(A, 3, 20, key=KEY)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)

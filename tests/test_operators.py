@@ -1,0 +1,136 @@
+"""Operator-algebra laws: adjoint/compose/scale identities, pytree
+round-trips, and vmap-batched factorization through the facade."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.api import SVDSpec, factorize
+from repro.core.operators import (DenseOp, LowRankOp, ScaledOp, SumOp,
+                                  TransposedOp, as_operator, to_dense)
+
+
+@pytest.fixture()
+def ops(rng):
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    A = jax.random.normal(k1, (30, 20))
+    B = jax.random.normal(k2, (30, 20))
+    U = jnp.linalg.qr(jax.random.normal(k3, (30, 4)))[0]
+    V = jnp.linalg.qr(jax.random.normal(k4, (20, 4)))[0]
+    s = jnp.sort(jax.random.uniform(k5, (4,)) + 0.5)[::-1]
+    return {
+        "A": DenseOp(A), "B": DenseOp(B),
+        "L": LowRankOp(U, s, V.T),
+        "Ad": A, "Bd": B, "Ld": (U * s[None, :]) @ V.T,
+    }
+
+
+def _close(x, y, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                               rtol=tol, atol=tol)
+
+
+def test_adjoint_law(ops):
+    for name in ("A", "L"):
+        op = ops[name]
+        _close(to_dense(op.T), to_dense(op).T)
+
+
+def test_double_transpose_identity(ops):
+    op = SumOp((ops["A"], ops["L"]))
+    _close(to_dense(op.T.T), to_dense(op))
+    # generic TransposedOp unwraps to the inner operator
+    t = TransposedOp(op)
+    assert t.T is op
+
+
+def test_sum_and_scale_roundtrip(ops):
+    _close(to_dense(ops["A"] + ops["B"]), ops["Ad"] + ops["Bd"])
+    _close(to_dense(2.5 * ops["A"]), 2.5 * ops["Ad"])
+    _close(to_dense((ops["A"] + ops["L"]).T),
+           (ops["Ad"] + ops["Ld"]).T)
+    _close(to_dense(ops["A"] - ops["B"]), ops["Ad"] - ops["Bd"])
+    combo = 2.0 * ops["A"] + (-1.0) * ops["L"]
+    _close(to_dense(combo.T), (2.0 * ops["Ad"] - ops["Ld"]).T)
+
+
+def test_matmul_sugar(ops, rng):
+    p = jax.random.normal(rng, (20,))
+    P = jax.random.normal(rng, (20, 3))
+    _close(ops["A"] @ p, ops["Ad"] @ p)
+    _close(ops["A"] @ P, ops["Ad"] @ P)
+    _close(ops["L"].T @ jnp.ones(30), ops["Ld"].T @ jnp.ones(30))
+
+
+def test_fused_forms_match_compose(ops, rng):
+    p = jax.random.normal(rng, (20,))
+    y = jax.random.normal(jax.random.PRNGKey(7), (30,))
+    for op, d in ((ops["A"], ops["Ad"]), (ops["L"], ops["Ld"])):
+        _close(op.mv_fused(p, y, 0.7), d @ p - 0.7 * y)
+        _close(op.rmv_fused(y, p, 0.3), d.T @ y - 0.3 * p)
+
+
+def test_pytree_flatten_unflatten_identity(ops):
+    op = 0.5 * SumOp((ops["A"], ops["L"])).T
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    op2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(op2) is type(op)
+    _close(to_dense(op2), to_dense(op))
+    # leaves survive a tree_map (e.g. what jit/donation machinery does)
+    op3 = jax.tree_util.tree_map(lambda x: x, op)
+    _close(to_dense(op3), to_dense(op))
+
+
+def test_dense_backend_meta_is_static(ops):
+    op = DenseOp(ops["Ad"], backend="pallas")
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    assert len(leaves) == 1          # backend rides in aux, not as a leaf
+    assert jax.tree_util.tree_unflatten(treedef, leaves).backend == "pallas"
+
+
+def test_operator_crosses_jit_boundary(ops, rng):
+    p = jax.random.normal(rng, (20,))
+
+    @jax.jit
+    def apply(op, x):
+        return op.mv(x)
+
+    combo = ops["A"] + 2.0 * ops["L"]
+    _close(apply(combo, p), ops["Ad"] @ p + 2.0 * (ops["Ld"] @ p))
+
+
+def test_as_operator_coercion(ops):
+    assert as_operator(ops["A"]) is ops["A"]
+    got = as_operator(ops["Ad"], backend="pallas")
+    assert isinstance(got, DenseOp) and got.backend == "pallas"
+    with pytest.raises(ValueError):
+        as_operator(ops["Ad"], backend="mosaic")
+
+
+def test_scaled_op_traced_alpha(ops, rng):
+    p = jax.random.normal(rng, (20,))
+
+    def f(a):
+        return ScaledOp(a, ops["A"]).mv(p).sum()
+
+    g = jax.grad(f)(2.0)             # alpha is a leaf -> differentiable
+    _close(g, (ops["Ad"] @ p).sum(), tol=1e-4)
+
+
+def test_vmap_batched_factorize_matches_loop(rng):
+    keys = jax.random.split(rng, 3)
+    As = jnp.stack([make_lowrank(k, 60, 40, 8) for k in keys])
+    spec = SVDSpec(method="fsvd", rank=5, max_iters=32)
+    key = jax.random.PRNGKey(42)
+    batched = jax.vmap(
+        lambda op: factorize(op, spec, key=key))(DenseOp(As))
+    assert batched.s.shape == (3, 5)
+    for i in range(3):
+        single = factorize(DenseOp(As[i]), spec, key=key)
+        np.testing.assert_allclose(np.asarray(batched.s[i]),
+                                   np.asarray(single.s), rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(jnp.abs(jnp.sum(batched.V[i] * single.V, axis=0))),
+            np.ones(5), atol=5e-3)

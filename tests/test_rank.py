@@ -1,10 +1,11 @@
-"""Algorithm 3: numerical rank determination — exactness + hypothesis
-property sweep over random (m, n, rank)."""
+"""Algorithm 3: numerical rank determination — exactness over fixed
+(m, n, rank) cases.  The hypothesis property sweep lives in
+``test_rank_property.py`` so this module stays runnable when hypothesis
+is not installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from conftest import make_lowrank
 from repro.core import numerical_rank
@@ -19,18 +20,6 @@ def test_rank_exact(rng, m, n, rank):
     # Alg-1 termination gives the first (slightly loose) estimate: Table 1a
     # reports 102-105 iterations for rank-100 inputs
     assert rank <= int(out.gk_iterations) <= rank + 3
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(20, 90), st.integers(20, 90), st.integers(1, 15),
-       st.integers(0, 2**31 - 1))
-def test_rank_property(m, n, rank, seed):
-    """Property: rank(M @ N) == rank for random Gaussian factors (full rank
-    factors w.p. 1), detected exactly by Alg 3."""
-    rank = min(rank, m, n)
-    A = make_lowrank(jax.random.PRNGKey(seed), m, n, rank)
-    out = numerical_rank(A)
-    assert int(out.rank) == rank
 
 
 def test_rank_in_graph_variant(rng):

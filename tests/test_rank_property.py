@@ -1,0 +1,26 @@
+"""Hypothesis property sweep for Algorithm 3 over random (m, n, rank).
+
+Skips cleanly when hypothesis is absent (it is a dev/CI requirement, see
+requirements-dev.txt) — the deterministic rank tests live in test_rank.py.
+"""
+import jax
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property sweep needs hypothesis (dev requirement)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from conftest import make_lowrank  # noqa: E402
+from repro.core import numerical_rank  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(20, 90), st.integers(20, 90), st.integers(1, 15),
+       st.integers(0, 2**31 - 1))
+def test_rank_property(m, n, rank, seed):
+    """Property: rank(M @ N) == rank for random Gaussian factors (full rank
+    factors w.p. 1), detected exactly by Alg 3."""
+    rank = min(rank, m, n)
+    A = make_lowrank(jax.random.PRNGKey(seed), m, n, rank)
+    out = numerical_rank(A)
+    assert int(out.rank) == rank
