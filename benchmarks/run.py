@@ -16,10 +16,11 @@ def main() -> None:
                     help="smaller sizes / fewer steps (CI)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
-                             "kernels"])
+                             "kernels", "sparse"])
     args = ap.parse_args()
 
-    from benchmarks import fig1, fig2, kernels_bench, roofline, table1, table2
+    from benchmarks import (fig1, fig2, kernels_bench, roofline, sparse_bench,
+                            table1, table2)
 
     t0 = time.time()
     sections = []
@@ -38,6 +39,10 @@ def main() -> None:
                                                   else fig2.STEPS)))
     if args.only in (None, "kernels"):
         sections.append(("kernels", kernels_bench.run))
+    if args.only in (None, "sparse"):
+        sections.append(("sparse", lambda: sparse_bench.run(
+            sizes=sparse_bench.SIZES[:1] if args.quick else None,
+            repeats=1 if args.quick else 3)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(
             mesh="pod16x16")))

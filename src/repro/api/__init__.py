@@ -22,8 +22,9 @@ from repro.api.registry import (available_solvers, get_solver,
 from repro.api.results import Factorization, RankEstimate
 from repro.api.spec import METHODS, SVDSpec
 from repro.core._keys import ImplicitKeyWarning, resolve_key
-from repro.core.operators import (DenseOp, LowRankOp, Operator, ScaledOp,
-                                  SumOp, TransposedOp, as_operator)
+from repro.core.operators import (DenseOp, GramOp, KroneckerOp, LowRankOp,
+                                  Operator, ScaledOp, SparseOp, SumOp,
+                                  TransposedOp, as_operator)
 
 # importing the module registers the built-in solvers
 from repro.api import solvers as _solvers  # noqa: E402,F401  (side effect)
@@ -35,6 +36,6 @@ __all__ = [
     "Factorization", "RankEstimate",
     "register_solver", "get_solver", "available_solvers",
     "Operator", "DenseOp", "LowRankOp", "SumOp", "ScaledOp",
-    "TransposedOp", "as_operator",
+    "TransposedOp", "SparseOp", "KroneckerOp", "GramOp", "as_operator",
     "resolve_key", "ImplicitKeyWarning",
 ]

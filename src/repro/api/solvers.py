@@ -1,8 +1,9 @@
 """Built-in solver registrations for the facade.
 
-Both solvers take the same (operator, spec, key, q1) inputs and return the
-same :class:`~repro.api.results.Factorization` — HMT randomized SVD and GK
-block-Krylov F-SVD are interchangeable points on one accuracy/cost curve.
+All solvers take the same (operator, spec, key, q1) inputs and return the
+same :class:`~repro.api.results.Factorization` — HMT randomized SVD, GK
+block-Krylov F-SVD and the streaming blocked variant are interchangeable
+points on one accuracy/cost/memory trade-off surface.
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ from repro.api.results import Factorization
 from repro.api.spec import SVDSpec
 from repro.core._keys import resolve_key
 from repro.core.fsvd import fsvd as _fsvd
+from repro.core.gk_block import fsvd_blocked as _fsvd_blocked
 from repro.core.rsvd import rsvd as _rsvd
 
 Array = jax.Array
@@ -50,3 +52,26 @@ def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
         res.U, res.s, res.V,
         iterations=jnp.asarray(spec.power_iters, jnp.int32),
         breakdown=jnp.asarray(False), method="rsvd")
+
+
+@register_solver("fsvd_blocked")
+def solve_fsvd_blocked(A, spec: SVDSpec, *, key: Optional[Array] = None,
+                       q1: Optional[Array] = None) -> Factorization:
+    """Streaming block-GK with Ritz locking + thick restart — for operators
+    whose dense form would not fit memory (sparse / Kronecker / sharded).
+
+    ``spec.block_size`` is the expansion block width, ``spec.max_basis`` the
+    memory budget (max retained right-basis vectors), ``spec.max_iters`` the
+    restart-cycle cap.  ``q1`` warm-starts the first block via ``Aᵀq1``.
+    """
+    if q1 is None:
+        key = resolve_key(key, caller="factorize(method='fsvd_blocked')")
+    res = _fsvd_blocked(A, spec.rank, block=spec.block_size,
+                        max_basis=spec.max_basis, tol=spec.tol,
+                        relative_tol=spec.relative_tol,
+                        max_restarts=spec.max_iters or 40, key=key, q1=q1,
+                        reorth_passes=spec.reorth_passes, dtype=spec.dtype)
+    return Factorization(res.U, res.s, res.V,
+                         iterations=jnp.asarray(res.block_passes, jnp.int32),
+                         breakdown=jnp.asarray(not res.converged),
+                         method="fsvd_blocked")

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
-METHODS = ("auto", "fsvd", "rsvd")
+METHODS = ("auto", "fsvd", "rsvd", "fsvd_blocked")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +35,11 @@ class SVDSpec:
     power_iters   R-SVD subspace iterations q.
     backend       "xla" | "pallas" — how dense inputs are wrapped
                   (subsumes the old ``from_dense(use_kernels=...)``).
+    block_size    fsvd_blocked: Krylov expansion block width b (None =
+                  ``min(max(8, min(rank, 32)), min(m, n))``).
+    max_basis     fsvd_blocked: memory budget — max right-basis vectors
+                  held before a thick restart (None = ``max(3 rank,
+                  rank + 2 b)``, clamped to ``min(m, n)``).
     dtype         compute dtype override (None = promote input to f32).
     host_loop     True = host-side Python loop with real early exit
                   (paper wall-time behaviour); False = in-graph fori_loop
@@ -51,12 +56,19 @@ class SVDSpec:
     oversample: int = 10
     power_iters: int = 0
     backend: str = "xla"
+    block_size: Optional[int] = None
+    max_basis: Optional[int] = None
     dtype: Any = None
     host_loop: Optional[bool] = None
 
     def __post_init__(self):
         if self.rank < 1:
             raise ValueError(f"rank must be >= 1, got {self.rank}")
+        if self.block_size is not None and self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}")
+        if self.max_basis is not None and self.max_basis < 1:
+            raise ValueError(f"max_basis must be >= 1, got {self.max_basis}")
         if self.backend not in ("xla", "pallas"):
             raise ValueError(
                 f"backend must be 'xla' or 'pallas', got {self.backend!r}")

@@ -20,8 +20,11 @@ import warnings
 from repro.core.fsvd import FSVDResult, fsvd as _fsvd_impl
 from repro.core.gk import GKResult, gk_bidiag, gk_bidiag_host
 from repro.core.linop import LinOp, from_dense, from_factors
-from repro.core.operators import (DenseOp, LowRankOp, Operator, ScaledOp,
-                                  SumOp, TransposedOp, as_operator,
+from repro.core.gk_block import (BlockedFSVDResult, fsvd_block, fsvd_blocked,
+                                 gk_block_host)
+from repro.core.operators import (DenseOp, GramOp, KroneckerOp, LowRankOp,
+                                  Operator, ScaledOp, SparseOp, SumOp,
+                                  TransposedOp, as_operator,
                                   register_operator)
 from repro.core.rank import RankResult, numerical_rank as _rank_impl
 from repro.core.rsvd import RSVDResult, rsvd as _rsvd_impl
@@ -46,6 +49,8 @@ __all__ = [
     "FSVDResult", "fsvd", "GKResult", "gk_bidiag", "gk_bidiag_host",
     "LinOp", "from_dense", "from_factors", "RankResult", "numerical_rank",
     "RSVDResult", "rsvd",
+    "BlockedFSVDResult", "fsvd_block", "fsvd_blocked", "gk_block_host",
     "Operator", "DenseOp", "LowRankOp", "SumOp", "ScaledOp", "TransposedOp",
+    "SparseOp", "KroneckerOp", "GramOp",
     "as_operator", "register_operator",
 ]

@@ -147,3 +147,241 @@ def fsvd_block(
     U = res.Q @ Uk[:, :r]
     V = res.P @ Vkt[:r].T
     return FSVDBlockResult(U, sk[:r], V, res.steps, res.breakdown)
+
+
+# ---------------------------------------------------------------------------
+# Streaming blocked GK with locking + thick restart (memory-budgeted)
+# ---------------------------------------------------------------------------
+
+class BlockedFSVDResult(NamedTuple):
+    U: Array          # (m, r)
+    s: Array          # (r,)    descending
+    V: Array          # (n, r)
+    restarts: int     # restart cycles consumed
+    block_passes: int # streaming passes over A (block matvec round trips)
+    converged: bool   # did r Ritz pairs lock before the restart budget?
+
+
+def _orth_against(W: Array, bases, passes: int) -> Array:
+    for _ in range(passes):
+        for B in bases:
+            if B.shape[1]:
+                W = W - B @ (B.T @ W)
+    return W
+
+
+# a column whose norm drops by this factor under orthogonalization carries
+# no new direction (f32 CGS2 noise floor), only roundoff — keeping it (or
+# letting Householder QR substitute an arbitrary completion, which is NOT
+# orthogonal to the deflation spaces) destroys basis orthonormality and
+# with it the Ritz-value bound sigma_ritz <= sigma_max.
+_MGS_DROP = 1e-5
+
+
+def _mgs_block(W: Array, bases, passes: int = 2) -> Array:
+    """Rank-revealing block orthonormalization (host-side MGS).
+
+    Orthonormalizes W's columns against every basis in ``bases`` and each
+    other, *dropping* columns that lose all their mass instead of
+    completing them arbitrarily.  Returns (n, k≤W.cols); k == 0 means W
+    carried no direction outside the spans.
+    """
+    live = [B for B in bases if B.shape[1]]
+    cols: list[Array] = []
+    for j in range(W.shape[1]):
+        v = W[:, j]
+        nv0 = float(jnp.linalg.norm(v))
+        if nv0 == 0.0:
+            continue
+        for _ in range(passes):
+            for B in live:
+                v = v - B @ (B.T @ v)
+            for c in cols:
+                v = v - c * jnp.vdot(c, v)
+        nv = float(jnp.linalg.norm(v))
+        if nv > _MGS_DROP * nv0:
+            cols.append(v / nv)
+    if not cols:
+        return jnp.zeros((W.shape[0], 0), W.dtype)
+    return jnp.stack(cols, axis=1)
+
+
+def fsvd_blocked(
+    A: Operator | LinOp | Array,
+    r: int,
+    *,
+    block: Optional[int] = None,
+    max_basis: Optional[int] = None,
+    tol: float = 1e-8,
+    relative_tol: bool = True,
+    max_restarts: int = 40,
+    key: Optional[jax.Array] = None,
+    q1: Optional[Array] = None,
+    reorth_passes: int = 2,
+    dtype=None,
+) -> BlockedFSVDResult:
+    """Top-r singular triplets by streaming block GK under a memory budget.
+
+    The basis never exceeds ``max_basis`` right vectors: each cycle expands
+    a block-Krylov chain ``P_{j+1} = orth(Aᵀ(A P_j))`` (the GK alternation,
+    fused — only n-vectors are retained), Rayleigh–Ritz extracts candidate
+    triplets from the accumulated span, pairs whose residual
+    ``‖Aᵀu − σv‖ ≤ tol·σ_max`` are *locked* (deflated from all later
+    cycles), and the basis restarts *thick* — re-seeded with the best
+    unconverged Ritz vectors, so no Krylov information is thrown away.
+
+    This is the Musco–Musco block-Krylov scheme with LOBPCG-style soft
+    locking; A is touched only through block matvecs, so operators whose
+    dense form would not fit memory (``SparseOp``, ``KroneckerOp``, pod-
+    sharded) stream through unchanged.
+
+    ``relative_tol=True`` (default) scales the residual threshold by the
+    running ``σ_max`` estimate with ``tol`` clamped to the dtype's Lanczos
+    noise floor (same policy as ``core.gk``) — the paper's 1e-8 default
+    remains meaningful in f64 and degrades gracefully to ~2e-5 in f32;
+    ``relative_tol=False`` uses ``tol`` as an absolute residual bound.
+    ``q1`` (an m-vector) warm-starts the first block via ``Aᵀq1``.
+    """
+    A = as_operator(A)
+    m, n = A.shape
+    r = min(r, min(m, n))
+    b = block if block is not None else min(max(8, min(r, 32)), min(m, n))
+    b = max(min(b, min(m, n)), 1)
+    if max_basis is None:
+        max_basis = min(min(m, n), max(3 * r, r + 2 * b))
+    max_basis = min(max(max_basis, r + b, 2 * b), min(m, n))
+    if dtype is None:
+        dtype = jnp.promote_types(A.dtype, jnp.float32)
+    eff_tol = max(tol, 200.0 * float(jnp.finfo(dtype).eps))
+
+    if q1 is None:
+        key = resolve_key(key, caller="fsvd_blocked")
+    else:
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+    locked_V = jnp.zeros((n, 0), dtype)
+    locked_U = jnp.zeros((m, 0), dtype)
+    locked_s: list[float] = []
+
+    key, k0 = jax.random.split(key)
+    V = jax.random.normal(k0, (n, b), dtype)
+    if q1 is not None:
+        V = V.at[:, 0].set(A.rmv(q1.astype(dtype)))
+    V = jnp.linalg.qr(V)[0]
+
+    block_passes = 0
+    restarts = 0
+    converged = False
+    sigma_max = 0.0
+    Us = S = Vr = None                      # last Rayleigh-Ritz extraction
+
+    for restart in range(max_restarts):
+        restarts = restart + 1
+        # --- expand the Krylov chain under the basis budget --------------
+        # the seed block is capped one short of the budget so at least one
+        # A(ᵀ)A application always fits: with zero applications the span
+        # never grows and restarts would stagnate on the same subspace.
+        budget = max_basis - locked_V.shape[1]
+        if budget >= 2:
+            V = V[:, :min(V.shape[1], budget - 1)]
+        else:
+            V = V[:, :max(budget, 1)]
+        basis = _mgs_block(V, (locked_V,), reorth_passes)
+        if basis.shape[1] == 0:
+            key, kf = jax.random.split(key)
+            basis = _mgs_block(jax.random.normal(kf, (n, min(b, budget)),
+                                                 dtype),
+                               (locked_V,), reorth_passes)
+        last = basis
+        while basis.shape[1] < budget and last.shape[1]:
+            W = A.rmatmat(A.matmat(last)).astype(dtype)   # GK round trip
+            block_passes += 1
+            Qb = _mgs_block(W, (locked_V, basis), reorth_passes)
+            if Qb.shape[1] == 0:
+                # chain exhausted the reachable subspace — refresh randomly
+                key, kf = jax.random.split(key)
+                Qb = _mgs_block(
+                    jax.random.normal(kf, (n, last.shape[1]), dtype),
+                    (locked_V, basis), reorth_passes)
+                if Qb.shape[1] == 0:
+                    break                     # whole space is spanned
+            Qb = Qb[:, :budget - basis.shape[1]]
+            basis = jnp.concatenate([basis, Qb], axis=1)
+            last = Qb
+        # --- Rayleigh-Ritz on span(basis), deflated against locked -------
+        AV = A.matmat(basis).astype(dtype)                # (m, d), d ≤ budget
+        block_passes += 1
+        Us, S, Wt = jnp.linalg.svd(AV, full_matrices=False)
+        Vr = basis @ Wt.T
+        sigma_max = max(sigma_max,
+                        float(S[0]) if S.shape[0] else 0.0,
+                        locked_s[0] if locked_s else 0.0)
+        # residuals ‖Aᵀu_i − σ_i v_i‖ decide locking
+        Rres = A.rmatmat(Us).astype(dtype) - Vr * S[None, :]
+        resn = jnp.linalg.norm(Rres, axis=0)
+        thresh = eff_tol * max(sigma_max, 1.0) if relative_tol else tol
+        need = r - len(locked_s)
+        lock_idx = []
+        for i in range(S.shape[0]):
+            if len(lock_idx) >= need:
+                break
+            if float(resn[i]) <= thresh:
+                lock_idx.append(i)
+            else:
+                break          # lock a contiguous head: keeps order strict
+        if lock_idx:
+            sel = jnp.asarray(lock_idx)
+            newV = _orth_against(Vr[:, sel], (locked_V,), 1)
+            newV = newV / jnp.linalg.norm(newV, axis=0, keepdims=True)
+            locked_V = jnp.concatenate([locked_V, newV], axis=1)
+            locked_U = jnp.concatenate([locked_U, Us[:, sel]], axis=1)
+            locked_s.extend(float(S[i]) for i in lock_idx)
+        if len(locked_s) >= r:
+            converged = True
+            break
+        # --- thick restart: best unconverged Ritz vectors seed the next
+        # cycle (orthonormalized against the locked pairs at loop top) ---
+        rest = [i for i in range(S.shape[0]) if i not in set(lock_idx)]
+        keep = rest[:max(b, min(r - len(locked_s), len(rest)))]
+        if keep:
+            V = Vr[:, jnp.asarray(keep)]
+        else:
+            key, kf = jax.random.split(key)
+            V = jax.random.normal(kf, (n, b), dtype)
+
+    # --- assemble: locked pairs first, fill from the last extraction -----
+    if len(locked_s) < r and S is not None:
+        fill = r - len(locked_s)
+        # take the best remaining Ritz pairs not yet locked
+        taken = 0
+        cols_u, cols_v, vals = [], [], []
+        for i in range(S.shape[0]):
+            if taken >= fill:
+                break
+            v_i = Vr[:, i]
+            if locked_V.shape[1] and float(
+                    jnp.max(jnp.abs(locked_V.T @ v_i))) > 0.5:
+                continue       # this Ritz pair is (a copy of) a locked one
+            cols_u.append(Us[:, i])
+            cols_v.append(v_i)
+            vals.append(float(S[i]))
+            taken += 1
+        if cols_u:
+            locked_U = jnp.concatenate(
+                [locked_U, jnp.stack(cols_u, axis=1)], axis=1)
+            locked_V = jnp.concatenate(
+                [locked_V, jnp.stack(cols_v, axis=1)], axis=1)
+            locked_s.extend(vals)
+
+    s_arr = jnp.asarray(locked_s, dtype)
+    order = jnp.argsort(-s_arr)
+    U = locked_U[:, order]
+    V_out = locked_V[:, order]
+    s_arr = s_arr[order]
+    if s_arr.shape[0] < r:                      # exhausted rank-deficient A
+        pad = r - s_arr.shape[0]
+        U = jnp.concatenate([U, jnp.zeros((m, pad), dtype)], axis=1)
+        V_out = jnp.concatenate([V_out, jnp.zeros((n, pad), dtype)], axis=1)
+        s_arr = jnp.concatenate([s_arr, jnp.zeros((pad,), dtype)])
+    return BlockedFSVDResult(U[:, :r], s_arr[:r], V_out[:, :r],
+                             restarts, block_passes, converged)

@@ -14,6 +14,14 @@ dataclass operators whose array fields are pytree leaves:
     operand).
   * ``SumOp``, ``ScaledOp``, ``TransposedOp`` — closure of the algebra under
     ``A + B``, ``alpha * A`` and ``A.T``.
+  * ``SparseOp(data, indices, spshape)`` — BCOO-backed sparse matrix;
+    ``backend="pallas"`` routes matvecs through the row-blocked ELL kernel
+    in ``repro.kernels.sparse_matvec`` (build via ``SparseOp.fromdense`` /
+    ``SparseOp.from_bcoo`` so the ELL pack is precomputed).
+  * ``KroneckerOp(a, b)`` — ``a ⊗ b`` applied through the reshape identity
+    ``(A ⊗ B) vec(X) = vec(A X Bᵀ)``; the product is never materialized.
+  * ``GramOp(inner, side)`` — ``AᵀA`` / ``AAᵀ`` as an operator (rank
+    estimation / normal-equation solves without forming the Gram matrix).
 
 Because operators are pytrees, ``jax.vmap(factorize_impl)`` over a stacked
 ``DenseOp`` yields a batched partial SVD with no extra code, and a sharded
@@ -394,16 +402,230 @@ class TransposedOp(Operator):
         return self.inner
 
 
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class SparseOp(Operator):
+    """Sparse (m, n) matrix in COO triplet form — never densified on the
+    solver path (the GK / F-SVD / rank cores only ever ask for matvecs).
+
+    ``data`` (nnz,) and ``indices`` (nnz, 2) follow the BCOO convention
+    (duplicate coordinates sum); ``spshape`` is static so the operator
+    survives tracing (a traced ``indices`` cannot carry the shape).
+
+    ``backend="pallas"`` routes matvecs through the row-blocked ELL kernel
+    (``repro.kernels.sparse_matvec``); the ELL pack is precomputed from
+    concrete coordinates by :meth:`fromdense` / :meth:`from_bcoo` /
+    :meth:`from_coo` (its row widths are value-dependent, so it cannot be
+    built under a trace) and rides along as pytree leaves.  ``backend="xla"``
+    uses BCOO dot-general.
+    """
+
+    data: Array                   # (nnz,)
+    indices: Array                # (nnz, 2) int — [row, col]
+    spshape: Tuple[int, int] = (0, 0)
+    ell: Any = None               # ((m,L) vals, (m,L) cols, (n,L') vals,
+                                  #  (n,L') rows) — pallas pack, or None
+    backend: str = "xla"
+
+    _data_fields = ("data", "indices", "ell")
+    _meta_fields = ("spshape", "backend")
+
+    # --- constructors -------------------------------------------------
+    @classmethod
+    def fromdense(cls, A, *, backend: str = "xla", nse=None) -> "SparseOp":
+        from jax.experimental import sparse as jsparse
+        return cls.from_bcoo(jsparse.BCOO.fromdense(jnp.asarray(A), nse=nse),
+                             backend=backend)
+
+    @classmethod
+    def from_bcoo(cls, mat, *, backend: str = "xla") -> "SparseOp":
+        return cls.from_coo(mat.data, mat.indices, tuple(mat.shape),
+                            backend=backend)
+
+    @classmethod
+    def from_coo(cls, data, indices, spshape, *,
+                 backend: str = "xla") -> "SparseOp":
+        if backend not in _BACKENDS:
+            raise ValueError(
+                f"backend must be one of {_BACKENDS}, got {backend!r}")
+        data = jnp.asarray(data)
+        indices = jnp.asarray(indices)
+        ell = None
+        if backend == "pallas":
+            from repro.kernels.sparse_matvec import ell_pack
+            ell = (ell_pack(data, indices, spshape)
+                   + ell_pack(data, indices[:, ::-1], spshape[::-1]))
+        return cls(data, indices, tuple(spshape), ell=ell, backend=backend)
+
+    # --- protocol -----------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.spshape)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def density(self) -> float:
+        m, n = self.spshape
+        return self.nnz / max(m * n, 1)
+
+    def _bcoo(self):
+        from jax.experimental import sparse as jsparse
+        return jsparse.BCOO((self.data, self.indices), shape=self.spshape)
+
+    def mv(self, p):
+        if self.backend == "pallas" and self.ell is not None:
+            from repro.kernels import ops as kops
+            return kops.sparse_matvec(self.ell[0], self.ell[1], p)
+        return self._bcoo() @ p
+
+    def rmv(self, q):
+        if self.backend == "pallas" and self.ell is not None:
+            from repro.kernels import ops as kops
+            return kops.sparse_matvec(self.ell[2], self.ell[3], q)
+        return self.T._bcoo() @ q
+
+    def matmat(self, V):
+        if self.backend == "pallas" and self.ell is not None:
+            return Operator.matmat(self, V)    # vmap over the ELL kernel
+        return self._bcoo() @ V
+
+    def rmatmat(self, Q):
+        if self.backend == "pallas" and self.ell is not None:
+            return Operator.rmatmat(self, Q)
+        return self.T._bcoo() @ Q
+
+    def to_dense(self):
+        return self._bcoo().todense()
+
+    @property
+    def T(self):
+        ell = None if self.ell is None else \
+            (self.ell[2], self.ell[3], self.ell[0], self.ell[1])
+        return SparseOp(self.data, self.indices[:, ::-1],
+                        (self.spshape[1], self.spshape[0]),
+                        ell=ell, backend=self.backend)
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class KroneckerOp(Operator):
+    """``a ⊗ b`` — shape (m_a m_b, n_a n_b), never materialized.
+
+    Matvecs use the reshape identity ``(A ⊗ B) vec(X) = vec(A X Bᵀ)`` (vec
+    row-major, matching ``jnp.kron`` index order ``[i·m_b + k, j·n_b + l]``),
+    so cost is two small GEMMs instead of one huge GEMV.  Factors are
+    operators themselves — ``KroneckerOp(SparseOp(...), DenseOp(...))``
+    composes.
+    """
+
+    a: Operator
+    b: Operator
+
+    _data_fields = ("a", "b")
+    _meta_fields = ()
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        (ma, na), (mb, nb) = self.a.shape, self.b.shape
+        return (ma * mb, na * nb)
+
+    @property
+    def dtype(self):
+        return jnp.result_type(self.a.dtype, self.b.dtype)
+
+    def mv(self, x):
+        (ma, na), (mb, nb) = self.a.shape, self.b.shape
+        X = x.reshape(na, nb)
+        AX = self.a.matmat(X)                # (ma, nb)
+        Y = self.b.matmat(AX.T).T            # (ma, mb): rows i are B @ AX[i]
+        return Y.reshape(ma * mb)
+
+    def rmv(self, y):
+        (ma, na), (mb, nb) = self.a.shape, self.b.shape
+        Y = y.reshape(ma, mb)
+        AY = self.a.rmatmat(Y)               # (na, mb)
+        X = self.b.rmatmat(AY.T).T           # (na, nb)
+        return X.reshape(na * nb)
+
+    def to_dense(self):
+        return jnp.kron(self.a.to_dense(), self.b.to_dense())
+
+    @property
+    def T(self):
+        return KroneckerOp(self.a.T, self.b.T)
+
+
+_GRAM_SIDES = ("ata", "aat")
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class GramOp(Operator):
+    """``AᵀA`` (side="ata", n×n) or ``AAᵀ`` (side="aat", m×m) of ``inner``,
+    applied as two matvecs — the Gram matrix itself is never formed.
+
+    Symmetric by construction (``T`` is ``self``); its eigenvalues are
+    ``σ(A)²``, which is what rank estimation on the normal equations needs.
+    """
+
+    inner: Operator
+    side: str = "ata"
+
+    _data_fields = ("inner",)
+    _meta_fields = ("side",)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        if self.side not in _GRAM_SIDES:
+            raise ValueError(
+                f"side must be one of {_GRAM_SIDES}, got {self.side!r}")
+        d = self.inner.shape[1] if self.side == "ata" else self.inner.shape[0]
+        return (d, d)
+
+    @property
+    def dtype(self):
+        return self.inner.dtype
+
+    def mv(self, p):
+        if self.side == "ata":
+            return self.inner.rmv(self.inner.mv(p))
+        return self.inner.mv(self.inner.rmv(p))
+
+    rmv = mv
+
+    def matmat(self, V):
+        if self.side == "ata":
+            return self.inner.rmatmat(self.inner.matmat(V))
+        return self.inner.matmat(self.inner.rmatmat(V))
+
+    rmatmat = matmat
+
+    @property
+    def T(self):
+        return self
+
+
 def as_operator(A, *, backend: str = "xla"):
     """Coerce to the operator protocol.
 
     Operators and legacy ``LinOp`` closures pass through (both satisfy the
-    same duck protocol); raw arrays wrap into a :class:`DenseOp`.
+    same duck protocol); BCOO sparse matrices wrap into a :class:`SparseOp`;
+    raw arrays wrap into a :class:`DenseOp`.
     """
     if isinstance(A, Operator):
         return A
     if hasattr(A, "mv") and hasattr(A, "rmv"):   # LinOp & look-alikes
         return A
+    from jax.experimental import sparse as jsparse
+    if isinstance(A, jsparse.BCOO):
+        return SparseOp.from_bcoo(A, backend=backend)
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
     return DenseOp(jnp.asarray(A), backend=backend)

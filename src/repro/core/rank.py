@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 import repro.core.gk as gk_mod
 from repro.core.linop import LinOp
-from repro.core.operators import Operator, as_operator
+from repro.core.operators import (GramOp, Operator, TransposedOp, as_operator)
 from repro.core.tridiag import btb_eigh
 
 Array = jax.Array
@@ -46,6 +46,18 @@ def numerical_rank(
     NumPy where absolute thresholds are meaningful).
     """
     A = as_operator(A)
+    # Matrix-free unwrapping: rank(Aᵀ) == rank(A) and rank(AᵀA) ==
+    # rank(AAᵀ) == rank(A), so run GK on the innermost operand — never on
+    # the composed chain (GramOp matvecs square the condition number,
+    # σ(AᵀA) = σ(A)², which pushes small-but-nonzero singular values under
+    # the breakdown threshold and *under*-counts rank; a TransposedOp adds
+    # an indirection per half-iteration for no information).  Neither wrapper
+    # is ever densified.  For a GramOp input the returned ``eigenvalues``
+    # are therefore the Ritz values of the *inner* operator's BᵀB — the
+    # rank they count is identical.
+    while isinstance(A, (TransposedOp, GramOp)):
+        A = A.inner
+        A = as_operator(A)
     if max_iters is None:
         max_iters = min(A.shape)
     max_iters = min(max_iters, min(A.shape))

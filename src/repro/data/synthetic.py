@@ -113,3 +113,55 @@ def rsl_batch(ds: RSLDataset, seed: int, step: int, batch: int) -> dict:
     key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     idx = jax.random.randint(key, (batch,), 0, ds.X.shape[0])
     return {"x": ds.X[idx], "v": ds.V[idx], "y": ds.y[idx]}
+
+
+# ---------------------------------------------------------------------------
+# Matrix-free problem generators (sparse / Kronecker operands for the
+# fsvd_blocked / operator-algebra test-and-benchmark surface)
+# ---------------------------------------------------------------------------
+
+class MatrixFreeProblem(NamedTuple):
+    op: "object"          # repro.core.operators Operator — the solver input
+    dense: Array          # materialized reference (small dims / oracles only)
+
+
+def make_sparse_problem(key, m: int, n: int, *, density: float = 0.02,
+                        rank: Optional[int] = None,
+                        backend: str = "xla") -> MatrixFreeProblem:
+    """Random sparse operand with a dense oracle.
+
+    ``rank=None``: iid Gaussian values on a Bernoulli(density) mask
+    (full-rank w.p. 1).  ``rank=r``: product of two sparse factors
+    ``S₁ (m, r) @ S₂ (r, n)`` — exactly rank ≤ r and still sparse for small
+    density, the matrix-free analogue of :func:`conftest.make_lowrank`.
+    """
+    from repro.core.operators import SparseOp
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if rank is None:
+        mask = jax.random.bernoulli(k1, density, (m, n))
+        dense = jnp.where(mask, jax.random.normal(k2, (m, n)), 0.0)
+    else:
+        d = density ** 0.5
+        S1 = jnp.where(jax.random.bernoulli(k1, d, (m, rank)),
+                       jax.random.normal(k2, (m, rank)), 0.0)
+        S2 = jnp.where(jax.random.bernoulli(k3, d, (rank, n)),
+                       jax.random.normal(k4, (rank, n)), 0.0)
+        dense = S1 @ S2
+    return MatrixFreeProblem(SparseOp.fromdense(dense, backend=backend),
+                             dense)
+
+
+def make_kron_problem(key, ma: int, na: int, mb: int, nb: int
+                      ) -> MatrixFreeProblem:
+    """Kronecker operand ``A ⊗ B`` with its dense oracle.
+
+    The product's singular values are the outer product of the factors'
+    spectra — ground truth comes from two small SVDs even when the product
+    itself would be huge.
+    """
+    from repro.core.operators import DenseOp, KroneckerOp
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (ma, na)) / (ma * na) ** 0.25
+    B = jax.random.normal(k2, (mb, nb)) / (mb * nb) ** 0.25
+    return MatrixFreeProblem(KroneckerOp(DenseOp(A), DenseOp(B)),
+                             jnp.kron(A, B))

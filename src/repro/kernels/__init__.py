@@ -3,6 +3,7 @@
 gk_matvec      — fused Lanczos half-iterations  u = A p − α q,  v = Aᵀ q − β p
 reorth         — CGS reorthogonalization passes  (Qᵀv then v − Qc)
 lowrank_update — W = U diag(s) Vᵀ materialization
+sparse_matvec  — row-blocked ELL sparse matvec  y = A x  (SparseOp backend)
 
 ``ops`` holds the jit'd public wrappers (padding + interpret-mode switch);
 ``ref`` holds the pure-jnp oracles every kernel is allclose-tested against.

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import gk_matvec as _gk
 from repro.kernels import lowrank_update as _lr
 from repro.kernels import reorth as _ro
+from repro.kernels import sparse_matvec as _sp
 
 Array = jax.Array
 
@@ -96,3 +97,19 @@ def lowrank_matmul(U: Array, s: Array, Vt: Array, *, bm: int = _lr.BM,
     Vtp = _pad_to(Vt, bn, 1)
     out = _lr.lowrank_matmul(Up, s, Vtp, bm=bm, bn=bn, interpret=_interpret())
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def sparse_matvec(vals: Array, cols: Array, x: Array, *,
+                  bm: int = _sp.BM) -> Array:
+    """y = A @ x, A in padded-ELL rows (``sparse_matvec.ell_pack``) → (m,) f32.
+
+    Pads rows to a ``bm`` multiple and the slot dim to the f32 lane width;
+    both paddings add (value 0, column 0) slots, which are exact.
+    """
+    m, _ = vals.shape
+    bm = min(bm, m) or 1
+    vp = _pad_to(_pad_to(vals, bm, 0), _sp.BL, 1)
+    cp = _pad_to(_pad_to(cols, bm, 0), _sp.BL, 1)
+    out = _sp.sparse_matvec(vp, cp, _col(x), bm=bm, interpret=_interpret())
+    return out[:m, 0]

@@ -39,3 +39,9 @@ def lowrank_matmul(U: Array, s: Array, Vt: Array) -> Array:
     """W = U diag(s) V^T  (retraction materialization)."""
     return (U.astype(jnp.float32) * s.astype(jnp.float32)[None, :]) \
         @ Vt.astype(jnp.float32)
+
+
+def sparse_matvec(vals: Array, cols: Array, x: Array) -> Array:
+    """y = A @ x for A in padded-ELL rows (vals/cols (m, L), x (n,))."""
+    return jnp.sum(vals.astype(jnp.float32)
+                   * x.astype(jnp.float32)[cols], axis=1)

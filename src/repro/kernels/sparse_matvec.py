@@ -1,0 +1,86 @@
+"""Row-blocked ELL sparse matvec Pallas kernel: ``y = A x`` for sparse A.
+
+Sparse GK matvecs are gather-bound, not FLOP-bound, so the kernel's job is
+layout: pack the COO triplets into padded ELL rows — ``vals``/``cols`` of
+shape (m, L) with L = max row population, zero-padded (slot value 0 at
+column 0 contributes exactly 0) — then stream row blocks through VMEM while
+the dense vector x stays resident.  Each grid step owns ``bm`` rows:
+
+    y[i] = Σ_s vals[i, s] * x[cols[i, s]]
+
+i.e. a VPU multiply + lane reduction over an (bm, L) tile with a gather from
+the resident x.  The transpose direction reuses the same kernel on the ELL
+pack of Aᵀ (built once, host-side) — scatter never appears, which is what
+keeps the kernel TPU-shaped.
+
+The pack is value-dependent (L = max nnz per row), so ``ell_pack`` runs
+host-side on concrete coordinates (NumPy) — done once at ``SparseOp``
+construction, never under a trace.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# default tile: 128 rows per grid step; the slot dimension is lane-padded by
+# ops.py to a multiple of BL so (bm, L) tiles sit on f32 layout boundaries.
+BM, BL = 128, 128
+
+
+def ell_pack(data, indices, spshape) -> tuple[Array, Array]:
+    """Pack COO triplets into padded ELL rows (host-side, concrete arrays).
+
+    Returns ``(vals (m, L), cols (m, L))`` with L = max row population
+    (min 1).  Empty slots carry (value 0, column 0) — exact, because
+    ``0 * x[0] == 0``.  Duplicate coordinates keep separate slots (sum
+    semantics, matching BCOO).
+    """
+    m, _ = spshape
+    d = np.asarray(data)
+    idx = np.asarray(indices)
+    rows, cols = idx[:, 0].astype(np.int64), idx[:, 1].astype(np.int64)
+    counts = np.bincount(rows, minlength=m)
+    L = max(int(counts.max(initial=0)), 1)
+    vals = np.zeros((m, L), d.dtype)
+    colp = np.zeros((m, L), np.int32)
+    order = np.argsort(rows, kind="stable")
+    r_sorted = rows[order]
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    slot = np.arange(r_sorted.shape[0]) - offsets[r_sorted]
+    vals[r_sorted, slot] = d[order]
+    colp[r_sorted, slot] = cols[order]
+    return jnp.asarray(vals), jnp.asarray(colp)
+
+
+def _spmv_kernel(v_ref, c_ref, x_ref, o_ref):
+    """One row block: o = Σ_slots vals ⊙ x[cols]  (f32 accumulate)."""
+    x = x_ref[...][:, 0].astype(jnp.float32)
+    gathered = jnp.take(x, c_ref[...], axis=0)          # (bm, L)
+    o_ref[...] = jnp.sum(v_ref[...].astype(jnp.float32) * gathered,
+                         axis=1, keepdims=True)
+
+
+def sparse_matvec(vals: Array, cols: Array, x: Array, *,
+                  bm: int = BM, interpret: bool = True) -> Array:
+    """y = A @ x with A in padded-ELL rows.  vals/cols: (m, L); x: (n, 1).
+
+    m must be a multiple of bm (``ops.py`` pads rows with empty slots).
+    """
+    m, L = vals.shape
+    assert m % bm == 0, (vals.shape, bm)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, x)

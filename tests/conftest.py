@@ -5,6 +5,23 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+try:                                  # hypothesis is a dev/CI requirement
+    import os
+
+    import hypothesis
+
+    # CI runs the property suites under HYPOTHESIS_PROFILE=ci: fixed,
+    # derandomized examples so per-PR runs are reproducible.  Hypothesis
+    # does not read the env var on its own — load_profile is required.
+    hypothesis.settings.register_profile(
+        "ci", max_examples=40, deadline=None, derandomize=True)
+    hypothesis.settings.register_profile(
+        "dev", max_examples=10, deadline=None)
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:
+    pass
+
 
 @pytest.fixture(scope="module", autouse=True)
 def _clear_jit_caches():

@@ -75,6 +75,110 @@ def test_lowrank_matmul(m, n, k, dt):
                                **_tol(dt))
 
 
+# --------------------------------------------------------------------------
+# ragged shapes: wrappers pad to tile multiples with zeros — exactness of
+# that claim is locked in on non-tile-multiple (m, n) well away from any
+# (8, 128)-ish boundary, including the sparse ELL kernel.
+# --------------------------------------------------------------------------
+
+RAGGED = [(300, 517), (257, 129), (127, 383), (300, 200)]
+
+
+@pytest.mark.parametrize("m,n", RAGGED)
+def test_matvec_fused_ragged(m, n):
+    ks = jax.random.split(jax.random.PRNGKey(m ^ n), 3)
+    A = jax.random.normal(ks[0], (m, n))
+    p = jax.random.normal(ks[1], (n,))
+    y = jax.random.normal(ks[2], (m,))
+    np.testing.assert_allclose(np.asarray(ops.matvec_fused(A, p, y, 0.9)),
+                               np.asarray(ref.matvec_fused(A, p, y, 0.9)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,n", RAGGED)
+def test_rmatvec_fused_ragged(m, n):
+    ks = jax.random.split(jax.random.PRNGKey(m + 3 * n), 3)
+    A = jax.random.normal(ks[0], (m, n))
+    q = jax.random.normal(ks[1], (m,))
+    y = jax.random.normal(ks[2], (n,))
+    np.testing.assert_allclose(np.asarray(ops.rmatvec_fused(A, q, y, 0.4)),
+                               np.asarray(ref.rmatvec_fused(A, q, y, 0.4)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,k", [(300, 17), (517, 5), (129, 31)])
+def test_reorth_ragged(m, k):
+    ks = jax.random.split(jax.random.PRNGKey(m * k), 2)
+    Q = jnp.linalg.qr(jax.random.normal(ks[0], (m, k)))[0]
+    v = jax.random.normal(ks[1], (m,))
+    np.testing.assert_allclose(np.asarray(ops.reorth(v, Q, 2)),
+                               np.asarray(ref.reorth(v, Q, 2)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n", RAGGED)
+def test_lowrank_matmul_ragged(m, n):
+    ks = jax.random.split(jax.random.PRNGKey(m - n), 3)
+    U = jax.random.normal(ks[0], (m, 7))
+    s = jnp.abs(jax.random.normal(ks[1], (7,)))
+    Vt = jax.random.normal(ks[2], (7, n))
+    np.testing.assert_allclose(np.asarray(ops.lowrank_matmul(U, s, Vt)),
+                               np.asarray(ref.lowrank_matmul(U, s, Vt)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# sparse ELL matvec kernel
+# --------------------------------------------------------------------------
+
+def _random_sparse(key, m, n, density):
+    km, kv = jax.random.split(key)
+    mask = jax.random.bernoulli(km, density, (m, n))
+    return jnp.where(mask, jax.random.normal(kv, (m, n)), 0.0)
+
+
+@pytest.mark.parametrize("m,n,density",
+                         [(300, 517, 0.02), (257, 129, 0.1),
+                          (64, 48, 0.3), (128, 1000, 0.005)])
+def test_sparse_matvec_vs_ref(m, n, density):
+    from repro.kernels.sparse_matvec import ell_pack
+    A = _random_sparse(jax.random.PRNGKey(m * n), m, n, density)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    idx = jnp.stack(jnp.nonzero(A), axis=1)
+    vals, cols = ell_pack(A[idx[:, 0], idx[:, 1]], idx, (m, n))
+    got = ops.sparse_matvec(vals, cols, x)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.sparse_matvec(vals, cols, x)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A @ x),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sparse_matvec_empty_rows_and_duplicates():
+    """Rows with zero entries and duplicate COO coordinates (sum semantics)
+    both survive the ELL pack."""
+    from repro.kernels.sparse_matvec import ell_pack
+    data = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    idx = jnp.asarray([[0, 1], [0, 1], [3, 0], [3, 2]])   # row 0 duplicated;
+    x = jnp.asarray([1.0, 10.0, 100.0])                   # rows 1, 2 empty
+    vals, cols = ell_pack(data, idx, (5, 3))
+    got = ops.sparse_matvec(vals, cols, x)
+    np.testing.assert_allclose(np.asarray(got),
+                               [30.0, 0.0, 0.0, 403.0, 0.0], rtol=1e-6)
+
+
+def test_sparse_matvec_tile_override():
+    from repro.kernels.sparse_matvec import ell_pack
+    A = _random_sparse(jax.random.PRNGKey(5), 200, 150, 0.05)
+    x = jax.random.normal(jax.random.PRNGKey(6), (150,))
+    idx = jnp.stack(jnp.nonzero(A), axis=1)
+    vals, cols = ell_pack(A[idx[:, 0], idx[:, 1]], idx, (200, 150))
+    for bm in (32, 64, 256):
+        np.testing.assert_allclose(
+            np.asarray(ops.sparse_matvec(vals, cols, x, bm=bm)),
+            np.asarray(A @ x), rtol=2e-4, atol=2e-4)
+
+
 def test_kernel_tile_override():
     """Non-default block shapes still correct (hillclimb knob)."""
     key = jax.random.PRNGKey(0)

@@ -1,0 +1,174 @@
+"""Hypothesis property battery for the operator-algebra laws.
+
+Adjoint consistency, transpose involution, linearity and pytree round-trips
+(through ``jit`` and ``vmap``) hold for *every* operator class — including
+the matrix-free ``SparseOp`` / ``KroneckerOp`` / ``GramOp`` — on random
+shapes and seeds, not just the fixed cases of ``test_operators.py``.
+
+Skips cleanly when hypothesis is absent (dev/CI requirement, see
+requirements-dev.txt).  CI runs it in a dedicated job under the ``ci``
+profile registered below (fixed derandomized seed, more examples).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property battery needs hypothesis (dev req)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.operators import (DenseOp, GramOp, KroneckerOp, LowRankOp,  # noqa: E402
+                                  ScaledOp, SparseOp, SumOp, TransposedOp,
+                                  to_dense)
+
+# the active profile ("ci" / "dev", registered in conftest.py) is picked by
+# the HYPOTHESIS_PROFILE environment variable — CI sets "ci"
+
+OP_KINDS = ("dense", "lowrank", "sparse", "kron", "gram", "sum",
+            "scaled", "transposed")
+
+
+def _make_op(kind: str, m: int, n: int, seed: int):
+    """Build an operator of ``kind`` with an exact dense oracle."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    A = jax.random.normal(ks[0], (m, n))
+    if kind == "dense":
+        return DenseOp(A), A
+    if kind == "lowrank":
+        r = max(min(m, n) // 2, 1)
+        U = jnp.linalg.qr(jax.random.normal(ks[1], (m, r)))[0]
+        s = jnp.abs(jax.random.normal(ks[2], (r,))) + 0.1
+        Vt = jnp.linalg.qr(jax.random.normal(ks[3], (n, r)))[0].T
+        return LowRankOp(U, s, Vt), (U * s[None, :]) @ Vt
+    if kind == "sparse":
+        mask = jax.random.bernoulli(ks[1], 0.3, (m, n))
+        S = jnp.where(mask, A, 0.0)
+        return SparseOp.fromdense(S), S
+    if kind == "kron":
+        B = jax.random.normal(ks[1], (max(m // 2, 1), max(n // 2, 1)))
+        C = jax.random.normal(ks[2], (2, 2))
+        return (KroneckerOp(DenseOp(B), DenseOp(C)),
+                jnp.kron(B, C))
+    if kind == "gram":
+        return GramOp(DenseOp(A)), A.T @ A
+    if kind == "sum":
+        B = jax.random.normal(ks[1], (m, n))
+        return SumOp((DenseOp(A), DenseOp(B))), A + B
+    if kind == "scaled":
+        return ScaledOp(-1.7, DenseOp(A)), -1.7 * A
+    if kind == "transposed":
+        return TransposedOp(DenseOp(A)), A.T
+    raise AssertionError(kind)
+
+
+dims = st.integers(2, 12)
+seeds = st.integers(0, 2**31 - 1)
+kinds = st.sampled_from(OP_KINDS)
+
+
+def _close(x, y, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                               rtol=tol, atol=tol)
+
+
+@settings(deadline=None)
+@given(kinds, dims, dims, seeds)
+def test_adjoint_consistency(kind, m, n, seed):
+    """⟨Aᵀy, x⟩ == ⟨y, Ax⟩ for every operator kind."""
+    op, _ = _make_op(kind, m, n, seed)
+    om, on = op.shape
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed ^ 0x5EED), 2)
+    x = jax.random.normal(kx, (on,))
+    y = jax.random.normal(ky, (om,))
+    lhs = jnp.vdot(op.T @ y, x)
+    rhs = jnp.vdot(y, op @ x)
+    scale = float(jnp.abs(rhs)) + float(jnp.linalg.norm(x)
+                                        * jnp.linalg.norm(y)) + 1e-6
+    assert abs(float(lhs - rhs)) / scale < 1e-4
+
+
+@settings(deadline=None)
+@given(kinds, dims, dims, seeds)
+def test_transpose_involution(kind, m, n, seed):
+    op, dense = _make_op(kind, m, n, seed)
+    _close(to_dense(op.T.T), dense)
+    _close(to_dense(op.T), dense.T)
+
+
+@settings(deadline=None)
+@given(kinds, kinds, dims, dims, seeds, st.floats(-3, 3))
+def test_linearity(kind_a, kind_b, m, n, seed, alpha):
+    """(A + αB) x == A x + α (B x) — SumOp/ScaledOp distribute exactly."""
+    op_a, da = _make_op(kind_a, m, n, seed)
+    # force matching shapes: rebuild b on a's shape
+    am, an = op_a.shape
+    op_b, db = _make_op(kind_b if kind_b not in ("kron",) else "dense",
+                        am, an, seed + 1)
+    if op_b.shape != (am, an):       # gram/transposed reshape their input
+        op_b, db = _make_op("dense", am, an, seed + 1)
+    x = jax.random.normal(jax.random.PRNGKey(seed ^ 0xA11CE), (an,))
+    combo = op_a + alpha * op_b
+    _close(combo @ x, (op_a @ x) + alpha * (op_b @ x), tol=1e-3)
+    _close(to_dense(combo), da + alpha * db, tol=1e-3)
+
+
+@settings(deadline=None)
+@given(kinds, dims, dims, seeds)
+def test_pytree_roundtrip_and_jit(kind, m, n, seed):
+    """flatten→unflatten is the identity, and the operator crosses a jit
+    boundary as a pytree argument with the same matvec."""
+    op, dense = _make_op(kind, m, n, seed)
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    op2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(op2) is type(op)
+    _close(to_dense(op2), dense)
+
+    x = jax.random.normal(jax.random.PRNGKey(seed ^ 0xBEEF), (op.shape[1],))
+
+    @jax.jit
+    def apply(o, v):
+        return o.mv(v)
+
+    _close(apply(op, x), dense @ x, tol=1e-3)
+
+
+@settings(deadline=None)
+@given(st.sampled_from(("dense", "lowrank", "sparse")), dims, dims, seeds)
+def test_vmap_over_stacked_vectors(kind, m, n, seed):
+    """vmap of the matvec over a batch of vectors == matmat against the
+    stacked matrix (the transform path the facade's batched solve uses)."""
+    op, dense = _make_op(kind, m, n, seed)
+    X = jax.random.normal(jax.random.PRNGKey(seed ^ 0xF00D),
+                          (3, op.shape[1]))
+    got = jax.vmap(op.mv)(X)
+    _close(got, X @ dense.T, tol=1e-3)
+
+
+@settings(deadline=None)
+@given(dims, dims, dims, dims, seeds)
+def test_kron_mixed_factors(ma, na, mb, nb, seed):
+    """KroneckerOp over arbitrary (sparse ⊗ dense) factor shapes matches
+    jnp.kron exactly."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jnp.where(jax.random.bernoulli(k1, 0.5, (ma, na)),
+                  jax.random.normal(k2, (ma, na)), 0.0)
+    B = jax.random.normal(k3, (mb, nb))
+    op = KroneckerOp(SparseOp.fromdense(A), DenseOp(B))
+    _close(to_dense(op), jnp.kron(A, B), tol=1e-3)
+    x = jax.random.normal(jax.random.PRNGKey(seed ^ 1), (na * nb,))
+    _close(op @ x, jnp.kron(A, B) @ x, tol=1e-3)
+
+
+@settings(deadline=None)
+@given(dims, dims, seeds)
+def test_gram_sides_consistent(m, n, seed):
+    """GramOp("ata") of A equals GramOp("aat") of Aᵀ, and both are PSD."""
+    op, dense = _make_op("dense", m, n, seed)
+    g1 = to_dense(GramOp(op, side="ata"))
+    g2 = to_dense(GramOp(op.T, side="aat"))
+    _close(g1, g2, tol=1e-3)
+    w = jnp.linalg.eigvalsh(g1)
+    assert float(w.min()) > -1e-3 * max(float(w.max()), 1.0)

@@ -1,0 +1,257 @@
+"""Differential battery: every registered solver vs ``jnp.linalg.svd``.
+
+One shared matrix zoo (low-rank+noise, graded / flat spectra,
+ill-conditioned, rectangular both ways) and per-method tolerances: the GK
+solvers must track dense SVD at f32 roundoff; the sketch is held to its
+looser HMT guarantee.  Separately, a densify-guard proves the matrix-free
+solver path (``fsvd_blocked`` on ``SparseOp`` / ``KroneckerOp``, and
+``estimate_rank`` on ``TransposedOp`` / ``GramOp``) never materializes the
+dense matrix.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.api import SVDSpec, estimate_rank, factorize
+from repro.core.operators import (DenseOp, GramOp, KroneckerOp, Operator,
+                                  SparseOp, TransposedOp)
+from repro.data.synthetic import make_kron_problem, make_sparse_problem
+
+R = 8                                    # triplets requested throughout
+
+
+def _spectrum_matrix(key, m, n, s):
+    """Dense matrix with the exact singular values ``s`` (len min(m, n))."""
+    k1, k2 = jax.random.split(key)
+    U = jnp.linalg.qr(jax.random.normal(k1, (m, min(m, n))))[0]
+    V = jnp.linalg.qr(jax.random.normal(k2, (n, min(m, n))))[0]
+    return (U * jnp.asarray(s)[None, :]) @ V.T
+
+
+def _zoo():
+    key = jax.random.PRNGKey(1234)
+    ks = jax.random.split(key, 8)
+    d = min(80, 60)
+    zoo = {
+        # name: (matrix, has_spectral_gap_at_R)
+        "lowrank_noise": (
+            make_lowrank(ks[0], 100, 70, R)
+            + 1e-4 * jax.random.normal(ks[1], (100, 70)), True),
+        "graded": (_spectrum_matrix(ks[2], 80, 60,
+                                    0.7 ** jnp.arange(d)), False),
+        # near-flat, multiplicity-free: an *exactly* flat spectrum is
+        # unreachable for single-vector GK (the Krylov space of a repeated
+        # singular value is one-dimensional — breakdown after one step is
+        # the mathematically correct answer), so the zoo spaces the values
+        # by 2e-3 and sizes the matrix so k can cover the full spectrum.
+        "flat": (_spectrum_matrix(ks[3], 48, 48,
+                                  1.0 - 0.002 * jnp.arange(48)), False),
+        "illcond": (_spectrum_matrix(
+            ks[4], 60, 60, jnp.logspace(0, -6, 60)), False),
+        "tall": (make_lowrank(ks[5], 150, 40, R)
+                 + 1e-4 * jax.random.normal(ks[6], (150, 40)), True),
+        "wide": (make_lowrank(ks[6], 40, 110, R)
+                 + 1e-4 * jax.random.normal(ks[7], (40, 110)), True),
+    }
+    return zoo
+
+
+ZOO = _zoo()
+
+# per-method accuracy demanded on singular values, as max |ŝ − s| / s_max —
+# the scale on which f32 Lanczos accuracy is actually defined (per-value
+# relative error is unbounded at the f32 noise floor for tiny tail values).
+SOLVERS = {
+    "fsvd": dict(stol=5e-4, spec=dict(max_iters=48)),
+    "fsvd_blocked": dict(stol=5e-4, spec=dict()),
+    "rsvd": dict(stol=5e-2, spec=dict(power_iters=3, oversample=10)),
+    "fsvd_sharded": dict(stol=5e-4, spec=dict(max_iters=48)),
+}
+
+
+def _run(method, A, key):
+    cfg = SOLVERS[method]
+    spec = SVDSpec(method=method, rank=R, **cfg["spec"])
+    if method == "fsvd_sharded":
+        import repro.distributed.gk_dist  # noqa: F401  (registers solver)
+        from repro.distributed.matvec import ShardedOp, place_operator
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        operand = ShardedOp(place_operator(A, mesh), mesh)
+    else:
+        operand = A
+    return factorize(operand, spec, key=key)
+
+
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_singular_value_parity(method, name):
+    A, _ = ZOO[name]
+    s_true = jnp.linalg.svd(A, compute_uv=False)
+    out = _run(method, A, jax.random.PRNGKey(7))
+    err = np.max(np.abs(np.asarray(out.s) - np.asarray(s_true[:R])))
+    assert err / float(s_true[0]) < SOLVERS[method]["stol"], \
+        f"{method} on {name}: σ error {err:.2e} vs σ_max {float(s_true[0]):.2e}"
+
+
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+@pytest.mark.parametrize("name",
+                         [n for n in sorted(ZOO) if ZOO[n][1]])
+def test_subspace_parity(method, name):
+    """Where the spectrum has a gap at R, the computed right subspace must
+    align with the dense-SVD one: all principal-angle cosines ≈ 1."""
+    A, _ = ZOO[name]
+    _, _, Vt = jnp.linalg.svd(A, full_matrices=False)
+    out = _run(method, A, jax.random.PRNGKey(11))
+    cos = jnp.linalg.svd(Vt[:R] @ out.V, compute_uv=False)
+    floor = 0.99 if method == "rsvd" else 0.9999
+    assert float(jnp.min(cos)) > floor, \
+        f"{method} on {name}: min principal cosine {float(jnp.min(cos)):.6f}"
+
+
+@pytest.mark.parametrize("method", ["fsvd", "fsvd_blocked"])
+def test_reconstruction_residual(method):
+    """On an exactly rank-R input the rank-R reconstruction is exact."""
+    A = make_lowrank(jax.random.PRNGKey(3), 90, 60, R)
+    out = _run(method, A, jax.random.PRNGKey(5))
+    rel = float(jnp.linalg.norm(A - out.reconstruct())
+                / jnp.linalg.norm(A))
+    assert rel < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# densify guard: the matrix-free paths must never materialize the operand
+# ---------------------------------------------------------------------------
+
+class _DensifyGuard(Operator):
+    """Forwards the matvec protocol; trips on any densification attempt —
+    ``to_dense`` or a matmat wide enough to be the identity trick."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.width_cap = max(min(inner.shape) - 1, 1)
+
+    shape = property(lambda self: self._inner.shape)
+    dtype = property(lambda self: self._inner.dtype)
+
+    def mv(self, p):
+        return self._inner.mv(p)
+
+    def rmv(self, q):
+        return self._inner.rmv(q)
+
+    def matmat(self, V):
+        assert V.shape[1] <= self.width_cap, \
+            f"matmat width {V.shape[1]} is a densification in disguise"
+        return self._inner.matmat(V)
+
+    def rmatmat(self, Q):
+        assert Q.shape[1] <= self.width_cap, \
+            f"rmatmat width {Q.shape[1]} is a densification in disguise"
+        return self._inner.rmatmat(Q)
+
+    def to_dense(self):
+        raise AssertionError("solver densified a matrix-free operand")
+
+    @property
+    def T(self):
+        return _DensifyGuard(self._inner.T)
+
+
+def test_fsvd_blocked_sparse_never_densifies():
+    """Acceptance: factorize(SparseOp, fsvd_blocked, k=20) matches dense SVD
+    to ≤ 1e-4 per-value relative error without materializing the matrix."""
+    prob = make_sparse_problem(jax.random.PRNGKey(21), 250, 180,
+                               density=0.05)
+    s_true = jnp.linalg.svd(prob.dense, compute_uv=False)[:20]
+    out = factorize(_DensifyGuard(prob.op),
+                    SVDSpec(method="fsvd_blocked", rank=20),
+                    key=jax.random.PRNGKey(2))
+    rel = np.abs(np.asarray(out.s) - np.asarray(s_true)) \
+        / np.asarray(s_true)
+    assert rel.max() < 1e-4
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fsvd_blocked_sparse_backends_agree(backend):
+    prob = make_sparse_problem(jax.random.PRNGKey(23), 150, 120,
+                               density=0.08, backend=backend)
+    s_true = jnp.linalg.svd(prob.dense, compute_uv=False)[:10]
+    out = factorize(prob.op, SVDSpec(method="fsvd_blocked", rank=10),
+                    key=jax.random.PRNGKey(4))
+    np.testing.assert_allclose(np.asarray(out.s), np.asarray(s_true),
+                               rtol=1e-4)
+
+
+def test_fsvd_blocked_kronecker_never_densifies():
+    """The Kronecker operand streams through without materializing A ⊗ B."""
+    prob = make_kron_problem(jax.random.PRNGKey(31), 18, 14, 15, 12)
+    s_true = jnp.linalg.svd(prob.dense, compute_uv=False)[:R]
+    out = factorize(_DensifyGuard(prob.op),
+                    SVDSpec(method="fsvd_blocked", rank=R),
+                    key=jax.random.PRNGKey(6))
+    err = np.max(np.abs(np.asarray(out.s) - np.asarray(s_true)))
+    assert err / float(s_true[0]) < 1e-4
+
+
+def test_fsvd_blocked_respects_memory_budget():
+    """max_basis caps the retained basis; accuracy survives the restarts."""
+    A = make_lowrank(jax.random.PRNGKey(41), 200, 150, 12) \
+        + 1e-4 * jax.random.normal(jax.random.PRNGKey(42), (200, 150))
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:10]
+
+    class _BudgetGuard(_DensifyGuard):
+        max_seen = 0
+
+        def matmat(self, V):
+            _BudgetGuard.max_seen = max(_BudgetGuard.max_seen, V.shape[1])
+            return super().matmat(V)
+
+    out = factorize(_BudgetGuard(DenseOp(A)),
+                    SVDSpec(method="fsvd_blocked", rank=10, block_size=4,
+                            max_basis=22), key=jax.random.PRNGKey(8))
+    assert _BudgetGuard.max_seen <= 22
+    err = np.max(np.abs(np.asarray(out.s) - np.asarray(s_true)))
+    assert err / float(s_true[0]) < 5e-4
+
+
+# ---------------------------------------------------------------------------
+# estimate_rank regressions: TransposedOp / GramOp stay matrix-free
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wrap", ["transposed", "gram_ata", "gram_aat",
+                                  "gram_of_transposed"])
+def test_estimate_rank_matrix_free(wrap):
+    A = make_lowrank(jax.random.PRNGKey(51), 80, 60, 7)
+    op = DenseOp(A)
+    wrapped = {
+        "transposed": TransposedOp(op),
+        "gram_ata": GramOp(op, side="ata"),
+        "gram_aat": GramOp(op, side="aat"),
+        "gram_of_transposed": GramOp(TransposedOp(op)),
+    }[wrap]
+    est = estimate_rank(_DensifyGuard(wrapped) if wrap == "transposed"
+                        else wrapped, key=jax.random.PRNGKey(9))
+    assert int(est.rank) == 7
+
+
+def test_estimate_rank_gram_not_underestimated():
+    """σ(AᵀA) = σ(A)² squares the condition number: on an ill-conditioned
+    input, GK on the Gram chain would drop small-but-real singular values
+    below the breakdown threshold.  The matrix-free unwrapping must keep
+    the count identical to running on A itself."""
+    A = _spectrum_matrix(jax.random.PRNGKey(61), 50, 40,
+                         jnp.concatenate([jnp.logspace(0, -2, 20),
+                                          jnp.zeros(20)]))
+    direct = estimate_rank(A, key=jax.random.PRNGKey(10))
+    viagram = estimate_rank(GramOp(DenseOp(A)), key=jax.random.PRNGKey(10))
+    assert int(viagram.rank) == int(direct.rank) == 20
+
+
+def test_estimate_rank_sparse_operand():
+    prob = make_sparse_problem(jax.random.PRNGKey(71), 120, 90,
+                               density=0.1, rank=9)
+    est = estimate_rank(_DensifyGuard(prob.op), key=jax.random.PRNGKey(12))
+    assert int(est.rank) == int(jnp.linalg.matrix_rank(prob.dense))
