@@ -1,0 +1,113 @@
+"""GK inner-loop step benchmark: fused pipeline vs unfused composition.
+
+Measures one full left GK half-iteration update — the unit the solver
+repeats k times — in two implementations:
+
+  * ``unfused``  (the seed inner loop): separate ``matvec_fused`` and
+    ``reorth`` kernel launches with the candidate vector round-tripping
+    HBM between them, a jnp norm, and the whole-buffer masked carry
+    ``jnp.where(keep, Q.at[:, i].set(qn), Q)`` — O(mk) traffic per step.
+  * ``fused``    (this PR): the ``kernels.gk_step`` pipeline (matvec +
+    CGS products + norm epilogue in ``passes+1`` passes over Q, candidate
+    VMEM-resident) and the masked per-*column* carry — O(m) per step.
+
+Both run at f32 and with bf16 basis/matrix storage (the mixed-precision
+policy: half the bytes on every bandwidth-bound stream, f32 accumulate).
+Kernel-only times (no carry) are reported alongside so the two effects
+are separable.  Emit machine-readable records via ``benchmarks.run
+--only gk_step --emit-json`` (schema ``gk_step/v1``, see README).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, timeit
+from repro.kernels import ops
+
+SIZES = [(2048, 512, 64), (4096, 512, 128), (8192, 512, 256)]
+QUICK_SIZES = [(256, 128, 16)]
+PASSES = 2
+DTYPES = ("f32", "bf16")
+
+
+@functools.partial(jax.jit, static_argnames=("passes",))
+def _fused_step(A, p, y, alpha, Q, i, passes=PASSES):
+    """Fused kernels + masked per-column carry (the new inner loop)."""
+    u, beta = ops.gk_step_fused(A, p, y, alpha, Q, passes)
+    qn = u / jnp.where(beta > 0, beta, 1.0)
+    keep = beta > 1e-6
+    cur = jax.lax.dynamic_slice_in_dim(Q, i, 1, axis=1)
+    new = jnp.where(keep, qn.astype(Q.dtype)[:, None], cur)
+    return jax.lax.dynamic_update_slice_in_dim(Q, new, i, axis=1), beta
+
+
+@functools.partial(jax.jit, static_argnames=("passes",))
+def _unfused_step(A, p, y, alpha, Q, i, passes=PASSES):
+    """Seed inner loop: separate kernels + whole-buffer masked carry."""
+    u = ops.matvec_fused(A, p, y, alpha)
+    u = ops.reorth(u, Q, passes)
+    beta = jnp.linalg.norm(u)
+    qn = u / jnp.where(beta > 0, beta, 1.0)
+    keep = beta > 1e-6
+    return jnp.where(keep, Q.at[:, i].set(qn.astype(Q.dtype)), Q), beta
+
+
+@functools.partial(jax.jit, static_argnames=("passes",))
+def _unfused_kernels(A, p, y, alpha, Q, passes=PASSES):
+    """Kernel composition only (no carry) — isolates the fusion win."""
+    u = ops.reorth(ops.matvec_fused(A, p, y, alpha), Q, passes)
+    return u, jnp.linalg.norm(u)
+
+
+def _inputs(m, n, k, dtype_tag):
+    ks = jax.random.split(jax.random.PRNGKey(m + n + k), 4)
+    store = jnp.bfloat16 if dtype_tag == "bf16" else jnp.float32
+    A = jax.random.normal(ks[0], (m, n)).astype(store)
+    p = jax.random.normal(ks[1], (n,))
+    y = jax.random.normal(ks[2], (m,))
+    Q = jnp.linalg.qr(jax.random.normal(ks[3], (m, k)))[0].astype(store)
+    return A, p, y, Q
+
+
+def run(sizes=None, repeats: int = 3, dtypes=DTYPES) -> dict:
+    sizes = SIZES if sizes is None else sizes
+    records = []
+    rows = []
+    for (m, n, k) in sizes:
+        for dt in dtypes:
+            A, p, y, Q = _inputs(m, n, k, dt)
+            i = jnp.asarray(k // 2, jnp.int32)
+            tf, _ = timeit(_fused_step, A, p, y, 0.3, Q, i,
+                           repeats=repeats)
+            tu, _ = timeit(_unfused_step, A, p, y, 0.3, Q, i,
+                           repeats=repeats)
+            tfk, _ = timeit(ops.gk_step_fused, A, p, y, 0.3, Q, PASSES,
+                            repeats=repeats)
+            tuk, _ = timeit(_unfused_kernels, A, p, y, 0.3, Q,
+                            repeats=repeats)
+            rec = {"m": m, "n": n, "k": k, "dtype": dt, "passes": PASSES,
+                   "fused_ms": tf * 1e3, "unfused_ms": tu * 1e3,
+                   "speedup": tu / tf,
+                   "fused_kernel_ms": tfk * 1e3,
+                   "unfused_kernel_ms": tuk * 1e3,
+                   "kernel_speedup": tuk / tfk}
+            records.append(rec)
+            rows.append([f"{m}x{n} k={k}", dt, f"{tu*1e3:.2f}",
+                         f"{tf*1e3:.2f}", f"{rec['speedup']:.2f}x",
+                         f"{rec['kernel_speedup']:.2f}x"])
+    print("\n## GK step: fused pipeline vs unfused composition "
+          "(ms per iteration step)")
+    print(fmt_table(["shape", "store", "unfused", "fused", "step speedup",
+                     "kernel speedup"], rows))
+    return {"schema": "gk_step/v1",
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "passes": PASSES,
+            "records": records}
+
+
+if __name__ == "__main__":
+    run()

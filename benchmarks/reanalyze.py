@@ -1,8 +1,18 @@
-"""Re-derive roofline inputs for existing dry-run/hillclimb artifacts from
-their saved (gzipped) HLO — lets analyzer fixes propagate without the 40-min
-recompile sweep.
+"""Re-derive analysis outputs for existing benchmark artifacts without
+re-running the sweeps.
+
+Two artifact kinds:
+
+  * dry-run / hillclimb directories — recompute roofline inputs from the
+    saved (gzipped) HLO, so analyzer fixes propagate without the 40-min
+    recompile sweep.
+  * standardized BENCH json (``repro-bench/v1``, e.g. ``BENCH_pr3.json``
+    from ``benchmarks.run --emit-json``) — validate the schema and
+    recompute every derived field (speedups) from the raw timings, so a
+    hand-edited or schema-drifted file is caught in CI.
 
     PYTHONPATH=src python -m benchmarks.reanalyze artifacts/dryrun
+    PYTHONPATH=src python -m benchmarks.reanalyze BENCH_pr3.json
 """
 from __future__ import annotations
 
@@ -43,7 +53,59 @@ def reanalyze_dir(art_dir: str) -> int:
     return n
 
 
+_GK_STEP_RAW = ("m", "n", "k", "dtype", "fused_ms", "unfused_ms",
+                "fused_kernel_ms", "unfused_kernel_ms")
+
+
+def reanalyze_bench(path: str) -> int:
+    """Validate a ``repro-bench/v1`` file and recompute derived fields."""
+    bench = json.load(open(path))
+    if bench.get("schema") != "repro-bench/v1":
+        raise SystemExit(f"{path}: not a repro-bench/v1 file "
+                         f"(schema={bench.get('schema')!r})")
+    n = 0
+    for name, sec in sorted(bench.get("sections", {}).items()):
+        schema = sec.get("schema")
+        if schema == "gk_step/v1":
+            for r in sec["records"]:
+                missing = [f for f in _GK_STEP_RAW if f not in r]
+                if missing:
+                    raise SystemExit(
+                        f"{path}: gk_step record missing {missing}")
+                for field, num, den in (
+                        ("speedup", "unfused_ms", "fused_ms"),
+                        ("kernel_speedup", "unfused_kernel_ms",
+                         "fused_kernel_ms")):
+                    want = r[num] / r[den]
+                    have = r.get(field)
+                    if have is not None and abs(have - want) > 1e-6 * want:
+                        raise SystemExit(
+                            f"{path}: gk_step {r['m']}x{r['n']} k={r['k']} "
+                            f"{r['dtype']}: stored {field}={have:.4f} "
+                            f"disagrees with raw timings ({want:.4f})")
+                    r[field] = want
+                print(f"[reanalyze] gk_step {r['m']}x{r['n']} k={r['k']} "
+                      f"{r['dtype']}: step {r['speedup']:.2f}x, "
+                      f"kernels {r['kernel_speedup']:.2f}x")
+                n += 1
+        else:
+            # sections without derived fields (kernels, sparse, ...) are
+            # carried as-is; an unknown schema is not an error, new
+            # sections opt in here.
+            print(f"[reanalyze] section {name!r}: schema {schema!r} "
+                  "carried through")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1)
+    return n
+
+
 if __name__ == "__main__":
+    explicit = bool(sys.argv[1:])
     for d in (sys.argv[1:] or ["artifacts/dryrun", "artifacts/hillclimb"]):
-        if os.path.isdir(d):
+        if os.path.isfile(d) and d.endswith(".json"):
+            print(f"[reanalyze] {d}: {reanalyze_bench(d)} records updated")
+        elif os.path.isdir(d):
             print(f"[reanalyze] {d}: {reanalyze_dir(d)} records updated")
+        elif explicit:
+            # a validator that silently skips its input is no validator
+            raise SystemExit(f"[reanalyze] {d}: no such file or directory")

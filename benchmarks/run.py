@@ -2,10 +2,22 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized subset
+    PYTHONPATH=src python -m benchmarks.run --only gk_step --emit-json
+                                                       # BENCH_pr3.json
+
+``--emit-json [PATH]`` writes every section's machine-readable records to
+one standardized json (default name ``BENCH_pr3.json``) so future PRs can
+diff their speedups against a stored baseline:
+
+    {"schema": "repro-bench/v1", "quick": bool, "backend": str,
+     "sections": {<name>: <section dict, e.g. schema gk_step/v1>}}
+
+``benchmarks.reanalyze`` validates/re-derives the file.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,11 +28,15 @@ def main() -> None:
                     help="smaller sizes / fewer steps (CI)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
-                             "kernels", "sparse"])
+                             "kernels", "sparse", "gk_step"])
+    ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
+                    default=None, metavar="PATH",
+                    help="write section records to a standardized BENCH "
+                         "json (default PATH: BENCH_pr3.json)")
     args = ap.parse_args()
 
-    from benchmarks import (fig1, fig2, kernels_bench, roofline, sparse_bench,
-                            table1, table2)
+    from benchmarks import (fig1, fig2, gk_step_bench, kernels_bench,
+                            roofline, sparse_bench, table1, table2)
 
     t0 = time.time()
     sections = []
@@ -43,6 +59,10 @@ def main() -> None:
         sections.append(("sparse", lambda: sparse_bench.run(
             sizes=sparse_bench.SIZES[:1] if args.quick else None,
             repeats=1 if args.quick else 3)))
+    if args.only in (None, "gk_step"):
+        sections.append(("gk_step", lambda: gk_step_bench.run(
+            sizes=gk_step_bench.QUICK_SIZES if args.quick else None,
+            repeats=1 if args.quick else 3)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(
             mesh="pod16x16")))
@@ -50,13 +70,24 @@ def main() -> None:
             mesh="pod2x16x16")))
 
     failures = []
+    results = {}
     for name, fn in sections:
         print(f"\n{'='*72}\n# {name}\n{'='*72}")
         try:
-            fn()
+            out = fn()
+            if isinstance(out, dict):
+                results[name] = out
         except Exception as e:                      # noqa: BLE001
             failures.append((name, e))
             print(f"[bench] {name} FAILED: {e}")
+    if args.emit_json:
+        import jax
+        payload = {"schema": "repro-bench/v1", "quick": args.quick,
+                   "backend": jax.default_backend(), "sections": results}
+        with open(args.emit_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {args.emit_json} "
+              f"({len(results)} section(s))")
     print(f"\n[bench] done in {time.time()-t0:.0f}s; "
           f"{len(sections)-len(failures)}/{len(sections)} sections ok")
     if failures:

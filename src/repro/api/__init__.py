@@ -16,7 +16,8 @@ solver registry (``register_solver``) lets extensions plug in new methods.
 The legacy per-solver entry points (``repro.core.fsvd/rsvd/numerical_rank``)
 remain as deprecated shims.
 """
-from repro.api.facade import estimate_rank, factorize, resolve_method
+from repro.api.facade import (estimate_rank, factorize, factorize_jit,
+                              resolve_method)
 from repro.api.registry import (available_solvers, get_solver,
                                 register_solver)
 from repro.api.results import Factorization, RankEstimate
@@ -32,7 +33,8 @@ from repro.api import solvers as _solvers  # noqa: E402,F401  (side effect)
 _resolve_key = resolve_key   # the facade's canonical key helper
 
 __all__ = [
-    "SVDSpec", "METHODS", "factorize", "estimate_rank", "resolve_method",
+    "SVDSpec", "METHODS", "factorize", "factorize_jit", "estimate_rank",
+    "resolve_method",
     "Factorization", "RankEstimate",
     "register_solver", "get_solver", "available_solvers",
     "Operator", "DenseOp", "LowRankOp", "SumOp", "ScaledOp",

@@ -62,6 +62,41 @@ def factorize(A, spec: Optional[SVDSpec] = None, *,
     return solver(op, spec, key=key, q1=q1)
 
 
+# solvers that run a host-side Python loop (real early exit / restarts)
+# cannot be staged into a single XLA program.
+_HOST_SIDE_METHODS = frozenset({"fsvd_blocked"})
+
+
+def factorize_jit(spec: SVDSpec, *, donate_q1: bool = True):
+    """A jit-compiled ``fn(A, key, q1) -> Factorization`` specialized to
+    ``spec``, with the warm-start buffer donated on accelerator backends.
+
+    The GK start vector ``q1`` is consumed on entry (normalized into the
+    first basis column), so its HBM allocation is dead for the rest of the
+    solve — donation lets XLA reuse it for an output instead of holding
+    both live.  Donation is only requested on TPU/GPU (CPU ignores it with
+    a per-call warning).  Pass ``q1=None`` to use the keyed start vector.
+
+    Host-loop specs (``host_loop=True`` or a host-side method such as
+    ``fsvd_blocked``) cannot be staged into one XLA program and are
+    rejected.
+    """
+    method = resolve_method(spec)
+    if spec.host_loop or method in _HOST_SIDE_METHODS:
+        raise ValueError(
+            f"factorize_jit requires an in-graph solver; method={method!r} "
+            f"host_loop={spec.host_loop!r} runs a host-side loop")
+    solver = get_solver(method)
+
+    def run(A, key, q1):
+        return solver(as_operator(A, backend=spec.backend), spec,
+                      key=key, q1=q1)
+
+    donate = (2,) if donate_q1 and jax.default_backend() in ("tpu", "gpu") \
+        else ()
+    return jax.jit(run, donate_argnums=donate)
+
+
 def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
                   key: Optional[Array] = None,
                   sigma_tol: Optional[float] = None,
@@ -77,6 +112,14 @@ def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
     spec = (spec or SVDSpec())
     if overrides:
         spec = spec.replace(**overrides)
+    if spec.precision is not None:
+        # breakdown-based rank detection resolves directions down to the
+        # basis storage's CGS2 noise floor — narrowing the storage silently
+        # changes what "numerical rank" means, so refuse rather than ignore.
+        raise ValueError(
+            "estimate_rank requires full-precision bases; got "
+            f"spec.precision={spec.precision!r} (rank detection counts "
+            "directions the stored basis can certify — use precision=None)")
     op = as_operator(A, backend=spec.backend)
     key = resolve_key(key, caller="estimate_rank")
     host_loop = True if spec.host_loop is None else spec.host_loop

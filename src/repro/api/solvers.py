@@ -32,7 +32,8 @@ def solve_fsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
     res = _fsvd(A, spec.rank, spec.max_iters, key=key, q1=q1,
                 eps=spec.tol, relative_eps=spec.relative_tol,
                 reorth_passes=spec.reorth_passes,
-                host_loop=bool(spec.host_loop), dtype=spec.dtype)
+                host_loop=bool(spec.host_loop), dtype=spec.dtype,
+                precision=spec.precision)
     return Factorization(res.U, res.s, res.V, res.kprime, res.breakdown,
                          method="fsvd")
 
@@ -47,7 +48,8 @@ def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
     """
     key = resolve_key(key, caller="factorize(method='rsvd')")
     res = _rsvd(A, spec.rank, p=spec.oversample,
-                power_iters=spec.power_iters, key=key, dtype=spec.dtype)
+                power_iters=spec.power_iters, key=key, dtype=spec.dtype,
+                precision=spec.precision)
     return Factorization(
         res.U, res.s, res.V,
         iterations=jnp.asarray(spec.power_iters, jnp.int32),
@@ -70,7 +72,8 @@ def solve_fsvd_blocked(A, spec: SVDSpec, *, key: Optional[Array] = None,
                         max_basis=spec.max_basis, tol=spec.tol,
                         relative_tol=spec.relative_tol,
                         max_restarts=spec.max_iters or 40, key=key, q1=q1,
-                        reorth_passes=spec.reorth_passes, dtype=spec.dtype)
+                        reorth_passes=spec.reorth_passes, dtype=spec.dtype,
+                        precision=spec.precision)
     return Factorization(res.U, res.s, res.V,
                          iterations=jnp.asarray(res.block_passes, jnp.int32),
                          breakdown=jnp.asarray(not res.converged),

@@ -40,6 +40,14 @@ class SVDSpec:
     max_basis     fsvd_blocked: memory budget — max right-basis vectors
                   held before a thick restart (None = ``max(3 rank,
                   rank + 2 b)``, clamped to ``min(m, n)``).
+    precision     basis *storage* width: None (= compute dtype), "f32",
+                  or "bf16" (bases live half-width in HBM; every
+                  reduction/accumulation stays in the compute dtype).
+                  The GK breakdown threshold widens to the storage's CGS2
+                  noise floor (~eps_bf16² relative), so "bf16" is a
+                  throughput mode for fixed-k factorization — rank
+                  *detection* resolution degrades to that floor and wants
+                  full precision.
     dtype         compute dtype override (None = promote input to f32).
     host_loop     True = host-side Python loop with real early exit
                   (paper wall-time behaviour); False = in-graph fori_loop
@@ -58,6 +66,7 @@ class SVDSpec:
     backend: str = "xla"
     block_size: Optional[int] = None
     max_basis: Optional[int] = None
+    precision: Optional[str] = None
     dtype: Any = None
     host_loop: Optional[bool] = None
 
@@ -72,6 +81,10 @@ class SVDSpec:
         if self.backend not in ("xla", "pallas"):
             raise ValueError(
                 f"backend must be 'xla' or 'pallas', got {self.backend!r}")
+        if self.precision not in (None, "f32", "bf16"):
+            raise ValueError(
+                "precision must be None, 'f32' or 'bf16', got "
+                f"{self.precision!r}")
 
     def replace(self, **changes) -> "SVDSpec":
         return dataclasses.replace(self, **changes)

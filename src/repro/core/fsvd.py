@@ -32,6 +32,14 @@ class FSVDResult(NamedTuple):
     breakdown: Array
 
 
+def _mixed_matmul(B: Array, X: Array) -> Array:
+    """``B @ X`` with f32 accumulation when B is a narrow-storage basis
+    (bf16 B stays bf16 in memory; X is rounded to B's dtype at the MXU)."""
+    if B.dtype == X.dtype:
+        return B @ X
+    return jnp.dot(B, X.astype(B.dtype), preferred_element_type=jnp.float32)
+
+
 def _assemble(op, res: gk_mod.GKResult, r: int) -> FSVDResult:
     theta, G = btb_eigh(res.alphas, res.betas, res.kprime)
     r = min(r, res.alphas.shape[0])
@@ -41,7 +49,7 @@ def _assemble(op, res: gk_mod.GKResult, r: int) -> FSVDResult:
     # corresponding singular values.
     pad = ~jnp.isfinite(theta_r)
     s = jnp.sqrt(jnp.clip(jnp.where(pad, 0.0, theta_r), 0.0, None))
-    V = res.P @ G_r                                     # line 3: V2 = P V1
+    V = _mixed_matmul(res.P, G_r)                       # line 3: V2 = P V1
     AV = op.matmat(V)                                   # lines 6-8
     U = AV / jnp.where(s > 0, s, 1.0)[None, :]
     U = jnp.where(pad[None, :], 0.0, U)
@@ -61,12 +69,15 @@ def fsvd(
     reorth_passes: int = 2,
     host_loop: bool = False,
     dtype=None,
+    precision=None,
 ) -> FSVDResult:
     """Top-r singular triplets of A via k-step GK bidiagonalization.
 
     ``k`` defaults to ``min(4 r, min(m, n))`` — the Krylov space needs some
     slack beyond r for the top-r Ritz values to converge (paper uses e.g.
     k=550 for r=100).  ``host_loop=True`` uses the early-exit host loop.
+    ``precision="bf16"`` stores the Lanczos bases half-width (see
+    :func:`repro.core.gk.gk_bidiag`); the Ritz extraction stays f32.
     """
     A = as_operator(A)
     if k is None:
@@ -74,7 +85,8 @@ def fsvd(
     k = max(k, r)
     runner = gk_mod.gk_bidiag_host if host_loop else gk_mod.gk_bidiag
     res = runner(A, k, key=key, q1=q1, eps=eps, relative_eps=relative_eps,
-                 reorth_passes=reorth_passes, dtype=dtype)
+                 reorth_passes=reorth_passes, dtype=dtype,
+                 precision=precision)
     return _assemble(A, res, r)
 
 

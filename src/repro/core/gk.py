@@ -10,6 +10,15 @@ Two execution styles share the same math:
   * ``gk_bidiag_host`` — host-side Python loop with *real* early exit (what the
                          paper benchmarks: iteration count == numerical rank).
 
+Both route every half-iteration through the operator's fused
+``lanczos_step`` / ``lanczos_rstep`` pipeline (matvec + CGS + norm in one
+seam; single-pass Pallas kernels for ``DenseOp(backend="pallas")``), and
+both support a mixed-precision mode: ``precision="bf16"`` stores the P/Q
+bases half-width in HBM while every reduction/accumulation stays f32.  The
+in-graph carry writes one masked *column* per iteration
+(``dynamic_update_slice``) instead of re-selecting the whole (m, k+1)
+buffer — O(m) instead of O(mk) traffic per step.
+
 Index conventions (paper eq. 9): ``alphas[i] = alpha_{i+1}`` (diagonal of
 B_{k+1,k}), ``betas[i] = beta_{i+2}`` (subdiagonal), ``beta1`` is the
 normalization of the start vector (not part of B).
@@ -23,9 +32,11 @@ import jax.numpy as jnp
 
 from repro.core._keys import resolve_key
 from repro.core.linop import LinOp
-from repro.core.operators import Operator, as_operator
+from repro.core.operators import Operator, as_operator, cgs
 
 Array = jax.Array
+
+PRECISIONS = (None, "f32", "bf16")
 
 
 class GKResult(NamedTuple):
@@ -39,16 +50,67 @@ class GKResult(NamedTuple):
     breakdown: Array   # ()  bool: did ||q_{k'+1}|| < eps fire?
 
 
-def _reorth(v: Array, basis: Array, passes: int) -> Array:
-    """Classical Gram-Schmidt against the (zero-padded) basis, ``passes`` times.
+def _store_dtype(precision, compute_dtype):
+    """Basis storage dtype for a ``precision`` knob value.
 
-    Zero-padded columns contribute nothing, so the fixed-size buffer needs no
-    masking here.  CGS2 ("twice is enough") restores orthogonality to machine
-    precision — the paper's lines 6/13 with the standard stabilization.
+    ``None`` keeps the compute dtype; ``"f32"`` / ``"bf16"`` pin the basis
+    storage width (reductions always accumulate in the compute dtype).
     """
-    for _ in range(passes):
-        v = v - basis @ (basis.T @ v)
-    return v
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {PRECISIONS}, got {precision!r}")
+    if precision is None:
+        return compute_dtype
+    return jnp.bfloat16 if precision == "bf16" else jnp.float32
+
+
+def _eff_eps(eps: float, dtype, store) -> float:
+    """Breakdown epsilon clamped to the reorthogonalization noise floor.
+
+    The paper uses an absolute eps=1e-8 (float64 NumPy, where the CGS2
+    residual floor is ~1e-15).  In float32 the floor is ~40*eps_f32 ~ 5e-6
+    relative, so ``relative_eps`` scales by alpha1 (~||A||) AND clamps eps
+    to the compute dtype's noise floor — in f64 this preserves the paper's
+    1e-8 semantics exactly.  A narrower *storage* dtype raises the floor
+    again: CGS2 against a rounded basis bottoms out at ~eps_store² relative
+    (one eps_store of overlap survives each pass), so without the clamp a
+    bf16 run never detects breakdown and the unprotected three-term
+    recurrence amplifies the junk directions until overflow.
+    """
+    return max(eps, 40.0 * float(jnp.finfo(dtype).eps),
+               40.0 * float(jnp.finfo(store).eps) ** 2)
+
+
+def _step(op, p, y, alpha, basis, passes):
+    """Dispatch one fused left half-step (LinOp closures lack the method)."""
+    fn = getattr(op, "lanczos_step", None)
+    if fn is not None:
+        return fn(p, y, alpha, basis, passes=passes)
+    u = cgs(op.mv_fused(p, y, alpha), basis, passes)
+    return u, jnp.linalg.norm(u)
+
+
+def _rstep(op, q, y, beta, basis, passes):
+    fn = getattr(op, "lanczos_rstep", None)
+    if fn is not None:
+        return fn(q, y, beta, basis, passes=passes)
+    v = cgs(op.rmv_fused(q, y, beta), basis, passes)
+    return v, jnp.linalg.norm(v)
+
+
+def _set_col(buf: Array, idx, col: Array, keep) -> Array:
+    """Masked write of ``col`` into ``buf[:, idx]`` — O(m) select on the
+    column only, never a whole-buffer copy."""
+    cur = jax.lax.dynamic_slice_in_dim(buf, idx, 1, axis=1)
+    new = jnp.where(keep, col.astype(buf.dtype)[:, None], cur)
+    return jax.lax.dynamic_update_slice_in_dim(buf, new, idx, axis=1)
+
+
+def _set_elt(vec: Array, idx, val, keep) -> Array:
+    """Masked write of a scalar into ``vec[idx]``."""
+    cur = jax.lax.dynamic_slice(vec, (idx,), (1,))
+    new = jnp.where(keep, jnp.asarray(val, vec.dtype)[None], cur)
+    return jax.lax.dynamic_update_slice(vec, new, (idx,))
 
 
 def start_vector(key: jax.Array, m: int, dtype=jnp.float32) -> Array:
@@ -66,14 +128,24 @@ def gk_bidiag(
     relative_eps: bool = True,
     reorth_passes: int = 2,
     dtype=None,
+    precision: Optional[str] = None,
 ) -> GKResult:
-    """In-graph GK bidiagonalization (fixed k iterations, breakdown masking)."""
+    """In-graph GK bidiagonalization (fixed k iterations, breakdown masking).
+
+    ``precision="bf16"`` stores the P/Q bases in bfloat16 (half the HBM
+    bytes of the bandwidth-bound reorthogonalization streams) while the
+    recurrence scalars, carried vectors and all accumulations stay in the
+    compute dtype.  The breakdown threshold widens to the storage's CGS2
+    noise floor (see :func:`_eff_eps`), so bf16 is a throughput mode for
+    fixed-k factorization; rank detection wants full precision.
+    """
     op = as_operator(op)
     m, n = op.shape
     if k > min(m, n):
         k = min(m, n)
     if dtype is None:
         dtype = jnp.promote_types(op.dtype, jnp.float32)
+    store = _store_dtype(precision, dtype)
 
     if q1 is None:
         key = resolve_key(key, caller="gk_bidiag")
@@ -86,17 +158,12 @@ def gk_bidiag(
     alpha1 = jnp.linalg.norm(p)
     p = p / jnp.where(alpha1 > 0, alpha1, 1.0)
 
-    Q = jnp.zeros((m, k + 1), dtype).at[:, 0].set(q)
-    P = jnp.zeros((n, k), dtype).at[:, 0].set(p)
+    Q = jnp.zeros((m, k + 1), store).at[:, 0].set(q.astype(store))
+    P = jnp.zeros((n, k), store).at[:, 0].set(p.astype(store))
     alphas = jnp.zeros((k,), dtype).at[0].set(alpha1)
     betas = jnp.zeros((k,), dtype)
 
-    # breakdown threshold: the paper uses an absolute eps=1e-8 (float64
-    # NumPy, where the CGS2 residual floor is ~1e-15).  In float32 the floor
-    # is ~40*eps_f32 ~ 5e-6 relative, so `relative_eps` scales by alpha1
-    # (~||A||) AND clamps eps to the dtype's reorthogonalization noise floor
-    # — in f64 this preserves the paper's 1e-8 semantics exactly.
-    eff_eps = max(eps, 40.0 * float(jnp.finfo(dtype).eps))
+    eff_eps = _eff_eps(eps, dtype, store)
     thresh = jnp.where(relative_eps, eff_eps * jnp.maximum(alpha1, 1.0), eps)
 
     class Carry(NamedTuple):
@@ -110,19 +177,18 @@ def gk_bidiag(
         done: Array
 
     def body(i, c: Carry):
-        # --- left vector: u = A p_i - alpha_i q_i  (paper line 5) ---
-        u = op.mv_fused(c.p, c.q, c.alphas[i - 1]).astype(dtype)
-        u = _reorth(u, c.Q, reorth_passes)                      # line 6
-        beta = jnp.linalg.norm(u)                               # line 7
+        # --- left vector: u = A p_i - alpha_i q_i, CGS2, norm (lines 5-7)
+        u, beta = _step(op, c.p, c.q, c.alphas[i - 1], c.Q, reorth_passes)
+        u = u.astype(dtype)
+        beta = beta.astype(dtype)
         hit = beta < thresh                                     # line 9
-        newly_done = jnp.logical_and(hit, jnp.logical_not(c.done))
         done = jnp.logical_or(c.done, hit)
         safe_beta = jnp.where(beta > 0, beta, 1.0)
         qn = u / safe_beta                                      # line 8
-        # --- right vector: v = A^T q_{i+1} - beta_{i+1} p_i  (line 12) ---
-        v = op.rmv_fused(qn, c.p, beta).astype(dtype)
-        v = _reorth(v, c.P, reorth_passes)                      # line 13
-        alpha = jnp.linalg.norm(v)                              # line 14
+        # --- right vector: v = A^T q_{i+1} - beta_{i+1} p_i (lines 12-14)
+        v, alpha = _rstep(op, qn, c.p, beta, c.P, reorth_passes)
+        v = v.astype(dtype)
+        alpha = alpha.astype(dtype)
         hit_a = alpha < thresh
         done2 = jnp.logical_or(done, hit_a)
         safe_alpha = jnp.where(alpha > 0, alpha, 1.0)
@@ -130,10 +196,10 @@ def gk_bidiag(
 
         keep = jnp.logical_not(done)        # was active at loop entry
         keep2 = jnp.logical_not(done2)
-        Qn = jnp.where(keep, c.Q.at[:, i].set(qn).astype(dtype), c.Q)
-        Pn = jnp.where(keep2, c.P.at[:, i].set(pn), c.P)
-        alphas_n = jnp.where(keep2, c.alphas.at[i].set(alpha), c.alphas)
-        betas_n = jnp.where(keep, c.betas.at[i - 1].set(beta), c.betas)
+        Qn = _set_col(c.Q, i, qn, keep)
+        Pn = _set_col(c.P, i, pn, keep2)
+        alphas_n = _set_elt(c.alphas, i, alpha, keep2)
+        betas_n = _set_elt(c.betas, i - 1, beta, keep)
         kprime_n = jnp.where(done2, c.kprime, c.kprime + 1)
         return Carry(Qn, Pn, alphas_n, betas_n,
                      jnp.where(keep, qn, c.q), jnp.where(keep2, pn, c.p),
@@ -146,13 +212,13 @@ def gk_bidiag(
     # final half-iteration (paper lines 5-8 at i=k): beta_{k+1} / q_{k+1}
     # complete B_{k+1,k} — without them the last tridiagonal entry and the
     # identity A P_k = Q_{k+1} B_{k+1,k} are truncated.
-    u = op.mv_fused(c.p, c.q, c.alphas[c.kprime - 1]).astype(dtype)
-    u = _reorth(u, c.Q, reorth_passes)
-    beta = jnp.linalg.norm(u)
+    u, beta = _step(op, c.p, c.q, c.alphas[c.kprime - 1], c.Q, reorth_passes)
+    u = u.astype(dtype)
+    beta = beta.astype(dtype)
     valid = jnp.logical_not(c.done) & (beta >= thresh)
     qn = u / jnp.where(beta > 0, beta, 1.0)
-    Qf = jnp.where(valid, c.Q.at[:, c.kprime].set(qn.astype(dtype)), c.Q)
-    betas_f = jnp.where(valid, c.betas.at[c.kprime - 1].set(beta), c.betas)
+    Qf = _set_col(c.Q, c.kprime, qn, valid)
+    betas_f = _set_elt(c.betas, c.kprime - 1, beta, valid)
     return GKResult(c.alphas, betas_f, beta1, c.P, Qf,
                     c.kprime, c.done)
 
@@ -167,14 +233,22 @@ def gk_bidiag_host(
     relative_eps: bool = True,
     reorth_passes: int = 2,
     dtype=None,
+    precision: Optional[str] = None,
 ) -> GKResult:
-    """Host-loop GK with real early exit (paper-style wall-time behaviour)."""
+    """Host-loop GK with real early exit (paper wall-time behaviour).
+
+    One device→host sync per iteration: the right half-step is issued
+    speculatively against the device-resident ``beta`` and both recurrence
+    scalars come back in a single ``device_get`` — the old per-scalar
+    ``float(norm)`` pattern stalled the pipeline twice per step.
+    """
     op = as_operator(op)
     m, n = op.shape
     if k > min(m, n):
         k = min(m, n)
     if dtype is None:
         dtype = jnp.promote_types(op.dtype, jnp.float32)
+    store = _store_dtype(precision, dtype)
 
     if q1 is None:
         key = resolve_key(key, caller="gk_bidiag_host")
@@ -186,7 +260,7 @@ def gk_bidiag_host(
     p = op.rmv(q).astype(dtype)
     alpha1 = float(jnp.linalg.norm(p))
     p = p / (alpha1 if alpha1 > 0 else 1.0)
-    eff_eps = max(eps, 40.0 * float(jnp.finfo(dtype).eps))
+    eff_eps = _eff_eps(eps, dtype, store)
     thresh = eff_eps * max(alpha1, 1.0) if relative_eps else eps
 
     qs = [q]
@@ -194,50 +268,49 @@ def gk_bidiag_host(
     al = [alpha1]
     be = []
     breakdown = False
-    Qm = q[:, None]
-    Pm = p[:, None]
+    # fixed-width zero-padded basis buffers: zero columns contribute
+    # nothing to CGS (exact), and a constant shape means the jitted fused
+    # step compiles ONCE instead of retracing per appended column.
+    Qm = jnp.zeros((m, k + 1), store).at[:, 0].set(q.astype(store))
+    Pm = jnp.zeros((n, k), store).at[:, 0].set(p.astype(store))
 
     for _ in range(1, k):
-        u = op.mv_fused(ps[-1], qs[-1], al[-1]).astype(dtype)
-        for _ in range(reorth_passes):
-            u = u - Qm @ (Qm.T @ u)
-        beta = float(jnp.linalg.norm(u))
+        u, beta_d = _step(op, ps[-1], qs[-1], al[-1], Qm, reorth_passes)
+        u = u.astype(dtype)
+        # speculative right half-step: normalize/advance against the
+        # device scalar so beta and alpha arrive in ONE host round-trip
+        qn = u / jnp.where(beta_d > 0, beta_d, 1.0).astype(dtype)
+        v, alpha_d = _rstep(op, qn, ps[-1], beta_d, Pm, reorth_passes)
+        v = v.astype(dtype)
+        beta, alpha = (float(x) for x in jax.device_get((beta_d, alpha_d)))
         if beta < thresh:
             breakdown = True
             break
-        qn = u / beta
-        v = op.rmv_fused(qn, ps[-1], beta).astype(dtype)
-        for _ in range(reorth_passes):
-            v = v - Pm @ (Pm.T @ v)
-        alpha = float(jnp.linalg.norm(v))
         if alpha < thresh:
             be.append(beta)
+            Qm = Qm.at[:, len(qs)].set(qn.astype(store))
             qs.append(qn)
-            Qm = jnp.concatenate([Qm, qn[:, None]], axis=1)
             breakdown = True
             break
         pn = v / alpha
+        Qm = Qm.at[:, len(qs)].set(qn.astype(store))
+        Pm = Pm.at[:, len(ps)].set(pn.astype(store))
         qs.append(qn)
         ps.append(pn)
         al.append(alpha)
         be.append(beta)
-        Qm = jnp.concatenate([Qm, qn[:, None]], axis=1)
-        Pm = jnp.concatenate([Pm, pn[:, None]], axis=1)
 
     if not breakdown and len(al) == k:
         # final half-iteration: beta_{k+1}, q_{k+1} complete B_{k+1,k}
-        u = op.mv_fused(ps[-1], qs[-1], al[-1]).astype(dtype)
-        for _ in range(reorth_passes):
-            u = u - Qm @ (Qm.T @ u)
-        beta = float(jnp.linalg.norm(u))
+        u, beta_d = _step(op, ps[-1], qs[-1], al[-1], Qm, reorth_passes)
+        u = u.astype(dtype)
+        beta = float(beta_d)
         if beta >= thresh:
             be.append(beta)
-            Qm = jnp.concatenate([Qm, (u / beta)[:, None]], axis=1)
+            Qm = Qm.at[:, k].set((u / beta).astype(store))
 
     kp = len(al)
     alphas = jnp.zeros((k,), dtype).at[:kp].set(jnp.asarray(al, dtype))
     betas = jnp.zeros((k,), dtype).at[:len(be)].set(jnp.asarray(be, dtype))
-    P = jnp.zeros((n, k), dtype).at[:, :Pm.shape[1]].set(Pm)
-    Q = jnp.zeros((m, k + 1), dtype).at[:, :Qm.shape[1]].set(Qm)
-    return GKResult(alphas, betas, jnp.asarray(beta1, dtype), P, Q,
+    return GKResult(alphas, betas, jnp.asarray(beta1, dtype), Pm, Qm,
                     jnp.asarray(kp, jnp.int32), jnp.asarray(breakdown))

@@ -178,18 +178,23 @@ def _orth_against(W: Array, bases, passes: int) -> Array:
 _MGS_DROP = 1e-5
 
 
-def _mgs_block(W: Array, bases, passes: int = 2) -> Array:
+def _mgs_block(W: Array, bases, passes: int = 2,
+               drop: float = _MGS_DROP) -> Array:
     """Rank-revealing block orthonormalization (host-side MGS).
 
     Orthonormalizes W's columns against every basis in ``bases`` and each
     other, *dropping* columns that lose all their mass instead of
-    completing them arbitrarily.  Returns (n, k≤W.cols); k == 0 means W
-    carried no direction outside the spans.
+    completing them arbitrarily.  Returns (n, k≤W.cols) in f32; k == 0
+    means W carried no direction outside the spans.  ``drop`` is the
+    survival threshold — callers with narrow-storage (bf16) bases raise it
+    to that storage's orthogonalization noise floor, since a spanned
+    column can retain ~eps_bf16 of its mass against a rounded basis.
     """
     live = [B for B in bases if B.shape[1]]
+    compute = jnp.promote_types(W.dtype, jnp.float32)
     cols: list[Array] = []
     for j in range(W.shape[1]):
-        v = W[:, j]
+        v = W[:, j].astype(compute)
         nv0 = float(jnp.linalg.norm(v))
         if nv0 == 0.0:
             continue
@@ -199,10 +204,10 @@ def _mgs_block(W: Array, bases, passes: int = 2) -> Array:
             for c in cols:
                 v = v - c * jnp.vdot(c, v)
         nv = float(jnp.linalg.norm(v))
-        if nv > _MGS_DROP * nv0:
+        if nv > drop * nv0:
             cols.append(v / nv)
     if not cols:
-        return jnp.zeros((W.shape[0], 0), W.dtype)
+        return jnp.zeros((W.shape[0], 0), compute)
     return jnp.stack(cols, axis=1)
 
 
@@ -219,6 +224,7 @@ def fsvd_blocked(
     q1: Optional[Array] = None,
     reorth_passes: int = 2,
     dtype=None,
+    precision: Optional[str] = None,
 ) -> BlockedFSVDResult:
     """Top-r singular triplets by streaming block GK under a memory budget.
 
@@ -241,7 +247,12 @@ def fsvd_blocked(
     remains meaningful in f64 and degrades gracefully to ~2e-5 in f32;
     ``relative_tol=False`` uses ``tol`` as an absolute residual bound.
     ``q1`` (an m-vector) warm-starts the first block via ``Aᵀq1``.
+    ``precision="bf16"`` stores the retained bases (the memory-budgeted
+    part) half-width; every expansion, orthogonalization and Rayleigh-Ritz
+    extraction still accumulates in the compute dtype, and the locking
+    threshold / MGS drop floor widen to the storage's noise floor.
     """
+    from repro.core.gk import _store_dtype
     A = as_operator(A)
     m, n = A.shape
     r = min(r, min(m, n))
@@ -252,15 +263,18 @@ def fsvd_blocked(
     max_basis = min(max(max_basis, r + b, 2 * b), min(m, n))
     if dtype is None:
         dtype = jnp.promote_types(A.dtype, jnp.float32)
-    eff_tol = max(tol, 200.0 * float(jnp.finfo(dtype).eps))
+    store = _store_dtype(precision, dtype)
+    store_eps = float(jnp.finfo(store).eps)
+    mgs_drop = max(_MGS_DROP, 8.0 * store_eps)
+    eff_tol = max(tol, 200.0 * float(jnp.finfo(dtype).eps), 8.0 * store_eps)
 
     if q1 is None:
         key = resolve_key(key, caller="fsvd_blocked")
     else:
         key = key if key is not None else jax.random.PRNGKey(0)
 
-    locked_V = jnp.zeros((n, 0), dtype)
-    locked_U = jnp.zeros((m, 0), dtype)
+    locked_V = jnp.zeros((n, 0), store)
+    locked_U = jnp.zeros((m, 0), store)
     locked_s: list[float] = []
 
     key, k0 = jax.random.split(key)
@@ -286,26 +300,29 @@ def fsvd_blocked(
             V = V[:, :min(V.shape[1], budget - 1)]
         else:
             V = V[:, :max(budget, 1)]
-        basis = _mgs_block(V, (locked_V,), reorth_passes)
+        basis = _mgs_block(V, (locked_V,), reorth_passes,
+                           drop=mgs_drop).astype(store)
         if basis.shape[1] == 0:
             key, kf = jax.random.split(key)
             basis = _mgs_block(jax.random.normal(kf, (n, min(b, budget)),
                                                  dtype),
-                               (locked_V,), reorth_passes)
+                               (locked_V,), reorth_passes,
+                               drop=mgs_drop).astype(store)
         last = basis
         while basis.shape[1] < budget and last.shape[1]:
             W = A.rmatmat(A.matmat(last)).astype(dtype)   # GK round trip
             block_passes += 1
-            Qb = _mgs_block(W, (locked_V, basis), reorth_passes)
+            Qb = _mgs_block(W, (locked_V, basis), reorth_passes,
+                            drop=mgs_drop)
             if Qb.shape[1] == 0:
                 # chain exhausted the reachable subspace — refresh randomly
                 key, kf = jax.random.split(key)
                 Qb = _mgs_block(
                     jax.random.normal(kf, (n, last.shape[1]), dtype),
-                    (locked_V, basis), reorth_passes)
+                    (locked_V, basis), reorth_passes, drop=mgs_drop)
                 if Qb.shape[1] == 0:
                     break                     # whole space is spanned
-            Qb = Qb[:, :budget - basis.shape[1]]
+            Qb = Qb[:, :budget - basis.shape[1]].astype(store)
             basis = jnp.concatenate([basis, Qb], axis=1)
             last = Qb
         # --- Rayleigh-Ritz on span(basis), deflated against locked -------
@@ -333,8 +350,10 @@ def fsvd_blocked(
             sel = jnp.asarray(lock_idx)
             newV = _orth_against(Vr[:, sel], (locked_V,), 1)
             newV = newV / jnp.linalg.norm(newV, axis=0, keepdims=True)
-            locked_V = jnp.concatenate([locked_V, newV], axis=1)
-            locked_U = jnp.concatenate([locked_U, Us[:, sel]], axis=1)
+            locked_V = jnp.concatenate([locked_V, newV.astype(store)],
+                                       axis=1)
+            locked_U = jnp.concatenate(
+                [locked_U, Us[:, sel].astype(store)], axis=1)
             locked_s.extend(float(S[i]) for i in lock_idx)
         if len(locked_s) >= r:
             converged = True
@@ -368,9 +387,9 @@ def fsvd_blocked(
             taken += 1
         if cols_u:
             locked_U = jnp.concatenate(
-                [locked_U, jnp.stack(cols_u, axis=1)], axis=1)
+                [locked_U, jnp.stack(cols_u, axis=1).astype(store)], axis=1)
             locked_V = jnp.concatenate(
-                [locked_V, jnp.stack(cols_v, axis=1)], axis=1)
+                [locked_V, jnp.stack(cols_v, axis=1).astype(store)], axis=1)
             locked_s.extend(vals)
 
     s_arr = jnp.asarray(locked_s, dtype)
@@ -380,8 +399,8 @@ def fsvd_blocked(
     s_arr = s_arr[order]
     if s_arr.shape[0] < r:                      # exhausted rank-deficient A
         pad = r - s_arr.shape[0]
-        U = jnp.concatenate([U, jnp.zeros((m, pad), dtype)], axis=1)
-        V_out = jnp.concatenate([V_out, jnp.zeros((n, pad), dtype)], axis=1)
+        U = jnp.concatenate([U, jnp.zeros((m, pad), store)], axis=1)
+        V_out = jnp.concatenate([V_out, jnp.zeros((n, pad), store)], axis=1)
         s_arr = jnp.concatenate([s_arr, jnp.zeros((pad,), dtype)])
     return BlockedFSVDResult(U[:, :r], s_arr[:r], V_out[:, :r],
                              restarts, block_passes, converged)

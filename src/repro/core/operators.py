@@ -44,6 +44,28 @@ Array = jax.Array
 _BACKENDS = ("xla", "pallas")
 
 
+def cgs(v: Array, basis: Array, passes: int) -> Array:
+    """Classical Gram-Schmidt of ``v`` against the (zero-padded) basis
+    columns, ``passes`` times, with f32 accumulation.
+
+    When the basis is stored in a narrower dtype than ``v`` (the
+    mixed-precision bf16 policy), the products run with bf16 operands and
+    f32 accumulation (``preferred_element_type``) — the basis is never
+    upcast in memory, which is the whole point of storing it half-width.
+    For matching dtypes this is exactly ``v − B (Bᵀ v)``, bit-for-bit.
+    """
+    if basis.dtype == v.dtype:
+        for _ in range(passes):
+            v = v - basis @ (basis.T @ v)
+        return v
+    for _ in range(passes):
+        c = jnp.dot(basis.T, v.astype(basis.dtype),
+                    preferred_element_type=jnp.float32)
+        v = v - jnp.dot(basis, c.astype(basis.dtype),
+                        preferred_element_type=jnp.float32)
+    return v
+
+
 def register_operator(cls):
     """Register an operator dataclass as a pytree.
 
@@ -109,6 +131,26 @@ class Operator:
 
     def rmv_fused(self, q: Array, y: Array, beta) -> Array:
         return self.rmv(q) - beta * y
+
+    def lanczos_step(self, p: Array, y: Array, alpha, basis: Array, *,
+                     passes: int = 2) -> tuple[Array, Array]:
+        """One fused left GK half-step: ``u = A p − α y`` reorthogonalized
+        CGS^passes against ``basis``, plus its norm → ``(u, ‖u‖)``.
+
+        The default composes the fused matvec with :func:`cgs`; operators
+        with a single-pass pipeline (``DenseOp(backend="pallas")``)
+        override it with the ``kernels.gk_step`` kernels.
+        """
+        u = self.mv_fused(p, y, alpha)
+        u = cgs(u, basis, passes)
+        return u, jnp.linalg.norm(u)
+
+    def lanczos_rstep(self, q: Array, y: Array, beta, basis: Array, *,
+                      passes: int = 2) -> tuple[Array, Array]:
+        """Right GK half-step: ``v = Aᵀ q − β y`` vs ``basis`` → (v, ‖v‖)."""
+        v = self.rmv_fused(q, y, beta)
+        v = cgs(v, basis, passes)
+        return v, jnp.linalg.norm(v)
 
     def matmat(self, V: Array) -> Array:
         return jax.vmap(self.mv, in_axes=1, out_axes=1)(V)
@@ -194,6 +236,20 @@ class DenseOp(Operator):
             from repro.kernels import ops as kops
             return kops.rmatvec_fused(self.A, q, y, beta)
         return self.A.T @ q - beta * y
+
+    def lanczos_step(self, p, y, alpha, basis, *, passes=2):
+        if self.backend == "pallas" and self.A.dtype != jnp.float64:
+            from repro.kernels import ops as kops
+            return kops.gk_step_fused(self.A, p, y, alpha, basis, passes)
+        return Operator.lanczos_step(self, p, y, alpha, basis,
+                                     passes=passes)
+
+    def lanczos_rstep(self, q, y, beta, basis, *, passes=2):
+        if self.backend == "pallas" and self.A.dtype != jnp.float64:
+            from repro.kernels import ops as kops
+            return kops.gk_rstep_fused(self.A, q, y, beta, basis, passes)
+        return Operator.lanczos_rstep(self, q, y, beta, basis,
+                                      passes=passes)
 
     def matmat(self, V):
         return self.A @ V

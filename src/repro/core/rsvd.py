@@ -30,29 +30,35 @@ def rsvd(
     power_iters: int = 0,
     key: Optional[jax.Array] = None,
     dtype=None,
+    precision=None,
 ) -> RSVDResult:
     """Top-k triplets via Gaussian range sketching (HMT Algorithms 4.3/5.1).
 
     ``p`` is the oversampling parameter (paper default 10; "oversampled"
     experiments push it to hundreds when the spectrum decays slowly).
     ``power_iters`` = q subspace/power iterations with QR re-orthonormalization.
+    ``precision="bf16"`` stores the sketch/range bases half-width between
+    passes over A (the QR factorizations and the small SVD stay f32).
     """
+    from repro.core.gk import _store_dtype
     A = as_operator(A)
     m, n = A.shape
     if dtype is None:
         dtype = jnp.promote_types(A.dtype, jnp.float32)
+    store = _store_dtype(precision, dtype)
     key = resolve_key(key, caller="rsvd")
     l = min(k + p, min(m, n))
 
-    Omega = jax.random.normal(key, (n, l), dtype)
-    Y = A.matmat(Omega)                       # (m, l)
+    Omega = jax.random.normal(key, (n, l), dtype).astype(store)
+    Y = A.matmat(Omega).astype(dtype)         # (m, l)
     Q, _ = jnp.linalg.qr(Y)
     for _ in range(power_iters):
-        Z = A.rmatmat(Q)                      # (n, l)
+        Z = A.rmatmat(Q.astype(store)).astype(dtype)   # (n, l)
         Z, _ = jnp.linalg.qr(Z)
-        Y = A.matmat(Z)
+        Y = A.matmat(Z.astype(store)).astype(dtype)
         Q, _ = jnp.linalg.qr(Y)
-    B = A.rmatmat(Q).T                        # (l, n) = Q^T A
+    Qs = Q.astype(store)
+    B = A.rmatmat(Qs).T.astype(dtype)         # (l, n) = Q^T A
     Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)
     U = Q @ Ub
     return RSVDResult(U[:, :k], s[:k], Vt[:k, :].T)

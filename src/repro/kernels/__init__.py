@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 gk_matvec      — fused Lanczos half-iterations  u = A p − α q,  v = Aᵀ q − β p
+gk_step        — fully-fused GK step pipeline: matvec + CGS products +
+                 norm epilogue with the candidate vector VMEM-resident
+                 (Q read the theoretical minimum passes+1 times)
 reorth         — CGS reorthogonalization passes  (Qᵀv then v − Qc)
 lowrank_update — W = U diag(s) Vᵀ materialization
 sparse_matvec  — row-blocked ELL sparse matvec  y = A x  (SparseOp backend)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import gk_matvec as _gk
+from repro.kernels import gk_step as _gs
 from repro.kernels import lowrank_update as _lr
 from repro.kernels import reorth as _ro
 from repro.kernels import sparse_matvec as _sp
@@ -70,6 +71,59 @@ def rmatvec_fused(A: Array, q: Array, y: Array, beta, *, bm: int = _gk.BM,
     out = _gk.rmatvec_fused(Ap, qp, yp, beta, bm=bm, bn=bn,
                             interpret=_interpret())
     return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "bm", "bn"))
+def gk_step_fused(A: Array, p: Array, y: Array, alpha, Q: Array,
+                  passes: int = 2, *, bm: int = _gs.BM,
+                  bn: int = _gs.BN) -> tuple[Array, Array]:
+    """Fused left GK half-step: ``u = A p − α y`` reorthogonalized
+    CGS^passes against Q, plus its norm — the candidate vector never
+    round-trips to HBM between the matvec and the first CGS product, and
+    Q is read ``passes + 1`` times (the theoretical minimum: each CGS
+    pass's two products have a true dependency, but the second product of
+    pass i fuses with the first of pass i+1).
+
+    A: (m, n); p: (n,); y: (m,); Q: (m, k) → (u (m,) f32, ‖u‖ () f32).
+    """
+    m, n = A.shape
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Ap = _pad_to(_pad_to(A, bm, 0), bn, 1)
+    Qp = _pad_to(Q, bm, 0)
+    pp = _pad_to(_col(p), bn, 0)
+    yp = _pad_to(_col(y), bm, 0)
+    interp = _interpret()
+    u, c = _gs.mv_qtv(Ap, pp, yp, alpha, Qp, bm=bm, bn=bn, interpret=interp)
+    if passes == 0:
+        return u[:m, 0], jnp.linalg.norm(u[:m, 0])
+    for _ in range(passes - 1):
+        u, c = _gs.proj_qtv(u, Qp, c, bm=bm, interpret=interp)
+    v, nrm2 = _gs.proj_norm(u, Qp, c, bm=bm, interpret=interp)
+    return v[:m, 0], jnp.sqrt(nrm2[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "bm", "bn"))
+def gk_rstep_fused(A: Array, q: Array, y: Array, beta, P: Array,
+                   passes: int = 2, *, bm: int = _gs.BM,
+                   bn: int = _gs.BN) -> tuple[Array, Array]:
+    """Fused right GK half-step: ``v = Aᵀ q − β y`` vs the P basis.
+
+    A: (m, n); q: (m,); y: (n,); P: (n, k) → (v (n,) f32, ‖v‖ () f32).
+    """
+    m, n = A.shape
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Ap = _pad_to(_pad_to(A, bm, 0), bn, 1)
+    Pp = _pad_to(P, bn, 0)
+    qp = _pad_to(_col(q), bm, 0)
+    yp = _pad_to(_col(y), bn, 0)
+    interp = _interpret()
+    v, c = _gs.rmv_qtv(Ap, qp, yp, beta, Pp, bm=bm, bn=bn, interpret=interp)
+    if passes == 0:
+        return v[:n, 0], jnp.linalg.norm(v[:n, 0])
+    for _ in range(passes - 1):
+        v, c = _gs.proj_qtv(v, Pp, c, bm=bn, interpret=interp)
+    w, nrm2 = _gs.proj_norm(v, Pp, c, bm=bn, interpret=interp)
+    return w[:n, 0], jnp.sqrt(nrm2[0, 0])
 
 
 @functools.partial(jax.jit, static_argnames=("passes", "bm"))

@@ -35,6 +35,20 @@ def reorth(v: Array, Q: Array, passes: int = 2) -> Array:
     return v
 
 
+def gk_step(A: Array, p: Array, y: Array, alpha, Q: Array,
+            passes: int = 2) -> tuple[Array, Array]:
+    """Fused left GK half-step: u = A p − α y, CGS^passes vs Q, and ‖u‖."""
+    u = reorth(matvec_fused(A, p, y, alpha), Q, passes)
+    return u, jnp.linalg.norm(u)
+
+
+def gk_rstep(A: Array, q: Array, y: Array, beta, P: Array,
+             passes: int = 2) -> tuple[Array, Array]:
+    """Fused right GK half-step: v = Aᵀ q − β y, CGS^passes vs P, and ‖v‖."""
+    v = reorth(rmatvec_fused(A, q, y, beta), P, passes)
+    return v, jnp.linalg.norm(v)
+
+
 def lowrank_matmul(U: Array, s: Array, Vt: Array) -> Array:
     """W = U diag(s) V^T  (retraction materialization)."""
     return (U.astype(jnp.float32) * s.astype(jnp.float32)[None, :]) \

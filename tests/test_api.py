@@ -140,3 +140,35 @@ def test_legacy_entry_points_warn_deprecation(A):
         warnings.simplefilter("always")
         core.fsvd(A, 3, 20, key=KEY)
     assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+
+
+def test_factorize_jit_matches_eager(A):
+    from repro.api import factorize_jit
+    spec = SVDSpec(method="fsvd", rank=5, max_iters=30)
+    fn = factorize_jit(spec)
+    q1 = jnp.ones((A.shape[0],), jnp.float32)
+    out_j = fn(A, KEY, q1)
+    out_e = factorize(A, spec, key=KEY, q1=q1)
+    np.testing.assert_allclose(np.asarray(out_j.s), np.asarray(out_e.s),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_j.V), np.asarray(out_e.V),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_factorize_jit_rejects_host_loops():
+    from repro.api import factorize_jit
+    with pytest.raises(ValueError, match="host"):
+        factorize_jit(SVDSpec(method="fsvd", host_loop=True))
+    with pytest.raises(ValueError, match="host"):
+        factorize_jit(SVDSpec(method="fsvd_blocked"))
+
+
+def test_spec_precision_validation():
+    with pytest.raises(ValueError, match="precision"):
+        SVDSpec(precision="fp8")
+    assert SVDSpec(precision="bf16").precision == "bf16"
+
+
+def test_estimate_rank_rejects_narrow_precision(A):
+    with pytest.raises(ValueError, match="full-precision"):
+        estimate_rank(A, SVDSpec(precision="bf16"), key=KEY)

@@ -83,6 +83,119 @@ def test_start_vector_convention(rng):
     assert 1.9 < float(v.mean()) < 2.1
 
 
+def _old_carry_gk_bidiag(A, k, *, key, reorth_passes=2):
+    """The seed's fori_loop with whole-buffer ``jnp.where`` carries.
+
+    Step math is shared with the production implementation (``gk._step`` /
+    ``gk._rstep``), so comparing against ``gk_bidiag`` isolates exactly the
+    carry rewrite (masked per-column ``dynamic_update_slice``) — which must
+    be a pure traffic optimization, bit-for-bit.
+    """
+    from repro.core import gk as G
+    from repro.core.operators import as_operator
+    op = as_operator(A)
+    m, n = op.shape
+    dtype = jnp.float32
+    q1 = G.start_vector(key, m, dtype)
+    beta1 = jnp.linalg.norm(q1)
+    q = q1 / beta1
+    p = op.rmv(q).astype(dtype)
+    alpha1 = jnp.linalg.norm(p)
+    p = p / jnp.where(alpha1 > 0, alpha1, 1.0)
+    Q = jnp.zeros((m, k + 1), dtype).at[:, 0].set(q)
+    P = jnp.zeros((n, k), dtype).at[:, 0].set(p)
+    alphas = jnp.zeros((k,), dtype).at[0].set(alpha1)
+    betas = jnp.zeros((k,), dtype)
+    eff = max(1e-8, 40.0 * float(jnp.finfo(dtype).eps))
+    thresh = eff * jnp.maximum(alpha1, 1.0)
+
+    def body(i, c):
+        Qb, Pb, al, be, qv, pv, kp, done = c
+        u, beta = G._step(op, pv, qv, al[i - 1], Qb, reorth_passes)
+        hit = beta < thresh
+        done1 = jnp.logical_or(done, hit)
+        qn = u / jnp.where(beta > 0, beta, 1.0)
+        v, alpha = G._rstep(op, qn, pv, beta, Pb, reorth_passes)
+        done2 = jnp.logical_or(done1, alpha < thresh)
+        pn = v / jnp.where(alpha > 0, alpha, 1.0)
+        keep = jnp.logical_not(done1)
+        keep2 = jnp.logical_not(done2)
+        Qn = jnp.where(keep, Qb.at[:, i].set(qn).astype(dtype), Qb)
+        Pn = jnp.where(keep2, Pb.at[:, i].set(pn), Pb)
+        al_n = jnp.where(keep2, al.at[i].set(alpha), al)
+        be_n = jnp.where(keep, be.at[i - 1].set(beta), be)
+        kp_n = jnp.where(done2, kp, kp + 1)
+        return (Qn, Pn, al_n, be_n, jnp.where(keep, qn, qv),
+                jnp.where(keep2, pn, pv), kp_n, done2)
+
+    c = jax.lax.fori_loop(1, k, body,
+                          (Q, P, alphas, betas, q, p,
+                           jnp.asarray(1, jnp.int32), jnp.asarray(False)))
+    Qb, Pb, al, be, qv, pv, kp, done = c
+    u, beta = G._step(op, pv, qv, al[kp - 1], Qb, reorth_passes)
+    valid = jnp.logical_not(done) & (beta >= thresh)
+    qn = u / jnp.where(beta > 0, beta, 1.0)
+    Qf = jnp.where(valid, Qb.at[:, kp].set(qn.astype(dtype)), Qb)
+    be_f = jnp.where(valid, be.at[kp - 1].set(beta), be)
+    return G.GKResult(al, be_f, beta1, Pb, Qf, kp, done)
+
+
+@pytest.mark.parametrize("case", ["fullrank", "breakdown"])
+def test_column_carry_bit_equal_old_carry(case):
+    """The masked per-column dynamic_update_slice carry is bit-identical to
+    the seed's whole-buffer jnp.where carry — including when breakdown
+    masking freezes the buffers mid-loop."""
+    key = jax.random.PRNGKey(42)
+    if case == "fullrank":
+        A = jax.random.normal(key, (100, 70))
+        k = 25
+    else:
+        A = make_lowrank(key, 100, 80, 8)       # breakdown around i=8-11
+        k = 30
+    new = gk_bidiag(A, k, key=jax.random.PRNGKey(7))
+    old = _old_carry_gk_bidiag(A, k, key=jax.random.PRNGKey(7))
+    for name in new._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(new, name)), np.asarray(getattr(old, name)),
+            err_msg=f"carry rewrite changed GKResult.{name}")
+
+
+@pytest.mark.parametrize("runner", [gk_bidiag, gk_bidiag_host])
+def test_pallas_fused_step_matches_xla(rng, runner):
+    """DenseOp(backend='pallas') routes the whole half-iteration through
+    the fused gk_step kernels; the bases/recurrence must match the xla
+    composition to f32 blocking-order accuracy."""
+    from repro.core.operators import DenseOp
+    A = jax.random.normal(rng, (120, 90))
+    k = 20
+    r_x = runner(DenseOp(A), k, key=jax.random.PRNGKey(3))
+    r_p = runner(DenseOp(A, backend="pallas"), k, key=jax.random.PRNGKey(3))
+    assert int(r_x.kprime) == int(r_p.kprime)
+    np.testing.assert_allclose(np.asarray(r_x.alphas),
+                               np.asarray(r_p.alphas), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(r_x.betas),
+                               np.asarray(r_p.betas), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(r_x.Q), np.asarray(r_p.Q),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("runner", [gk_bidiag, gk_bidiag_host])
+def test_bf16_precision_basis(rng, runner):
+    """precision='bf16' stores the bases half-width; the recurrence scalars
+    stay f32 and track the full-precision run to bf16 accuracy."""
+    A = jax.random.normal(rng, (120, 90))
+    k = 15
+    full = runner(A, k, key=jax.random.PRNGKey(5))
+    half = runner(A, k, key=jax.random.PRNGKey(5), precision="bf16")
+    assert half.Q.dtype == jnp.bfloat16 and half.P.dtype == jnp.bfloat16
+    assert half.alphas.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(half.alphas),
+                               np.asarray(full.alphas), rtol=0.05, atol=0.05)
+    # bf16-stored basis columns stay orthonormal to storage accuracy
+    Q = np.asarray(half.Q, np.float32)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(Q.shape[1]), atol=0.05)
+
+
 def test_fused_matvec_linop_equivalence(rng):
     """LinOp default fused path == explicit composition."""
     A = jax.random.normal(rng, (50, 40))

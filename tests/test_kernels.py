@@ -128,6 +128,76 @@ def test_lowrank_matmul_ragged(m, n):
 
 
 # --------------------------------------------------------------------------
+# fused GK step pipeline: matvec + CGS products + norm in one kernel chain.
+# f32 acceptance is 1e-5 (relative to the candidate's scale) — the kernel
+# and the oracle both accumulate f32, so only blocking order differs.
+# --------------------------------------------------------------------------
+
+GK_STEP_SHAPES = [(64, 48, 4), (300, 517, 17), (257, 129, 31),
+                  (127, 383, 9), (1024, 512, 64), (300, 200, 5)]
+
+
+def _step_inputs(m, n, k, seed, left=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    A = jax.random.normal(ks[0], (m, n))
+    x = jax.random.normal(ks[1], (n if left else m,))
+    y = jax.random.normal(ks[2], (m if left else n,))
+    Q = jnp.linalg.qr(jax.random.normal(ks[3], (m if left else n, k)))[0]
+    return A, x, y, Q
+
+
+@pytest.mark.parametrize("m,n,k", GK_STEP_SHAPES)
+@pytest.mark.parametrize("passes", [1, 2, 3])
+def test_gk_step_fused(m, n, k, passes):
+    A, p, y, Q = _step_inputs(m, n, k, m * n + k)
+    got_u, got_b = ops.gk_step_fused(A, p, y, 0.37, Q, passes)
+    want_u, want_b = ref.gk_step(A, p, y, 0.37, Q, passes)
+    scale = float(jnp.max(jnp.abs(want_u)))
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                               rtol=1e-5, atol=1e-5 * scale)
+    np.testing.assert_allclose(float(got_b), float(want_b), rtol=1e-5)
+    # the pipeline's CGS output is orthogonal to the basis
+    if passes >= 2:
+        assert float(jnp.max(jnp.abs(Q.T @ got_u))) < 1e-4 * scale
+
+
+@pytest.mark.parametrize("m,n,k", GK_STEP_SHAPES)
+@pytest.mark.parametrize("passes", [1, 2])
+def test_gk_rstep_fused(m, n, k, passes):
+    A, q, y, P = _step_inputs(m, n, k, m + 3 * n + k, left=False)
+    got_v, got_a = ops.gk_rstep_fused(A, q, y, 1.7, P, passes)
+    want_v, want_a = ref.gk_rstep(A, q, y, 1.7, P, passes)
+    scale = float(jnp.max(jnp.abs(want_v)))
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=1e-5, atol=1e-5 * scale)
+    np.testing.assert_allclose(float(got_a), float(want_a), rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,k", [(300, 517, 17), (1024, 512, 64)])
+def test_gk_step_fused_bf16_storage(m, n, k):
+    """bf16 A/basis storage, f32 accumulation: tracks the f32 oracle to
+    bf16 input-rounding accuracy."""
+    A, p, y, Q = _step_inputs(m, n, k, m ^ n)
+    got_u, got_b = ops.gk_step_fused(A.astype(jnp.bfloat16), p, y, 0.37,
+                                     Q.astype(jnp.bfloat16), 2)
+    want_u, want_b = ref.gk_step(A, p, y, 0.37, Q, 2)
+    scale = float(jnp.max(jnp.abs(want_u)))
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                               rtol=3e-2, atol=3e-2 * scale)
+    np.testing.assert_allclose(float(got_b), float(want_b), rtol=3e-2)
+
+
+def test_gk_step_tile_override():
+    A, p, y, Q = _step_inputs(512, 384, 32, 99)
+    want_u, want_b = ref.gk_step(A, p, y, 0.9, Q, 2)
+    for bm, bn in [(128, 128), (512, 384), (64, 256), (2048, 512)]:
+        got_u, got_b = ops.gk_step_fused(A, p, y, 0.9, Q, 2, bm=bm, bn=bn)
+        np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(float(got_b), float(want_b), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
 # sparse ELL matvec kernel
 # --------------------------------------------------------------------------
 

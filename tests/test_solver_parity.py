@@ -71,9 +71,10 @@ SOLVERS = {
 }
 
 
-def _run(method, A, key):
+def _run(method, A, key, precision=None):
     cfg = SOLVERS[method]
-    spec = SVDSpec(method=method, rank=R, **cfg["spec"])
+    spec = SVDSpec(method=method, rank=R, precision=precision,
+                   **cfg["spec"])
     if method == "fsvd_sharded":
         import repro.distributed.gk_dist  # noqa: F401  (registers solver)
         from repro.distributed.matvec import ShardedOp, place_operator
@@ -94,6 +95,38 @@ def test_singular_value_parity(method, name):
     err = np.max(np.abs(np.asarray(out.s) - np.asarray(s_true[:R])))
     assert err / float(s_true[0]) < SOLVERS[method]["stol"], \
         f"{method} on {name}: σ error {err:.2e} vs σ_max {float(s_true[0]):.2e}"
+
+
+# bf16 mixed precision: bases stored half-width, f32 accumulation.  The
+# σ scale is bounded by basis orthonormality, which bf16 storage floors
+# at ~eps_bf16·√k — tolerances widen accordingly (still ≪ the spectrum).
+BF16_STOL = {"fsvd": 5e-2, "fsvd_sharded": 5e-2, "fsvd_blocked": 8e-2,
+             "rsvd": 1e-1}
+
+
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_singular_value_parity_bf16(method, name):
+    A, _ = ZOO[name]
+    s_true = jnp.linalg.svd(A, compute_uv=False)
+    out = _run(method, A, jax.random.PRNGKey(7), precision="bf16")
+    err = np.max(np.abs(np.asarray(out.s, np.float32)
+                        - np.asarray(s_true[:R])))
+    assert err / float(s_true[0]) < BF16_STOL[method], \
+        f"{method} on {name} (bf16): σ error {err:.2e} " \
+        f"vs σ_max {float(s_true[0]):.2e}"
+
+
+@pytest.mark.parametrize("method", ["fsvd", "fsvd_blocked"])
+def test_bf16_subspace_still_aligned(method):
+    """With a spectral gap at R, even the bf16-stored basis must recover
+    the dominant right subspace to ~storage accuracy."""
+    A, _ = ZOO["lowrank_noise"]
+    _, _, Vt = jnp.linalg.svd(A, full_matrices=False)
+    out = _run(method, A, jax.random.PRNGKey(11), precision="bf16")
+    cos = jnp.linalg.svd(Vt[:R] @ np.asarray(out.V, np.float32),
+                         compute_uv=False)
+    assert float(jnp.min(cos)) > 0.995
 
 
 @pytest.mark.parametrize("method", sorted(SOLVERS))
