@@ -1,0 +1,146 @@
+"""Sharded-solver scaling sweep: the perf trajectory grows a device axis.
+
+For each device count in {1, 2, 4, 8} a fresh subprocess forces that many
+host platform devices (``--xla_force_host_platform_device_count``), lays a
+dense operand out row-sharded, and times
+
+  * one fused ``lanczos_step`` / ``lanczos_rstep`` (the one-psum-per-half-
+    step seam this PR adds — the unit of communication at scale), and
+  * a full in-graph ``method="fsvd_sharded"`` solve,
+
+all jitted, via the shared ``benchmarks.common.timeit``.  On forced *host*
+devices the shards share one CPU, so wall-clock does not improve with the
+device count — the records exist to (a) pin the collective structure cost
+as overhead-per-rendezvous and (b) give real meshes a schema to report
+into: each record carries a ``devices`` field, and ``benchmarks.reanalyze``
+re-derives the ``*_vs_1dev`` ratios from the raw timings.
+
+    PYTHONPATH=src python -m benchmarks.run --only dist --emit-json \\
+        BENCH_pr4.json                       # the PR-4 scaling artifact
+    PYTHONPATH=src python -m benchmarks.dist_bench            # standalone
+
+Section schema ``dist/v1``: ``{"schema", "backend", "interpret", "passes",
+"records": [{"devices", "m", "n", "k", "rank", "step_ms", "rstep_ms",
+"solve_ms", "step_vs_1dev", "solve_vs_1dev"}]}``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SIZES = [(4096, 1024, 64)]
+QUICK_SIZES = [(512, 256, 16)]
+DEVICE_COUNTS = (1, 2, 4, 8)
+PASSES = 2
+RANK = 8
+
+
+def _worker(devices: int, sizes, repeats: int) -> None:
+    """Runs inside the subprocess: time the fused seam on ``devices``.
+
+    The sweep is a *host-device* sweep by construction (the flag below
+    only multiplies CPU devices), so pin the platform to cpu unless the
+    caller explicitly chose one — otherwise an accelerator machine would
+    select its 1 GPU/TPU and the mesh construction would fail."""
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit
+    from repro.api import SVDSpec, factorize_jit
+    from repro.distributed.matvec import sharded_operator
+    from repro.launch.mesh import make_mesh
+    import repro.distributed.gk_dist  # noqa: F401  (registers fsvd_sharded)
+
+    mesh = make_mesh((devices,), ("data",))
+    records = []
+    for m, n, k in sizes:
+        ks = jax.random.split(jax.random.PRNGKey(m + n + k), 5)
+        A = jax.random.normal(ks[0], (m, n))
+        op = sharded_operator(A, mesh)
+        p = jax.random.normal(ks[1], (n,))
+        q = jax.random.normal(ks[2], (m,))
+        Q = jnp.linalg.qr(jax.random.normal(ks[3], (m, k)))[0]
+        Pb = jnp.linalg.qr(jax.random.normal(ks[4], (n, k)))[0]
+
+        step = jax.jit(lambda p, q, Q: op.lanczos_step(p, q, 0.4, Q,
+                                                       passes=PASSES))
+        rstep = jax.jit(lambda q, p, Pb: op.lanczos_rstep(q, p, 0.2, Pb,
+                                                          passes=PASSES))
+        ts, _ = timeit(step, p, q, Q, repeats=repeats)
+        tr, _ = timeit(rstep, q, p, Pb, repeats=repeats)
+
+        # factorize_jit: one compiled executable, so the timing is solve
+        # execution (matvecs + psums), not per-call facade tracing.
+        spec = SVDSpec(method="fsvd_sharded", rank=RANK,
+                       max_iters=min(4 * RANK, k))
+        solve = factorize_jit(spec, donate_q1=False)
+        tsolve, _ = timeit(solve, op, jax.random.PRNGKey(0), None,
+                           repeats=max(repeats - 1, 1))
+        records.append({"devices": devices, "m": m, "n": n, "k": k,
+                       "rank": RANK, "step_ms": ts * 1e3,
+                        "rstep_ms": tr * 1e3, "solve_ms": tsolve * 1e3})
+    print(json.dumps({"backend": jax.default_backend(),
+                      "records": records}))
+
+
+def run(sizes=None, devices=DEVICE_COUNTS, repeats: int = 3,
+        quick: bool = False) -> dict:
+    """Spawn one forced-device-count subprocess per entry and aggregate."""
+    from benchmarks.common import fmt_table
+
+    sizes = sizes if sizes is not None else (QUICK_SIZES if quick else SIZES)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+
+    records = []
+    backend = None
+    for d in devices:
+        payload = json.dumps({"devices": d, "sizes": sizes,
+                              "repeats": repeats})
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.dist_bench", "--worker",
+             payload],
+            capture_output=True, text=True, env=env, cwd=repo, timeout=1800)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"dist_bench worker (devices={d}) failed:\n"
+                f"{out.stderr[-2000:]}")
+        got = json.loads(out.stdout.strip().splitlines()[-1])
+        backend = got["backend"]
+        records.extend(got["records"])
+
+    base = {(r["m"], r["n"], r["k"]): r for r in records
+            if r["devices"] == 1}
+    rows = []
+    for r in records:
+        b = base.get((r["m"], r["n"], r["k"]))
+        r["step_vs_1dev"] = b["step_ms"] / r["step_ms"] if b else None
+        r["solve_vs_1dev"] = b["solve_ms"] / r["solve_ms"] if b else None
+        rows.append([f"{r['m']}x{r['n']} k={r['k']}", r["devices"],
+                     f"{r['step_ms']:.2f}", f"{r['rstep_ms']:.2f}",
+                     f"{r['solve_ms']:.1f}",
+                     f"{r['step_vs_1dev']:.2f}x" if b else "-",
+                     f"{r['solve_vs_1dev']:.2f}x" if b else "-"])
+    print("\n## Sharded solver scaling (forced host devices; ratios are "
+          "rendezvous-overhead probes on CPU, scaling on real meshes)")
+    print(fmt_table(["shape", "devices", "step ms", "rstep ms", "solve ms",
+                     "step vs 1dev", "solve vs 1dev"], rows))
+    return {"schema": "dist/v1", "backend": backend,
+            "interpret": backend != "tpu", "passes": PASSES,
+            "records": records}
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        cfg = json.loads(sys.argv[2])
+        _worker(cfg["devices"], [tuple(s) for s in cfg["sizes"]],
+                cfg["repeats"])
+    else:
+        run(quick="--quick" in sys.argv)

@@ -56,6 +56,44 @@ def reanalyze_dir(art_dir: str) -> int:
 _GK_STEP_RAW = ("m", "n", "k", "dtype", "fused_ms", "unfused_ms",
                 "fused_kernel_ms", "unfused_kernel_ms")
 
+_DIST_RAW = ("devices", "m", "n", "k", "rank", "step_ms", "rstep_ms",
+             "solve_ms")
+
+
+def _check_dist_section(path: str, sec: dict) -> int:
+    """Validate a ``dist/v1`` section: raw fields present (``devices`` is
+    the scaling axis), and every ``*_vs_1dev`` ratio re-derivable from the
+    raw timings of the devices==1 record of the same shape."""
+    n = 0
+    base = {}
+    for r in sec["records"]:
+        missing = [f for f in _DIST_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: dist record missing {missing}")
+        if not (isinstance(r["devices"], int) and r["devices"] >= 1):
+            raise SystemExit(
+                f"{path}: dist record has bad devices={r['devices']!r}")
+        if r["devices"] == 1:
+            base[(r["m"], r["n"], r["k"])] = r
+    for r in sec["records"]:
+        b = base.get((r["m"], r["n"], r["k"]))
+        for field, num in (("step_vs_1dev", "step_ms"),
+                           ("solve_vs_1dev", "solve_ms")):
+            want = b[num] / r[num] if b else None
+            have = r.get(field)
+            if want is not None and have is not None \
+                    and abs(have - want) > 1e-6 * want:
+                raise SystemExit(
+                    f"{path}: dist {r['m']}x{r['n']} devices={r['devices']}"
+                    f": stored {field}={have:.4f} disagrees with raw "
+                    f"timings ({want:.4f})")
+            r[field] = want
+        print(f"[reanalyze] dist {r['m']}x{r['n']} k={r['k']} "
+              f"devices={r['devices']}: step {r['step_ms']:.2f}ms, "
+              f"solve {r['solve_ms']:.1f}ms")
+        n += 1
+    return n
+
 
 def reanalyze_bench(path: str) -> int:
     """Validate a ``repro-bench/v1`` file and recompute derived fields."""
@@ -88,6 +126,8 @@ def reanalyze_bench(path: str) -> int:
                       f"{r['dtype']}: step {r['speedup']:.2f}x, "
                       f"kernels {r['kernel_speedup']:.2f}x")
                 n += 1
+        elif schema == "dist/v1":
+            n += _check_dist_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new

@@ -28,15 +28,18 @@ def main() -> None:
                     help="smaller sizes / fewer steps (CI)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
-                             "kernels", "sparse", "gk_step"])
+                             "kernels", "sparse", "gk_step", "dist"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
-                         "json (default PATH: BENCH_pr3.json)")
+                         "json (default PATH: BENCH_pr3.json; use --only "
+                         "dist --emit-json BENCH_pr4.json for the device-"
+                         "scaling artifact)")
     args = ap.parse_args()
 
-    from benchmarks import (fig1, fig2, gk_step_bench, kernels_bench,
-                            roofline, sparse_bench, table1, table2)
+    from benchmarks import (dist_bench, fig1, fig2, gk_step_bench,
+                            kernels_bench, roofline, sparse_bench, table1,
+                            table2)
 
     t0 = time.time()
     sections = []
@@ -62,6 +65,10 @@ def main() -> None:
     if args.only in (None, "gk_step"):
         sections.append(("gk_step", lambda: gk_step_bench.run(
             sizes=gk_step_bench.QUICK_SIZES if args.quick else None,
+            repeats=1 if args.quick else 3)))
+    if args.only in (None, "dist"):
+        sections.append(("dist", lambda: dist_bench.run(
+            quick=args.quick,
             repeats=1 if args.quick else 3)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(

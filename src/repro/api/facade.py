@@ -19,7 +19,7 @@ from repro.api.registry import get_solver
 from repro.api.results import Factorization, RankEstimate
 from repro.api.spec import SVDSpec
 from repro.core._keys import resolve_key
-from repro.core.operators import as_operator
+from repro.core.operators import as_operator, sharding_mesh
 from repro.core.rank import numerical_rank as _numerical_rank
 
 Array = jax.Array
@@ -107,7 +107,11 @@ def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
     ``spec.tol`` is the Alg-1 breakdown epsilon; ``sigma_tol`` optionally
     overrides the Alg-3 counting threshold on the Ritz values of BᵀB.
     ``spec.host_loop=None`` defaults to the early-exit host loop (the
-    paper's wall-time behaviour — iteration count == rank estimate).
+    paper's wall-time behaviour — iteration count == rank estimate) —
+    except on *sharded* operands, where the default flips to the in-graph
+    loop: a host loop gathers device scalars every iteration, stalling
+    the whole mesh on one host round-trip per step.  An explicit
+    ``host_loop=True`` remains honored either way.
     """
     spec = (spec or SVDSpec())
     if overrides:
@@ -122,7 +126,10 @@ def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
             "directions the stored basis can certify — use precision=None)")
     op = as_operator(A, backend=spec.backend)
     key = resolve_key(key, caller="estimate_rank")
-    host_loop = True if spec.host_loop is None else spec.host_loop
+    if spec.host_loop is None:
+        host_loop = sharding_mesh(op) is None
+    else:
+        host_loop = spec.host_loop
     res = _numerical_rank(op, max_iters=spec.max_iters, eps=spec.tol,
                           relative_eps=spec.relative_tol,
                           sigma_tol=sigma_tol, key=key,

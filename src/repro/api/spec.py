@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
-METHODS = ("auto", "fsvd", "rsvd", "fsvd_blocked")
+METHODS = ("auto", "fsvd", "rsvd", "fsvd_blocked", "fsvd_sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +53,14 @@ class SVDSpec:
                   (paper wall-time behaviour); False = in-graph fori_loop
                   (jit/vmap-able); None = per-entry-point default
                   (False for factorize, True for estimate_rank).
+                  ``method="fsvd_sharded"`` rejects an explicit True: a
+                  host loop on a sharded operand stalls the whole mesh on
+                  a host round-trip every iteration.
+
+    ``METHODS`` lists the built-in names; "fsvd_sharded" registers on
+    import of ``repro.distributed.gk_dist`` and requires a sharded
+    operand (any other method accepts sharded operands too — the facade
+    is operator-agnostic).
     """
 
     method: str = "auto"

@@ -160,6 +160,13 @@ def gk_bidiag(
 
     Q = jnp.zeros((m, k + 1), store).at[:, 0].set(q.astype(store))
     P = jnp.zeros((n, k), store).at[:, 0].set(p.astype(store))
+    # sharded operators lay the basis buffers out on their vector sharding
+    # up front, so the carried buffers match the fused step's layout
+    # instead of being re-sharded on the first iteration.
+    place = getattr(op, "place_basis", None)
+    if place is not None:
+        Q = place(Q, "left")
+        P = place(P, "right")
     alphas = jnp.zeros((k,), dtype).at[0].set(alpha1)
     betas = jnp.zeros((k,), dtype)
 
@@ -273,6 +280,12 @@ def gk_bidiag_host(
     # step compiles ONCE instead of retracing per appended column.
     Qm = jnp.zeros((m, k + 1), store).at[:, 0].set(q.astype(store))
     Pm = jnp.zeros((n, k), store).at[:, 0].set(p.astype(store))
+    place = getattr(op, "place_basis", None)
+    if place is not None:
+        # one placement up front: every eager fused step then consumes the
+        # buffer in its own layout instead of re-sharding per iteration.
+        Qm = place(Qm, "left")
+        Pm = place(Pm, "right")
 
     for _ in range(1, k):
         u, beta_d = _step(op, ps[-1], qs[-1], al[-1], Qm, reorth_passes)

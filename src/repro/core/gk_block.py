@@ -24,10 +24,11 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core._keys import resolve_key
 from repro.core.linop import LinOp
-from repro.core.operators import Operator, as_operator
+from repro.core.operators import Operator, as_operator, sharding_mesh
 
 Array = jax.Array
 
@@ -211,6 +212,85 @@ def _mgs_block(W: Array, bases, passes: int = 2,
     return jnp.stack(cols, axis=1)
 
 
+def _block_project(W: Array, bases, passes: int) -> Array:
+    """``W − Σ B (Bᵀ W)``, ``passes`` times — blocked CGS against every
+    basis with f32 accumulation (narrow-storage bases stay narrow)."""
+    for _ in range(passes):
+        for B in bases:
+            if B.shape[1]:
+                C = jnp.dot(B.T, W.astype(B.dtype),
+                            preferred_element_type=jnp.float32) \
+                    if B.dtype != W.dtype else B.T @ W
+                W = W - (jnp.dot(B, C.astype(B.dtype),
+                                 preferred_element_type=jnp.float32)
+                         if B.dtype != W.dtype else B @ C)
+    return W
+
+
+# the Gram route resolves column mass only down to ~sqrt(eps) of the block
+# scale (eigenvalues of WᵀW carry eps·λ_max absolute noise), so its drop
+# floor sits at the CholQR/eigQR limit rather than the per-column MGS one.
+_GRAM_DROP = 4e-4
+
+
+def _mgs_block_gram(W: Array, bases, passes: int = 2,
+                    drop: float = _MGS_DROP) -> Array:
+    """Distributed drop-in for :func:`_mgs_block`: blocked projection plus
+    rank-revealing orthonormalization via the psum'd Gram matrix.
+
+    The per-column host MGS syncs a scalar per column per block — fine on
+    one device, a mesh-wide stall at scale.  Here every reduction is a
+    *block* contraction (``BᵀW``, ``WᵀW``): on sharded operands GSPMD
+    lowers each to one local GEMM + one psum.  Rank revelation comes from
+    ``eigh(WᵀW)``: directions with ``sqrt(λ) ≤ drop · max‖w_j‖`` carry no
+    direction outside the spans (Gram-resolution noise) and are dropped,
+    never completed arbitrarily — the same contract as ``_mgs_block``.  A
+    second project+eigh pass restores orthogonality to working precision
+    (single-pass eigQR degrades as cond², the CholQR2 fix).
+    """
+    compute = jnp.promote_types(W.dtype, jnp.float32)
+    W = W.astype(compute)
+    live = [B for B in bases if B.shape[1]]
+    eff_drop = max(drop, _GRAM_DROP)
+    for _ in range(2):                      # project + eigQR, twice
+        if W.shape[1] == 0:
+            return jnp.zeros((W.shape[0], 0), compute)
+        # the drop threshold is relative to THIS pass's input columns
+        # (matching _mgs_block's post-vs-pre column-norm test); the second
+        # pass sees unit columns, so a stale first-pass scale would
+        # spuriously drop everything whenever the raw block is large.
+        scale = float(jnp.max(jnp.linalg.norm(W, axis=0)))
+        W = _block_project(W, live, passes)
+        G = W.T @ W
+        lam, E = jnp.linalg.eigh(G)         # ascending
+        lam = np.asarray(jnp.sqrt(jnp.clip(lam, 0.0, None)))
+        keep = np.nonzero(lam > eff_drop * max(scale, 1e-30))[0]
+        if keep.size == 0:
+            return jnp.zeros((W.shape[0], 0), compute)
+        W = (W @ E[:, keep]) / jnp.asarray(lam[keep], compute)[None, :]
+    return W
+
+
+def _gram_rayleigh_ritz(AV: Array, basis: Array
+                        ) -> tuple[Array, Array, Array]:
+    """Ritz triplets of span(basis) from the psum'd (d, d) Gram matrix.
+
+    ``svd(AV)`` on a row-sharded (m, d) block would gather the tall factor
+    to one device; instead ``H = (AV)ᵀAV`` reduces to a replicated d×d
+    problem (one local GEMM + one psum under GSPMD), ``eigh(H)`` runs
+    replicated, and the big factors stay sharded: ``U = AV W Σ⁻¹`` is a
+    local GEMM on the row shards.  Returns (U, s, V) with s descending.
+    """
+    H = AV.T @ AV                                       # (d, d) replicated
+    theta, W = jnp.linalg.eigh(H)                       # ascending
+    theta = theta[::-1]
+    W = W[:, ::-1]
+    s = jnp.sqrt(jnp.clip(theta, 0.0, None))
+    U = (AV @ W) / jnp.where(s > 0, s, 1.0)[None, :]
+    V = basis.astype(jnp.float32) @ W
+    return U, s, V
+
+
 def fsvd_blocked(
     A: Operator | LinOp | Array,
     r: int,
@@ -239,7 +319,11 @@ def fsvd_blocked(
     This is the Musco–Musco block-Krylov scheme with LOBPCG-style soft
     locking; A is touched only through block matvecs, so operators whose
     dense form would not fit memory (``SparseOp``, ``KroneckerOp``, pod-
-    sharded) stream through unchanged.
+    sharded) stream through unchanged.  Sharded operands additionally get
+    the distributed stages: the block expansion runs row-sharded, the
+    orthonormalization is blocked MGS via psum'd Gram matrices (no
+    per-column device syncs), and Rayleigh-Ritz runs replicated on the
+    small projected Gram problem — the (m, ·) factors never gather.
 
     ``relative_tol=True`` (default) scales the residual threshold by the
     running ``σ_max`` estimate with ``tol`` clamped to the dtype's Lanczos
@@ -254,6 +338,13 @@ def fsvd_blocked(
     """
     from repro.core.gk import _store_dtype
     A = as_operator(A)
+    # sharded operands swap the two dense-friendly stages for distributed
+    # forms: per-column host MGS -> blocked psum'd-Gram orthonormalization
+    # (no per-column device syncs), and svd(AV) -> replicated Rayleigh-Ritz
+    # on the small projected Gram problem (the (m, d) factor stays
+    # row-sharded end to end).
+    distributed = sharding_mesh(A) is not None
+    orth_block = _mgs_block_gram if distributed else _mgs_block
     m, n = A.shape
     r = min(r, min(m, n))
     b = block if block is not None else min(max(8, min(r, 32)), min(m, n))
@@ -300,11 +391,11 @@ def fsvd_blocked(
             V = V[:, :min(V.shape[1], budget - 1)]
         else:
             V = V[:, :max(budget, 1)]
-        basis = _mgs_block(V, (locked_V,), reorth_passes,
+        basis = orth_block(V, (locked_V,), reorth_passes,
                            drop=mgs_drop).astype(store)
         if basis.shape[1] == 0:
             key, kf = jax.random.split(key)
-            basis = _mgs_block(jax.random.normal(kf, (n, min(b, budget)),
+            basis = orth_block(jax.random.normal(kf, (n, min(b, budget)),
                                                  dtype),
                                (locked_V,), reorth_passes,
                                drop=mgs_drop).astype(store)
@@ -312,12 +403,12 @@ def fsvd_blocked(
         while basis.shape[1] < budget and last.shape[1]:
             W = A.rmatmat(A.matmat(last)).astype(dtype)   # GK round trip
             block_passes += 1
-            Qb = _mgs_block(W, (locked_V, basis), reorth_passes,
+            Qb = orth_block(W, (locked_V, basis), reorth_passes,
                             drop=mgs_drop)
             if Qb.shape[1] == 0:
                 # chain exhausted the reachable subspace — refresh randomly
                 key, kf = jax.random.split(key)
-                Qb = _mgs_block(
+                Qb = orth_block(
                     jax.random.normal(kf, (n, last.shape[1]), dtype),
                     (locked_V, basis), reorth_passes, drop=mgs_drop)
                 if Qb.shape[1] == 0:
@@ -328,8 +419,11 @@ def fsvd_blocked(
         # --- Rayleigh-Ritz on span(basis), deflated against locked -------
         AV = A.matmat(basis).astype(dtype)                # (m, d), d ≤ budget
         block_passes += 1
-        Us, S, Wt = jnp.linalg.svd(AV, full_matrices=False)
-        Vr = basis @ Wt.T
+        if distributed:
+            Us, S, Vr = _gram_rayleigh_ritz(AV, basis)
+        else:
+            Us, S, Wt = jnp.linalg.svd(AV, full_matrices=False)
+            Vr = basis @ Wt.T
         sigma_max = max(sigma_max,
                         float(S[0]) if S.shape[0] else 0.0,
                         locked_s[0] if locked_s else 0.0)

@@ -447,6 +447,15 @@ class TransposedOp(Operator):
     def rmv_fused(self, q, y, beta):
         return self.inner.mv_fused(q, y, beta)
 
+    def lanczos_step(self, p, y, alpha, basis, *, passes=2):
+        # Aᵀ's left half-step is A's right half-step: inherit the inner
+        # operator's fused pipeline (Pallas tiles, sharded stacked-psum)
+        # instead of falling back to the generic matvec + CGS composition.
+        return self.inner.lanczos_rstep(p, y, alpha, basis, passes=passes)
+
+    def lanczos_rstep(self, q, y, beta, basis, *, passes=2):
+        return self.inner.lanczos_step(q, y, beta, basis, passes=passes)
+
     def matmat(self, V):
         return self.inner.rmatmat(V)
 
@@ -692,3 +701,31 @@ def to_dense(op) -> Array:
     if isinstance(op, Operator):
         return op.to_dense()
     return op.matmat(jnp.eye(op.n, dtype=op.dtype))
+
+
+def sharding_mesh(op):
+    """The mesh a (possibly wrapped) operator is sharded over, or None.
+
+    Structural duck check — ``repro.distributed.ShardedOp`` exposes a
+    ``sharding_mesh`` property; wrapper operators are walked through the
+    ``_data_fields`` every Operator already declares, so any future
+    wrapper participates without registering here.  Lives in core (not
+    ``repro.distributed``) so solvers can pick distributed code paths
+    without an import cycle.
+    """
+    from jax.sharding import Mesh
+    mesh = getattr(op, "sharding_mesh", None)
+    if isinstance(mesh, Mesh):
+        return mesh
+    if not isinstance(op, Operator):
+        return None
+    stack = [getattr(op, f, None) for f in op._data_fields]
+    while stack:
+        x = stack.pop()
+        if isinstance(x, Operator):
+            mesh = sharding_mesh(x)
+            if mesh is not None:
+                return mesh
+        elif isinstance(x, (tuple, list)):
+            stack.extend(x)
+    return None

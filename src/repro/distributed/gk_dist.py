@@ -1,18 +1,20 @@
 """Distributed Algorithms 1-3: GK / F-SVD / rank on a pod-sharded operator.
 
-Thin composition: ``ShardedOp`` supplies matvecs-with-psum; the *same*
-``repro.core`` solvers run unmodified on top (the basis matrices P, Q are
-GSPMD-sharded over the vector axes automatically).  This is the paper's
-whole point carried to cluster scale: the algorithm only ever touches A
-through matvecs, so distribution is a property of the operator, not of the
-algorithm.
+Thin composition: ``ShardedOp`` supplies the fused one-psum-per-half-step
+Lanczos seam; the *same* ``repro.core`` solvers run unmodified on top (the
+basis matrices P, Q are GSPMD-sharded over the vector axes automatically).
+This is the paper's whole point carried to cluster scale: the algorithm
+only ever touches A through matvecs, so distribution is a property of the
+operator, not of the algorithm.
 
-Importing this module registers the ``"fsvd_sharded"`` solver with
-``repro.api``; it requires a :class:`ShardedOp` operand —
-``factorize(ShardedOp(place_operator(A, mesh), mesh), spec)`` or the
-:func:`sharded_fsvd` convenience, which places the matrix first.  Simpler
-still: pass a ``ShardedOp`` to the plain ``"fsvd"`` method — the facade is
-operator-agnostic.
+Because every registered solver accepts sharded operands directly —
+``factorize(sharded_operator(A, mesh), spec)`` with ``method`` any of
+"fsvd" / "rsvd" / "fsvd_blocked" — the ``"fsvd_sharded"`` name registered
+here is a *shim*: it type-checks the operand, rejects host-loop specs (a
+host loop on a sharded operand would round-trip full gathered vectors
+every iteration) and delegates to the plain F-SVD solver.  The
+:func:`sharded_fsvd` / :func:`sharded_rank` conveniences just compose
+:func:`~repro.distributed.matvec.sharded_operator` with the facade.
 """
 from __future__ import annotations
 
@@ -25,7 +27,8 @@ from repro.api import SVDSpec, estimate_rank, factorize, register_solver
 from repro.api.results import Factorization, RankEstimate
 from repro.api.solvers import solve_fsvd
 from repro.core.gk import GKResult, gk_bidiag
-from repro.distributed.matvec import ShardedOp, place_operator
+from repro.distributed.matvec import (ShardedOp, place_operator,
+                                      sharded_operator)
 
 Array = jax.Array
 
@@ -33,36 +36,49 @@ Array = jax.Array
 @register_solver("fsvd_sharded")
 def solve_fsvd_sharded(A, spec: SVDSpec, *, key=None, q1=None
                        ) -> Factorization:
-    """F-SVD on a pod-sharded operator.
+    """Registration shim: F-SVD on a pod-sharded operator.
 
     ``A`` must already be a :class:`ShardedOp` (use :func:`sharded_fsvd`
-    to place a dense matrix on a mesh first).  ``host_loop=None`` defaults
-    to the in-graph GK loop (a host loop round-trips device vectors every
-    iteration); an explicit ``host_loop=True`` is honored.
+    to place a dense matrix on a mesh first).  ``host_loop=True`` is
+    rejected: the host loop synchronizes a gathered scalar pair every
+    iteration, which on a sharded operand serializes the mesh behind the
+    host round-trip — use the in-graph loop (``host_loop=None``/False).
     """
     if not isinstance(A, ShardedOp):
         raise TypeError(
             "method='fsvd_sharded' needs a ShardedOp operand; wrap the "
             "matrix with repro.distributed.sharded_fsvd(A, mesh, ...) or "
-            "ShardedOp(place_operator(A, mesh), mesh).")
-    out = solve_fsvd(A, spec, key=key, q1=q1)
+            "sharded_operator(A, mesh).")
+    if spec.host_loop:
+        raise ValueError(
+            "method='fsvd_sharded' does not support host_loop=True: the "
+            "early-exit host loop gathers device scalars every iteration, "
+            "stalling the whole mesh on one host round-trip per step.  Use "
+            "host_loop=None/False (the in-graph fori_loop), or run the "
+            "plain 'fsvd' method if you accept the per-step sync.")
+    out = solve_fsvd(A, spec.replace(host_loop=False), key=key, q1=q1)
     return Factorization(out.U, out.s, out.V, out.iterations,
                          out.breakdown, method="fsvd_sharded")
 
 
-def sharded_fsvd(A: Array, mesh: Mesh, spec: SVDSpec, *, key=None,
+def sharded_fsvd(A, mesh: Mesh, spec: SVDSpec, *, key=None,
                  q1=None) -> Factorization:
-    """Place A pod-sharded on ``mesh`` and run the facade on it."""
-    op = ShardedOp(place_operator(A, mesh), mesh)
-    return factorize(op, spec.replace(method="fsvd_sharded"), key=key, q1=q1)
+    """Place A (dense, ``SparseOp``, ``GramOp``/``TransposedOp`` wrapped)
+    on ``mesh`` and run the facade on it."""
+    return factorize(sharded_operator(A, mesh),
+                     spec.replace(method="fsvd_sharded"), key=key, q1=q1)
 
 
-def sharded_rank(A: Array, mesh: Mesh, spec: Optional[SVDSpec] = None, *,
+def sharded_rank(A, mesh: Mesh, spec: Optional[SVDSpec] = None, *,
                  key=None, **overrides) -> RankEstimate:
-    """Numerical rank of a pod-sharded matrix through the facade."""
-    op = ShardedOp(place_operator(A, mesh), mesh)
-    spec = (spec or SVDSpec()).replace(host_loop=False)
-    return estimate_rank(op, spec, key=key, **overrides)
+    """Numerical rank of a pod-sharded operand through the facade.
+
+    No special-casing: ``estimate_rank`` accepts the sharded operator
+    directly (its matrix-free ``GramOp``/``TransposedOp`` unwrapping
+    composes with the sharding wrappers, and its host-loop default flips
+    to the in-graph loop for sharded operands)."""
+    return estimate_rank(sharded_operator(A, mesh), spec, key=key,
+                         **overrides)
 
 
 # --------------------------------------------------------------------------
@@ -85,8 +101,7 @@ def fsvd_sharded(A: Array, mesh: Mesh, r: int, k: Optional[int] = None,
 
 
 def gk_sharded(A: Array, mesh: Mesh, k: int, **kw) -> GKResult:
-    A = place_operator(A, mesh)
-    return gk_bidiag(ShardedOp(A, mesh), k, **kw)
+    return gk_bidiag(sharded_operator(A, mesh), k, **kw)
 
 
 def rank_sharded(A: Array, mesh: Mesh, **kw) -> RankEstimate:

@@ -19,10 +19,18 @@ The "pod" axis is deliberately *never* assigned to parameters: parameters
 are replicated across pods (pure DP over DCN) and sharded only within a pod
 (FSDP/TP over ICI) — the standard multi-slice layout.  Batch axes shard over
 ("pod", "data").
+
+Operator placement (the solver side of the same mapping) also lives here:
+a dense (m, n) operand shards rows over ("pod", "data") and columns over
+"model", the layout every ``repro.distributed.ShardedOp`` matvec assumes.
+:func:`place_operator` lays a matrix out, :func:`shard_shape` /
+:func:`padded_operand_shape` answer the tiling questions the property tests
+(and the padding fallback for non-divisible operands) need.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import math
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -80,6 +88,65 @@ def param_shardings(logical: PyTree, params_shape: PyTree, mesh: Mesh
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# --------------------------------------------------------------------------
+# operator placement: the (rows over ("pod","data"), cols over "model")
+# layout shared by every ShardedOp matvec
+# --------------------------------------------------------------------------
+
+def operator_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], Optional[str]]:
+    """``(row_axes, col_axis)`` of the operand layout on ``mesh``.
+
+    Rows shard over the ("pod", "data") axes present; columns over "model"
+    when present.  Either side may be absent (then that dim is replicated).
+    """
+    rows = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    col = "model" if "model" in mesh.axis_names else None
+    return rows, col
+
+
+def operator_counts(mesh: Mesh) -> Tuple[int, int]:
+    """(row shard count R, column shard count C) of the operand layout."""
+    rows, col = operator_axes(mesh)
+    sizes = dict(mesh.shape)
+    r = math.prod(sizes[a] for a in rows) if rows else 1
+    c = sizes[col] if col else 1
+    return r, c
+
+
+def operator_spec(mesh: Mesh) -> P:
+    """PartitionSpec of a dense (m, n) operand on ``mesh``."""
+    rows, col = operator_axes(mesh)
+    return P(rows or None, col)
+
+
+def shard_shape(shape: Tuple[int, int], mesh: Mesh) -> Tuple[int, int]:
+    """Per-device block shape of an operand laid out by
+    :func:`place_operator` (requires a divisible ``shape``)."""
+    m, n = shape
+    r, c = operator_counts(mesh)
+    if m % r or n % c:
+        raise ValueError(
+            f"operand shape {shape} does not tile a ({r} x {c})-way mesh "
+            f"layout; pad first (see padded_operand_shape)")
+    return (m // r, n // c)
+
+
+def padded_operand_shape(shape: Tuple[int, int], mesh: Mesh
+                         ) -> Tuple[int, int]:
+    """Smallest shape >= ``shape`` whose rows/cols tile the mesh layout.
+
+    Zero-padding to this shape is exact for every matvec/CGS reduction the
+    solvers issue (zero rows and columns contribute nothing to any dot)."""
+    m, n = shape
+    r, c = operator_counts(mesh)
+    return (m + (-m) % r, n + (-n) % c)
+
+
+def place_operator(A: jax.Array, mesh: Mesh) -> jax.Array:
+    """device_put A under the pod-sharded operand layout."""
+    return jax.device_put(A, NamedSharding(mesh, operator_spec(mesh)))
 
 
 def spec_for_batch(mesh: Mesh, batch: int, ndim: int,

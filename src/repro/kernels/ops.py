@@ -126,6 +126,46 @@ def gk_rstep_fused(A: Array, q: Array, y: Array, beta, P: Array,
     return w[:n, 0], jnp.sqrt(nrm2[0, 0])
 
 
+def local_mv_qtv(A: Array, p: Array, y: Array, alpha, Q: Array, *,
+                 bm: int = _gs.BM, bn: int = _gs.BN
+                 ) -> tuple[Array, Array]:
+    """One fused pass of the ``gk_step`` stage-1 tile over a LOCAL shard:
+    ``u = A p − α y`` plus the partial first CGS product ``c = Qᵀu``.
+
+    Unlike :func:`gk_step_fused` this stops after stage 1 — the caller
+    (the sharded Lanczos step body) psums ``c`` across shards before the
+    remaining CGS algebra.  Column-vector shapes in/out: A (m, n);
+    p (n, 1); y (m, 1); Q (m, k) → (u (m, 1), c (k, 1)) f32.  Not jitted:
+    it is traced inside a ``shard_map`` body.
+    """
+    m, n = A.shape
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Ap = _pad_to(_pad_to(A, bm, 0), bn, 1)
+    Qp = _pad_to(Q, bm, 0)
+    pp = _pad_to(p, bn, 0)
+    yp = _pad_to(y, bm, 0)
+    u, c = _gs.mv_qtv(Ap, pp, yp, alpha, Qp, bm=bm, bn=bn,
+                      interpret=_interpret())
+    return u[:m], c
+
+
+def local_rmv_qtv(A: Array, q: Array, y: Array, beta, P: Array, *,
+                  bm: int = _gs.BM, bn: int = _gs.BN
+                  ) -> tuple[Array, Array]:
+    """Reverse direction of :func:`local_mv_qtv` over a local shard:
+    ``v = Aᵀ q − β y`` plus the partial ``c = Pᵀv``.  A (m, n); q (m, 1);
+    y (n, 1); P (n, k) → (v (n, 1), c (k, 1)) f32."""
+    m, n = A.shape
+    bm, bn = min(bm, m) or 1, min(bn, n) or 1
+    Ap = _pad_to(_pad_to(A, bm, 0), bn, 1)
+    Pp = _pad_to(P, bn, 0)
+    qp = _pad_to(q, bm, 0)
+    yp = _pad_to(y, bn, 0)
+    v, c = _gs.rmv_qtv(Ap, qp, yp, beta, Pp, bm=bm, bn=bn,
+                       interpret=_interpret())
+    return v[:n], c
+
+
 @functools.partial(jax.jit, static_argnames=("passes", "bm"))
 def reorth(v: Array, Q: Array, passes: int = 2, *, bm: int = _ro.BM) -> Array:
     """CGS^passes: v − Q(Qᵀv), repeated.  v: (m,), Q: (m, k) → (m,) f32."""

@@ -1,9 +1,43 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests must see the
 1 real CPU device; only the dry-run forces 512 placeholder devices (and the
-distributed tests spawn subprocesses with their own flags)."""
+distributed tests spawn subprocesses with their own flags).
+
+Tests that need a real in-process mesh carry the ``distributed`` marker and
+auto-skip below 8 devices; the dedicated CI job (and local runs of the
+battery) provide them via
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m pytest -m distributed
+"""
 import jax
 import jax.numpy as jnp
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "distributed: needs >= 8 jax devices; run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 (auto-skipped "
+        "otherwise)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.device_count() >= 8:
+        return
+    skip = pytest.mark.skip(
+        reason="needs 8 devices; set "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    for item in items:
+        if "distributed" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """Row-sharded 8-way mesh (the canonical distributed-test layout)."""
+    from repro.launch.mesh import make_mesh
+    return make_mesh((8,), ("data",))
 
 try:                                  # hypothesis is a dev/CI requirement
     import os

@@ -182,6 +182,192 @@ def test_partition_rules_divisibility_fallback():
     assert res["s3"].count("'model'") == 1 and "'data'" in res["s3"]
 
 
+def test_fused_step_is_one_collective_per_half_step():
+    """Acceptance: on a row-sharded mesh each fused GK half-step issues
+    exactly ONE psum (asserted on the jaxpr) lowering to exactly ONE
+    all-reduce (asserted on the compiled HLO).  A "model" axis adds the
+    matvec-reduce collective — exactly one more, never one per dot."""
+    res = run_sub("""
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.matvec import sharded_operator
+        from repro.launch import hlo_analysis
+
+        def iter_eqns(jaxpr):
+            for eqn in jaxpr.eqns:
+                yield eqn
+                for v in eqn.params.values():
+                    vs = v if isinstance(v, (tuple, list)) else [v]
+                    for x in vs:
+                        if hasattr(x, "eqns"):
+                            yield from iter_eqns(x)
+                        elif hasattr(x, "jaxpr"):
+                            yield from iter_eqns(x.jaxpr)
+
+        def psums(fn, *args):
+            jx = jax.make_jaxpr(fn)(*args)
+            return sum(1 for e in iter_eqns(jx.jaxpr)
+                       if e.primitive.name == "psum")
+
+        A = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+        p = jax.random.normal(jax.random.PRNGKey(1), (64,))
+        q = jax.random.normal(jax.random.PRNGKey(2), (128,))
+        Q = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(3),
+                                            (128, 9)))[0]
+        Pb = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(4),
+                                             (64, 9)))[0]
+        out = {}
+        for tag, shape, axes, backend in [
+                ("rows", (8,), ("data",), "xla"),
+                ("rows_pallas", (8,), ("data",), "pallas"),
+                ("pods", (2, 4), ("pod", "data"), "xla"),
+                ("model", (4, 2), ("data", "model"), "xla")]:
+            op = sharded_operator(A, make_mesh(shape, axes), backend=backend)
+            out[tag] = [
+                psums(lambda p, q, Q: op.lanczos_step(p, q, 0.4, Q)[0],
+                      p, q, Q),
+                psums(lambda q, p, Pb: op.lanczos_rstep(q, p, 0.2, Pb)[0],
+                      q, p, Pb)]
+        op = sharded_operator(A, make_mesh((8,), ("data",)))
+        hlo = jax.jit(lambda p, q, Q: op.lanczos_step(p, q, 0.4, Q)) \\
+            .lower(p, q, Q).compile().as_text()
+        counts = hlo_analysis.analyze(hlo).collective_counts
+        out["hlo"] = {k: v for k, v in counts.items() if v}
+        print(json.dumps(out))
+    """)
+    assert res["rows"] == [1, 1], res
+    assert res["rows_pallas"] == [1, 1], res
+    assert res["pods"] == [1, 1], res
+    assert res["model"] == [2, 2], res          # +1 matvec-reduce, not +per-dot
+    assert res["hlo"] == {"all-reduce": 1}, res
+
+
+def test_sharded_solvers_match_dense_on_8_devices():
+    """Acceptance: sharded fsvd / fsvd_blocked / rsvd match their
+    single-device factorizations to 1e-5 (f32) on a non-divisible shape."""
+    res = run_sub("""
+        from repro.api import SVDSpec, factorize
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.matvec import sharded_operator
+        import repro.distributed.gk_dist  # registers fsvd_sharded
+        mesh = make_mesh((8,), ("data",))
+        # the 1e3 scale makes sigma_max(A) ~ 3e4: regression cover for the
+        # distributed orthonormalization's drop threshold, which must be
+        # scale-relative (a fixed scale silently dropped all expansion
+        # columns for sigma_max > ~2.5e3 and degraded fsvd_blocked)
+        M = jax.random.normal(jax.random.PRNGKey(0), (100, 12))
+        A = 1e3 * (M @ jax.random.normal(jax.random.PRNGKey(1), (12, 70))
+                   + 1e-4 * jax.random.normal(jax.random.PRNGKey(2),
+                                              (100, 70)))
+        smax = float(jnp.linalg.svd(A, compute_uv=False)[0])
+        key = jax.random.PRNGKey(7)
+        out = {}
+        for method, kw in [("fsvd_sharded", dict(max_iters=48)),
+                           ("fsvd_blocked", dict()),
+                           ("rsvd", dict(power_iters=3, oversample=10))]:
+            spec = SVDSpec(method=method, rank=8, **kw)
+            sharded = factorize(sharded_operator(A, mesh), spec, key=key)
+            if method == "fsvd_sharded":
+                ref = factorize(sharded_operator(A, make_mesh((1,),
+                                                              ("data",))),
+                                spec, key=key)
+            else:
+                ref = factorize(A, spec, key=key)
+            out[method] = float(np.max(np.abs(np.asarray(sharded.s)
+                                              - np.asarray(ref.s))) / smax)
+        print(json.dumps(out))
+    """)
+    for method, err in res.items():
+        assert err < 1e-5, f"{method}: sharded vs single σ error {err:.2e}"
+
+
+def test_sharded_sparse_and_gram_operands():
+    """ShardedOp wraps SparseOp (row-partitioned ELL packs) and GramOp;
+    estimate_rank + fsvd_blocked accept both without densifying."""
+    res = run_sub("""
+        from repro.api import SVDSpec, estimate_rank, factorize
+        from repro.core.operators import DenseOp, GramOp, SparseOp
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.matvec import sharded_operator
+        mesh = make_mesh((8,), ("data",))
+        key = jax.random.PRNGKey(3)
+        mask = jax.random.uniform(jax.random.PRNGKey(4), (90, 60)) < 0.08
+        dense = jnp.where(mask, jax.random.normal(key, (90, 60)), 0.0)
+        sop = sharded_operator(SparseOp.fromdense(dense), mesh)
+        p = jax.random.normal(jax.random.PRNGKey(5), (60,))
+        q = jax.random.normal(jax.random.PRNGKey(6), (90,))
+        e_mv = float(jnp.max(jnp.abs(sop.mv(p) - dense @ p)))
+        e_rmv = float(jnp.max(jnp.abs(sop.rmv(q) - dense.T @ q)))
+        s_true = jnp.linalg.svd(dense, compute_uv=False)[:6]
+        out = factorize(sop, SVDSpec(method="fsvd_blocked", rank=6),
+                        key=jax.random.PRNGKey(8))
+        e_s = float(np.max(np.abs(np.asarray(out.s) - np.asarray(s_true)))
+                    / float(s_true[0]))
+        lr = jax.random.normal(jax.random.PRNGKey(9), (64, 7)) \\
+            @ jax.random.normal(jax.random.PRNGKey(10), (7, 48))
+        gop = sharded_operator(GramOp(DenseOp(lr)), mesh)
+        rk = int(estimate_rank(gop, key=jax.random.PRNGKey(11)).rank)
+        print(json.dumps({"mv": e_mv, "rmv": e_rmv, "sigma": e_s,
+                          "rank": rk}))
+    """)
+    assert res["mv"] < 1e-4 and res["rmv"] < 1e-4
+    assert res["sigma"] < 1e-5
+    assert res["rank"] == 7
+
+
+def test_fsvd_sharded_rejects_host_loop():
+    """Regression (this PR): spec.host_loop=True used to be silently
+    honored — a host loop on a sharded operand gathers device scalars
+    every iteration, stalling the mesh.  It must be a loud error now."""
+    import jax
+    import pytest
+    from repro.api import SVDSpec, factorize
+    from repro.distributed.matvec import sharded_operator
+    from repro.launch.mesh import make_mesh
+    import repro.distributed.gk_dist  # noqa: F401  (registers fsvd_sharded)
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    op = sharded_operator(
+        jax.random.normal(jax.random.PRNGKey(0), (32, 16)), mesh)
+    with pytest.raises(ValueError, match="host_loop"):
+        factorize(op, SVDSpec(method="fsvd_sharded", rank=4,
+                              host_loop=True),
+                  key=jax.random.PRNGKey(1))
+    # host_loop=None / False keep working
+    out = factorize(op, SVDSpec(method="fsvd_sharded", rank=4),
+                    key=jax.random.PRNGKey(1))
+    assert out.s.shape == (4,)
+
+
+def test_estimate_rank_sharded_defaults_to_in_graph(monkeypatch):
+    """Regression (this PR): estimate_rank's host-loop default must flip
+    to the in-graph loop on sharded operands — the per-iteration host
+    gather is the same mesh-wide stall fsvd_sharded rejects."""
+    import jax
+    import pytest
+    import repro.core.gk as gk_mod
+    from repro.api import SVDSpec, estimate_rank
+    from repro.distributed.matvec import sharded_operator
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    A = jax.random.normal(jax.random.PRNGKey(0), (40, 9)) \
+        @ jax.random.normal(jax.random.PRNGKey(1), (9, 24))
+    op = sharded_operator(A, mesh)
+
+    def _no_host_loop(*a, **kw):
+        raise AssertionError("sharded estimate_rank took the host loop")
+
+    monkeypatch.setattr(gk_mod, "gk_bidiag_host", _no_host_loop)
+    est = estimate_rank(op, key=jax.random.PRNGKey(2))
+    assert int(est.rank) == 9
+    # an explicit host_loop=True is still the caller's to choose
+    with pytest.raises(AssertionError, match="host loop"):
+        estimate_rank(op, SVDSpec(host_loop=True),
+                      key=jax.random.PRNGKey(2))
+    # ... and dense operands keep the paper's early-exit host default
+    with pytest.raises(AssertionError, match="host loop"):
+        estimate_rank(A, key=jax.random.PRNGKey(2))
+
+
 def test_sharded_train_step_runs():
     """End-to-end: reduced arch, (2,2,2) pod mesh, one real sharded step."""
     res = run_sub("""

@@ -102,3 +102,40 @@ def test_fsvd_blocked_locks_across_restarts(rng):
     assert res.converged and res.restarts > 1
     np.testing.assert_allclose(np.asarray(res.s), np.asarray(s_true[:12]),
                                atol=5e-4 * float(s_true[0]))
+
+
+def test_mgs_block_gram_keeps_large_scale_blocks():
+    """Regression: the eigQR drop threshold must be relative to each
+    pass's own input scale.  A stale first-pass scale made the second
+    pass (unit columns vs a huge raw-block scale) drop EVERY column once
+    ``max‖w‖ > 1/drop`` — e.g. any distributed fsvd_blocked expansion
+    ``Aᵀ(A V)``, which scales as σ_max(A)²."""
+    from repro.core.gk_block import _mgs_block, _mgs_block_gram
+    key = jax.random.PRNGKey(0)
+    W = 1e4 * jax.random.normal(key, (64, 8))
+    empty = jnp.zeros((64, 0), jnp.float32)
+    Q = _mgs_block_gram(W, (empty,))
+    assert Q.shape == (64, 8)
+    # orthonormal to working precision
+    err = jnp.max(jnp.abs(Q.T @ Q - jnp.eye(8)))
+    assert float(err) < 1e-5
+    # spans the same subspace as the per-column MGS reference
+    Qref = _mgs_block(W, (empty,))
+    cos = jnp.linalg.svd(Qref.T @ Q, compute_uv=False)
+    assert float(jnp.min(cos)) > 1 - 1e-5
+
+
+def test_mgs_block_gram_drops_spanned_columns():
+    """The rank-revealing contract survives the fix: columns already in
+    the span of the bases (or duplicated within the block) are dropped,
+    never completed arbitrarily."""
+    from repro.core.gk_block import _mgs_block_gram
+    key = jax.random.PRNGKey(1)
+    B = jnp.linalg.qr(jax.random.normal(key, (48, 4)))[0]
+    fresh = jax.random.normal(jax.random.PRNGKey(2), (48, 3))
+    W = jnp.concatenate([B @ (B.T @ fresh[:, :1]) * 50.0,   # spanned by B
+                         fresh,
+                         fresh[:, :1] * 2.0], axis=1)       # duplicate
+    Q = _mgs_block_gram(W, (B,))
+    assert Q.shape[1] == 3
+    assert float(jnp.max(jnp.abs(B.T @ Q))) < 1e-5

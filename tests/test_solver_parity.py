@@ -155,6 +155,113 @@ def test_reconstruction_residual(method):
 
 
 # ---------------------------------------------------------------------------
+# sharded-vs-single-device differential battery (8 forced host devices)
+# ---------------------------------------------------------------------------
+#
+# Every registered solver runs on the same zoo twice — once on the plain
+# operand, once sharded over an in-process 8-device mesh — and must agree
+# on singular values to 1e-5·σ_max (f32) and on the dominant subspace where
+# the spectrum has a gap.  Separately, σ must be *bit-identical* across
+# every mesh shape that factorizes the 8 devices into row axes: the fused
+# step's stacked psum always reduces over all 8 row shards with identical
+# local block shapes, so the reduction tree (and hence rounding) does not
+# depend on how the row axes are spelled.  (A "model" axis changes the
+# local GEMV shapes — covered by the tolerance-level parity instead.)
+
+ROW_MESHES = [((8,), ("data",)), ((2, 4), ("pod", "data")),
+              ((4, 2), ("pod", "data"))]
+ALL_MESHES = ROW_MESHES + [((4, 2), ("data", "model")),
+                           ((2, 2, 2), ("pod", "data", "model"))]
+
+
+def _sharded_run(method, A, key, mesh, precision=None):
+    import repro.distributed.gk_dist  # noqa: F401  (registers solver)
+    from repro.distributed.matvec import sharded_operator
+    cfg = SOLVERS[method]
+    spec = SVDSpec(method=method, rank=R, precision=precision,
+                   **cfg["spec"])
+    return factorize(sharded_operator(A, mesh), spec, key=key)
+
+
+def _single_run(method, A, key):
+    """Single-device reference for ``method`` (fsvd_sharded references a
+    1-device mesh — the solver requires a sharded operand by contract)."""
+    if method == "fsvd_sharded":
+        from repro.launch.mesh import make_mesh
+        return _sharded_run(method, A, key, make_mesh((1,), ("data",)))
+    cfg = SOLVERS[method]
+    return factorize(A, SVDSpec(method=method, rank=R, **cfg["spec"]),
+                     key=key)
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_sharded_matches_single_device(method, name, mesh8):
+    A, has_gap = ZOO[name]
+    key = jax.random.PRNGKey(7)
+    ref = _single_run(method, A, key)
+    out = _sharded_run(method, A, key, mesh8)
+    smax = float(jnp.linalg.svd(A, compute_uv=False)[0])
+    err = np.max(np.abs(np.asarray(out.s) - np.asarray(ref.s)))
+    assert err / smax < 1e-5, \
+        f"{method} on {name}: sharded σ deviates {err:.2e} vs σ_max {smax:.2e}"
+    if has_gap:
+        cos = jnp.linalg.svd(np.asarray(ref.V).T @ np.asarray(out.V),
+                             compute_uv=False)
+        floor = 0.99 if method == "rsvd" else 0.9999
+        assert float(jnp.min(cos)) > floor, \
+            f"{method} on {name}: sharded/single subspaces diverge " \
+            f"(min cos {float(jnp.min(cos)):.6f})"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("name", ["lowrank_noise", "illcond", "wide"])
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+def test_sharded_parity_on_model_axis_meshes(method, name):
+    """Meshes with a "model" (column) axis change the local GEMV shapes —
+    values must still track the single-device run at f32 tolerance."""
+    from repro.launch.mesh import make_mesh
+    A, _ = ZOO[name]
+    key = jax.random.PRNGKey(7)
+    ref = _single_run(method, A, key)
+    smax = float(jnp.linalg.svd(A, compute_uv=False)[0])
+    for shape, axes in ALL_MESHES[len(ROW_MESHES):]:
+        out = _sharded_run(method, A, key, make_mesh(shape, axes))
+        err = np.max(np.abs(np.asarray(out.s) - np.asarray(ref.s)))
+        assert err / smax < 1e-5, \
+            f"{method} on {name} mesh {shape}{axes}: σ deviates {err:.2e}"
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+def test_sigma_bitwise_across_row_mesh_factorizations(method):
+    """σ bits must not depend on how the 8 row shards are spelled as mesh
+    axes — (8,), (2,4) and (4,2) all reduce the same 8 local blocks."""
+    from repro.launch.mesh import make_mesh
+    A, _ = ZOO["lowrank_noise"]
+    key = jax.random.PRNGKey(7)
+    sigs = [np.asarray(_sharded_run(method, A, key,
+                                    make_mesh(shape, axes)).s)
+            for shape, axes in ROW_MESHES]
+    for s, (shape, axes) in zip(sigs[1:], ROW_MESHES[1:]):
+        np.testing.assert_array_equal(
+            sigs[0], s,
+            err_msg=f"{method}: σ bits differ between (8,)('data',) and "
+                    f"{shape}{axes}")
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("method", sorted(SOLVERS))
+def test_sigma_bitwise_run_to_run(method, mesh8):
+    A, _ = ZOO["graded"]
+    key = jax.random.PRNGKey(7)
+    s1 = np.asarray(_sharded_run(method, A, key, mesh8).s)
+    s2 = np.asarray(_sharded_run(method, A, key, mesh8).s)
+    np.testing.assert_array_equal(s1, s2)
+
+
+# ---------------------------------------------------------------------------
 # densify guard: the matrix-free paths must never materialize the operand
 # ---------------------------------------------------------------------------
 
