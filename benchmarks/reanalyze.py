@@ -1,7 +1,7 @@
 """Re-derive analysis outputs for existing benchmark artifacts without
 re-running the sweeps.
 
-Two artifact kinds:
+Three artifact kinds:
 
   * dry-run / hillclimb directories — recompute roofline inputs from the
     saved (gzipped) HLO, so analyzer fixes propagate without the 40-min
@@ -10,9 +10,16 @@ Two artifact kinds:
     from ``benchmarks.run --emit-json``) — validate the schema and
     recompute every derived field (speedups) from the raw timings, so a
     hand-edited or schema-drifted file is caught in CI.
+  * the cross-PR trajectory: ``--trajectory [DIR]`` stitches every
+    ``BENCH_*.json`` under DIR (default: cwd) into one
+    ``BENCH_trajectory.json`` + a markdown table — per PR artifact, per
+    section, the headline metric (mean step speedup, best device scaling,
+    tracked-session speedup) — so the perf history reads off one report
+    instead of N per-PR files.
 
     PYTHONPATH=src python -m benchmarks.reanalyze artifacts/dryrun
     PYTHONPATH=src python -m benchmarks.reanalyze BENCH_pr3.json
+    PYTHONPATH=src python -m benchmarks.reanalyze --trajectory .
 """
 from __future__ import annotations
 
@@ -95,6 +102,36 @@ def _check_dist_section(path: str, sec: dict) -> int:
     return n
 
 
+_SESSION_RAW = ("m", "n", "rank", "steps", "cold_ms", "tracked_ms",
+                "cold_iters", "tracked_iters")
+
+
+def _check_session_section(path: str, sec: dict) -> int:
+    """Validate a ``session/v1`` section: raw cold-vs-tracked fields
+    present, derived ``speedup`` / ``iter_ratio`` re-derivable."""
+    n = 0
+    for r in sec["records"]:
+        missing = [f for f in _SESSION_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: session record missing {missing}")
+        for field, num, den in (("speedup", "cold_ms", "tracked_ms"),
+                                ("iter_ratio", "cold_iters",
+                                 "tracked_iters")):
+            want = r[num] / max(r[den], 1e-9)
+            have = r.get(field)
+            if have is not None and abs(have - want) > 1e-6 * want:
+                raise SystemExit(
+                    f"{path}: session {r['m']}x{r['n']} r={r['rank']}: "
+                    f"stored {field}={have:.4f} disagrees with raw "
+                    f"values ({want:.4f})")
+            r[field] = want
+        print(f"[reanalyze] session {r['m']}x{r['n']} r={r['rank']} "
+              f"steps={r['steps']}: {r['speedup']:.2f}x wall, "
+              f"{r['iter_ratio']:.2f}x fewer GK iters")
+        n += 1
+    return n
+
+
 def reanalyze_bench(path: str) -> int:
     """Validate a ``repro-bench/v1`` file and recompute derived fields."""
     bench = json.load(open(path))
@@ -128,6 +165,8 @@ def reanalyze_bench(path: str) -> int:
                 n += 1
         elif schema == "dist/v1":
             n += _check_dist_section(path, sec)
+        elif schema == "session/v1":
+            n += _check_session_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new
@@ -139,9 +178,76 @@ def reanalyze_bench(path: str) -> int:
     return n
 
 
+# ---------------------------------------------------------------------------
+# cross-PR trajectory
+# ---------------------------------------------------------------------------
+
+def _headline(schema, records) -> tuple[str, float]:
+    """One (label, value) summary per section — the number a reader scans
+    the trajectory for.  Empty sections report 0.0, never divide."""
+    if schema == "gk_step/v1":
+        sp = [r["unfused_ms"] / r["fused_ms"] for r in records]
+        return "mean fused-step speedup", sum(sp) / len(sp) if sp else 0.0
+    if schema == "dist/v1":
+        scal = [r["solve_ms"] and (r.get("solve_vs_1dev") or 0.0)
+                for r in records]
+        return "best solve scaling vs 1 dev", max(scal) if scal else 0.0
+    if schema == "session/v1":
+        sp = [r["cold_ms"] / max(r["tracked_ms"], 1e-9) for r in records]
+        return "mean tracked-session speedup", (sum(sp) / len(sp)
+                                               if sp else 0.0)
+    return "records", float(len(records))
+
+
+def build_trajectory(directory: str = ".") -> dict:
+    """Aggregate every ``BENCH_*.json`` under ``directory`` into one
+    cross-PR report (written as ``BENCH_trajectory.json``)."""
+    entries = []
+    names = sorted(n for n in os.listdir(directory)
+                   if n.startswith("BENCH_") and n.endswith(".json")
+                   and n != "BENCH_trajectory.json")
+    for name in names:
+        path = os.path.join(directory, name)
+        try:
+            bench = json.load(open(path))
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"[trajectory] {path}: invalid json ({e})")
+        if bench.get("schema") != "repro-bench/v1":
+            print(f"[trajectory] {name}: not repro-bench/v1, skipped")
+            continue
+        sections = []
+        for sec_name, sec in sorted(bench.get("sections", {}).items()):
+            label, value = _headline(sec.get("schema"),
+                                     sec.get("records", []))
+            sections.append({"section": sec_name,
+                             "schema": sec.get("schema"),
+                             "records": len(sec.get("records", [])),
+                             "headline": label, "value": value})
+        entries.append({"artifact": name, "backend": bench.get("backend"),
+                        "quick": bench.get("quick"), "sections": sections})
+    report = {"schema": "repro-bench-trajectory/v1", "entries": entries}
+    out = os.path.join(directory, "BENCH_trajectory.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    # the human-readable view
+    print(f"\n[trajectory] {len(entries)} artifact(s) -> {out}")
+    print(f"{'artifact':<18} {'section':<10} {'schema':<12} "
+          f"{'headline':<30} value")
+    for e in entries:
+        for s in e["sections"]:
+            print(f"{e['artifact']:<18} {s['section']:<10} "
+                  f"{str(s['schema']):<12} {s['headline']:<30} "
+                  f"{s['value']:.2f}")
+    return report
+
+
 if __name__ == "__main__":
-    explicit = bool(sys.argv[1:])
-    for d in (sys.argv[1:] or ["artifacts/dryrun", "artifacts/hillclimb"]):
+    args = sys.argv[1:]
+    if args and args[0] == "--trajectory":
+        build_trajectory(args[1] if len(args) > 1 else ".")
+        sys.exit(0)
+    explicit = bool(args)
+    for d in (args or ["artifacts/dryrun", "artifacts/hillclimb"]):
         if os.path.isfile(d) and d.endswith(".json"):
             print(f"[reanalyze] {d}: {reanalyze_bench(d)} records updated")
         elif os.path.isdir(d):

@@ -28,18 +28,20 @@ def main() -> None:
                     help="smaller sizes / fewer steps (CI)")
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
-                             "kernels", "sparse", "gk_step", "dist"])
+                             "kernels", "sparse", "gk_step", "dist",
+                             "session"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
                          "json (default PATH: BENCH_pr3.json; use --only "
                          "dist --emit-json BENCH_pr4.json for the device-"
-                         "scaling artifact)")
+                         "scaling artifact, --only session --emit-json "
+                         "BENCH_pr5.json for the tracked-session one)")
     args = ap.parse_args()
 
     from benchmarks import (dist_bench, fig1, fig2, gk_step_bench,
-                            kernels_bench, roofline, sparse_bench, table1,
-                            table2)
+                            kernels_bench, roofline, session_bench,
+                            sparse_bench, table1, table2)
 
     t0 = time.time()
     sections = []
@@ -70,6 +72,11 @@ def main() -> None:
         sections.append(("dist", lambda: dist_bench.run(
             quick=args.quick,
             repeats=1 if args.quick else 3)))
+    if args.only in (None, "session"):
+        sections.append(("session", lambda: session_bench.run(
+            sizes=session_bench.QUICK_SIZES if args.quick else None,
+            repeats=1 if args.quick else 3,
+            steps=4 if args.quick else session_bench.STEPS)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(
             mesh="pod16x16")))

@@ -1,0 +1,132 @@
+"""Cold ``factorize`` vs tracked ``Session.update`` on a drifting operator.
+
+The paper's §V workload: a stream of partial SVDs of an operator that
+drifts slowly between solves.  The cold baseline re-solves every step with
+the full Krylov budget (but *does* share the plan compile cache — the
+comparison isolates the algorithmic saving, not retrace overhead); the
+tracked path warm-starts each solve from the previous Ritz basis with the
+session's reduced refine budget.  Both must hit the same accuracy gate
+(max singular-value error vs dense SVD), so the speedup is a like-for-like
+iterations saving.
+
+Section schema ``session/v1`` (validated by ``benchmarks.reanalyze``):
+records carry raw timings/iterations and the re-derivable ``speedup`` =
+cold_ms / tracked_ms and ``iter_ratio`` = cold_iters / tracked_iters.
+
+    PYTHONPATH=src python -m benchmarks.session_bench
+    PYTHONPATH=src python -m benchmarks.run --only session --emit-json \
+        BENCH_pr5.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, make_lowrank
+from repro.api import SVDSpec, Session, clear_plan_cache, factorize
+
+SIZES = [(512, 384, 8), (1024, 512, 16), (2048, 1024, 16)]
+QUICK_SIZES = [(256, 160, 8)]
+
+STEPS = 8          # drift steps per sweep
+DRIFT = 1e-3       # per-step relative (Frobenius) drift
+
+
+def _drift_sequence(key, m: int, n: int, r: int, steps: int,
+                    drift: float) -> list:
+    """A_0 low-rank + noise, then ``steps`` cumulative relative drifts."""
+    k0, kn, kd = jax.random.split(key, 3)
+    A = make_lowrank(k0, m, n, r) \
+        + 1e-4 * jax.random.normal(kn, (m, n))
+    scale = float(jnp.linalg.norm(A)) * drift
+    seq = [A]
+    for t in range(steps):
+        A = A + scale * jax.random.normal(jax.random.fold_in(kd, t),
+                                          (m, n)) / jnp.sqrt(m * n)
+        seq.append(A)
+    return [jax.device_put(x) for x in seq]
+
+
+def _accuracy(fact, A) -> float:
+    s_true = jnp.linalg.svd(A, compute_uv=False)[: fact.rank]
+    return float(jnp.max(jnp.abs(fact.s - s_true)) / s_true[0])
+
+
+def _cold_sweep(seq, spec, key) -> tuple[float, float, float]:
+    """(total_ms, mean_iters, worst_err) for per-step cold factorize."""
+    facts = []
+    t0 = time.perf_counter()
+    for t, A in enumerate(seq):
+        f = factorize(A, spec, key=jax.random.fold_in(key, t))
+        jax.block_until_ready(f.s)
+        facts.append(f)
+    ms = (time.perf_counter() - t0) * 1e3
+    iters = sum(int(f.iterations) for f in facts) / len(facts)
+    err = max(_accuracy(f, A) for f, A in zip(facts, seq))
+    return ms, iters, err
+
+
+def _tracked_sweep(seq, spec, key) -> tuple[float, float, float, dict]:
+    sess = Session(seq[0], spec, key=key, track_residuals=False)
+    facts = []
+    t0 = time.perf_counter()
+    f = sess.solve()
+    jax.block_until_ready(f.s)
+    facts.append(f)
+    for A in seq[1:]:
+        f = sess.update(A)
+        jax.block_until_ready(f.s)
+        facts.append(f)
+    ms = (time.perf_counter() - t0) * 1e3
+    iters = sum(r["iterations"] for r in sess.history) / len(sess.history)
+    err = max(_accuracy(f, A) for f, A in zip(facts, seq))
+    return ms, iters, err, sess.counts()
+
+
+def run(sizes=None, repeats: int = 3, steps: int = STEPS,
+        drift: float = DRIFT) -> dict:
+    key = jax.random.PRNGKey(42)
+    records = []
+    for m, n, r in (sizes or SIZES):
+        spec = SVDSpec(method="fsvd", rank=r)
+        seq = _drift_sequence(jax.random.fold_in(key, m * n), m, n, r,
+                              steps, drift)
+        # one uncounted warm sweep compiles both budgets into the plan
+        # cache — the measurement then isolates solve cost.
+        _cold_sweep(seq[:2], spec, key)
+        _tracked_sweep(seq[:2], spec, key)
+        cold_runs, tracked_runs = [], []
+        for rep in range(repeats):
+            cold_runs.append(_cold_sweep(seq, spec,
+                                         jax.random.fold_in(key, rep)))
+            tracked_runs.append(_tracked_sweep(
+                seq, spec, jax.random.fold_in(key, 100 + rep)))
+        cold_ms, cold_iters, cold_err = sorted(cold_runs)[len(cold_runs)//2]
+        tracked_ms, tracked_iters, tracked_err, counts = sorted(
+            tracked_runs, key=lambda x: x[0])[len(tracked_runs) // 2]
+        records.append({
+            "m": m, "n": n, "rank": r, "steps": steps, "drift": drift,
+            "cold_ms": cold_ms, "tracked_ms": tracked_ms,
+            "cold_iters": cold_iters, "tracked_iters": tracked_iters,
+            "cold_err": cold_err, "tracked_err": tracked_err,
+            "refines": counts["refine"], "restarts": counts["restart"],
+            "speedup": cold_ms / tracked_ms,
+            "iter_ratio": cold_iters / max(tracked_iters, 1e-9),
+        })
+    rows = [[f"{r['m']}x{r['n']}", r["rank"], r["steps"],
+             f"{r['cold_ms']:.1f}", f"{r['tracked_ms']:.1f}",
+             f"{r['speedup']:.2f}x",
+             f"{r['cold_iters']:.0f}->{r['tracked_iters']:.1f}",
+             f"{r['cold_err']:.1e}", f"{r['tracked_err']:.1e}"]
+            for r in records]
+    print(fmt_table(["shape", "r", "steps", "cold ms", "tracked ms",
+                     "speedup", "GK iters", "cold err", "tracked err"],
+                    rows))
+    clear_plan_cache()
+    return {"schema": "session/v1", "records": records}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,126 @@
+"""Convergence diagnostics: the ``ConvergenceInfo`` pytree and the callback
+protocol threaded through the GK / blocked-GK / R-SVD solvers.
+
+Two delivery modes, matched to the two execution styles:
+
+  * **host-loop solvers** (``gk_bidiag_host``, ``fsvd_blocked``) already sync
+    a scalar pair per iteration — they call ``callback.on_step(i, **metrics)``
+    with the *same* host floats, so observing convergence costs zero extra
+    device round-trips.
+  * **in-graph solvers** (``gk_bidiag`` under ``jit`` / ``SolverPlan``)
+    cannot call back to the host per iteration.  Instead the per-iteration
+    residual proxies are *already arrays in the graph* (the GK recurrence
+    scalars live in fixed-size buffers), so the solver assembles a
+    :class:`ConvergenceInfo` pytree of device arrays and hands it to
+    ``callback.on_info(info)`` — under a trace this happens at trace time
+    and the info rides out of the compiled program as ordinary outputs
+    (``SolverPlan.solve(with_info=True)``); no host round-trips occur until
+    the caller reads a value.
+
+For GK the per-iteration residual proxy is ``beta_{i+1}``: the coupling
+scalar of the three-term recurrence, whose collapse under the breakdown
+threshold *is* the convergence/rank-revelation event of paper Alg 1.  The
+blocked solver reports the per-restart-cycle minimum Ritz residual
+``min_i ||A^T u_i - sigma_i v_i||`` instead (its native locking criterion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ConvergenceInfo:
+    """Per-solve convergence record (a pytree; jit/vmap/checkpoint-safe).
+
+    residuals  — (k,) per-iteration residual proxies in solve order,
+                 zero-padded beyond ``iterations``: GK recurrence betas for
+                 "fsvd"/"fsvd_sharded", per-cycle min Ritz residuals for
+                 "fsvd_blocked", empty (shape (0,)) for sketch solvers.
+    iterations — () int32: iterations / restart cycles actually used.
+    breakdown  — () bool: did the solver's breakdown / non-convergence flag
+                 fire.
+    method     — producing solver (static aux; survives pytree ops).
+    """
+
+    residuals: Array
+    iterations: Array
+    breakdown: Array
+    method: str = "fsvd"
+
+    @property
+    def last_residual(self) -> Array:
+        """The final (possibly masked) residual proxy, 0.0 when empty."""
+        if self.residuals.shape[0] == 0:
+            return jnp.asarray(0.0)
+        idx = jnp.clip(self.iterations - 1, 0, self.residuals.shape[0] - 1)
+        return self.residuals[idx]
+
+
+def _info_flatten(c: ConvergenceInfo):
+    return ((c.residuals, c.iterations, c.breakdown), (c.method,))
+
+
+def _info_unflatten(aux, children):
+    return ConvergenceInfo(*children, method=aux[0])
+
+
+jax.tree_util.register_pytree_node(ConvergenceInfo, _info_flatten,
+                                   _info_unflatten)
+
+
+class ConvergenceCallback:
+    """Base/no-op callback: subclass and override what you observe.
+
+    ``on_step(i, **metrics)`` fires once per iteration from *host-loop*
+    solvers only, with host scalars the loop already synced (typical keys:
+    ``alpha``, ``beta`` for GK; ``residual``, ``locked`` for the blocked
+    solver).  ``on_info(info)`` fires once per solve from every built-in
+    solver; under a trace ``info`` holds tracers — store, don't ``float()``.
+    """
+
+    def on_step(self, i: int, **metrics) -> None:   # pragma: no cover
+        pass
+
+    def on_info(self, info: ConvergenceInfo) -> None:  # pragma: no cover
+        pass
+
+
+class RecordingCallback(ConvergenceCallback):
+    """Collects everything: ``steps`` is a list of (i, metrics) tuples,
+    ``info`` the final :class:`ConvergenceInfo` (None until the solve
+    ends)."""
+
+    def __init__(self) -> None:
+        self.steps: list[tuple[int, dict]] = []
+        self.info: Optional[ConvergenceInfo] = None
+
+    def on_step(self, i: int, **metrics) -> None:
+        self.steps.append((i, metrics))
+
+    def on_info(self, info: ConvergenceInfo) -> None:
+        self.info = info
+
+
+class CaptureCallback(ConvergenceCallback):
+    """Trace-time capture used by ``SolverPlan``: holds the (possibly
+    traced) info pytree so the compiled program can return it as an
+    output."""
+
+    def __init__(self) -> None:
+        self.info: Optional[ConvergenceInfo] = None
+
+    def on_info(self, info: ConvergenceInfo) -> None:
+        self.info = info
+
+
+def empty_info(method: str) -> ConvergenceInfo:
+    """A structurally-valid info for solvers with no per-iteration signal."""
+    return ConvergenceInfo(jnp.zeros((0,), jnp.float32),
+                           jnp.asarray(0, jnp.int32),
+                           jnp.asarray(False), method=method)

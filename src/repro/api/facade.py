@@ -2,8 +2,16 @@
 
 Dense arrays, implicit low-rank operators, pod-sharded operators and legacy
 ``LinOp`` closures all enter here; the spec picks the solver; a unified
-``Factorization`` / ``RankEstimate`` comes back.  Because operators and
-results are pytrees, the facade composes with jax transforms:
+``Factorization`` / ``RankEstimate`` comes back.  Since PR 5 these are thin
+wrappers over the plan layer (``repro.api.plan``): each call builds a
+:class:`~repro.api.plan.SolverPlan` — method resolution is operator-aware —
+and executes through the process-wide compile cache, so repeated one-shot
+calls with the same (spec, operand kind, shape, dtype, mesh) share one
+staged executable.  For stateful solve-many workloads use
+``repro.api.session`` directly.
+
+Because operators and results are pytrees, the facade composes with jax
+transforms:
 
     batched = jax.vmap(lambda op: factorize(op, spec, key=key))(stacked_op)
 
@@ -15,35 +23,29 @@ from typing import Optional
 
 import jax
 
-from repro.api.registry import get_solver
+# NOTE: the package re-exports the *function* ``plan`` under the same name
+# as the module, so bind the names straight off the submodule.
+from repro.api.plan import HOST_SIDE_METHODS
+from repro.api.plan import plan as _make_plan
+from repro.api.plan import resolve_method  # re-export (public since PR 1)
 from repro.api.results import Factorization, RankEstimate
 from repro.api.spec import SVDSpec
-from repro.core._keys import resolve_key
-from repro.core.operators import as_operator, sharding_mesh
-from repro.core.rank import numerical_rank as _numerical_rank
 
 Array = jax.Array
 
-# "auto" heuristic: the GK solver tracks the paper's accuracy (relative
-# errors at roundoff level); the sketch is cheaper per pass but its tail
-# triplets degrade (paper Fig 1).  A loose tolerance or an explicit
-# power-iteration request signals the caller is on the sketch side of the
-# trade-off curve.
-_AUTO_SKETCH_TOL = 1e-4
+__all__ = ["factorize", "factorize_jit", "estimate_rank", "resolve_method"]
 
 
-def resolve_method(spec: SVDSpec) -> str:
-    """Resolve ``method="auto"`` to a registered solver name."""
-    if spec.method != "auto":
-        return spec.method
-    if spec.power_iters > 0 or spec.tol >= _AUTO_SKETCH_TOL:
-        return "rsvd"
-    return "fsvd"
+def _spec_of(spec: Optional[SVDSpec], overrides: dict) -> SVDSpec:
+    spec = (spec or SVDSpec())
+    if overrides:
+        spec = spec.replace(**overrides)
+    return spec
 
 
 def factorize(A, spec: Optional[SVDSpec] = None, *,
               key: Optional[Array] = None, q1: Optional[Array] = None,
-              **overrides) -> Factorization:
+              callback=None, **overrides) -> Factorization:
     """Rank-``spec.rank`` partial SVD of ``A`` under ``spec``.
 
     ``A`` — dense array, any ``repro.core.operators`` operator, a sharded
@@ -51,50 +53,49 @@ def factorize(A, spec: Optional[SVDSpec] = None, *,
     ``key`` — PRNG key for the start vector / sketch (warns and falls back
     to ``PRNGKey(0)`` when omitted).
     ``q1`` — optional GK warm-start vector (e.g. ``prev.warm_start()``).
+    ``callback`` — optional ``repro.api.callbacks.ConvergenceCallback``.
     Keyword overrides are merged into the spec:
     ``factorize(A, rank=20)`` == ``factorize(A, SVDSpec(rank=20))``.
+
+    Equivalent to ``plan(spec, like=A).solve(key=key, q1=q1)`` — solver
+    resolution is operator-aware and compiled programs are shared through
+    the plan cache.
     """
-    spec = (spec or SVDSpec())
-    if overrides:
-        spec = spec.replace(**overrides)
-    op = as_operator(A, backend=spec.backend)
-    solver = get_solver(resolve_method(spec))
-    return solver(op, spec, key=key, q1=q1)
-
-
-# solvers that run a host-side Python loop (real early exit / restarts)
-# cannot be staged into a single XLA program.
-_HOST_SIDE_METHODS = frozenset({"fsvd_blocked"})
+    spec = _spec_of(spec, overrides)
+    # one-shot semantics: the caller keeps ownership of q1 (donation is
+    # opt-in via factorize_jit / plan(donate_q1=True), where the handle
+    # makes the consume-on-entry contract explicit).
+    return _make_plan(spec, like=A, donate_q1=False).solve(
+        key=key, q1=q1, callback=callback)
 
 
 def factorize_jit(spec: SVDSpec, *, donate_q1: bool = True):
-    """A jit-compiled ``fn(A, key, q1) -> Factorization`` specialized to
+    """A compiled-once ``fn(A, key, q1) -> Factorization`` specialized to
     ``spec``, with the warm-start buffer donated on accelerator backends.
 
     The GK start vector ``q1`` is consumed on entry (normalized into the
     first basis column), so its HBM allocation is dead for the rest of the
     solve — donation lets XLA reuse it for an output instead of holding
-    both live.  Donation is only requested on TPU/GPU (CPU ignores it with
-    a per-call warning).  Pass ``q1=None`` to use the keyed start vector.
+    both live.  Donation is only requested on TPU/GPU.  Pass ``q1=None``
+    to use the keyed start vector.
 
     Host-loop specs (``host_loop=True`` or a host-side method such as
     ``fsvd_blocked``) cannot be staged into one XLA program and are
-    rejected.
+    rejected.  The returned function executes through the shared plan
+    cache — two ``factorize_jit`` handles for the same spec reuse one
+    executable per operand signature.
     """
     method = resolve_method(spec)
-    if spec.host_loop or method in _HOST_SIDE_METHODS:
+    if spec.host_loop or method in HOST_SIDE_METHODS:
         raise ValueError(
             f"factorize_jit requires an in-graph solver; method={method!r} "
             f"host_loop={spec.host_loop!r} runs a host-side loop")
-    solver = get_solver(method)
+    p = _make_plan(spec, donate_q1=donate_q1)
 
     def run(A, key, q1):
-        return solver(as_operator(A, backend=spec.backend), spec,
-                      key=key, q1=q1)
+        return p.solve(A, key=key, q1=q1)
 
-    donate = (2,) if donate_q1 and jax.default_backend() in ("tpu", "gpu") \
-        else ()
-    return jax.jit(run, donate_argnums=donate)
+    return run
 
 
 def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
@@ -112,29 +113,9 @@ def estimate_rank(A, spec: Optional[SVDSpec] = None, *,
     loop: a host loop gathers device scalars every iteration, stalling
     the whole mesh on one host round-trip per step.  An explicit
     ``host_loop=True`` remains honored either way.
+
+    Equivalent to ``plan(spec, like=A).estimate(key=key, ...)``; in-graph
+    estimates share the plan compile cache.
     """
-    spec = (spec or SVDSpec())
-    if overrides:
-        spec = spec.replace(**overrides)
-    if spec.precision is not None:
-        # breakdown-based rank detection resolves directions down to the
-        # basis storage's CGS2 noise floor — narrowing the storage silently
-        # changes what "numerical rank" means, so refuse rather than ignore.
-        raise ValueError(
-            "estimate_rank requires full-precision bases; got "
-            f"spec.precision={spec.precision!r} (rank detection counts "
-            "directions the stored basis can certify — use precision=None)")
-    op = as_operator(A, backend=spec.backend)
-    key = resolve_key(key, caller="estimate_rank")
-    if spec.host_loop is None:
-        host_loop = sharding_mesh(op) is None
-    else:
-        host_loop = spec.host_loop
-    res = _numerical_rank(op, max_iters=spec.max_iters, eps=spec.tol,
-                          relative_eps=spec.relative_tol,
-                          sigma_tol=sigma_tol, key=key,
-                          host_loop=host_loop,
-                          reorth_passes=spec.reorth_passes,
-                          dtype=spec.dtype)
-    return RankEstimate(res.rank, res.gk_iterations, res.eigenvalues,
-                        method="gk")
+    spec = _spec_of(spec, overrides)
+    return _make_plan(spec, like=A).estimate(key=key, sigma_tol=sigma_tol)

@@ -1,9 +1,14 @@
 """Solver registry: methods plug into the facade by name.
 
-A solver is ``fn(A: Operator, spec: SVDSpec, *, key, q1) -> Factorization``.
-Core solvers (fsvd, rsvd) register at import; extensions (e.g. the
-pod-sharded solver in ``repro.distributed.gk_dist``) register themselves on
-import of their module — the facade never hard-codes the set.
+A solver is ``fn(A: Operator, spec: SVDSpec, *, key, q1) -> Factorization``
+(optionally also accepting ``callback=`` — a
+``repro.api.callbacks.ConvergenceCallback``; the plan layer detects the
+parameter and only passes it to solvers that take it).  Core solvers
+(fsvd, rsvd) register at import; extensions (e.g. the pod-sharded solver
+in ``repro.distributed.gk_dist``) register themselves on import of their
+module — the facade never hard-codes the set.  A registered solver that
+is jit-safe can additionally opt into plan staging via
+``repro.api.plan.register_ingraph_method``.
 """
 from __future__ import annotations
 

@@ -64,8 +64,16 @@ class Factorization:
         computed left subspace.  (A single exact singular vector would be an
         invariant direction — GK would break down after one step — so the
         blend spreads the start across all computed directions, letting the
-        solver re-extract the whole subspace in ~rank iterations.)"""
-        return self.U @ self.s
+        solver re-extract the whole subspace in ~rank iterations.)
+
+        Always returned in the *compute* dtype: under ``precision="bf16"``
+        the stored U is half-width, and a q1 inheriting that storage dtype
+        would seed the next solve's CGS2 with bf16 rounding noise — the
+        warm start would start the recurrence at the narrow storage's
+        noise floor instead of the compute dtype's.
+        """
+        compute = jnp.promote_types(self.U.dtype, jnp.float32)
+        return self.U.astype(compute) @ self.s.astype(compute)
 
 
 def _fact_flatten(f: Factorization):

@@ -1,0 +1,358 @@
+"""Session — track a drifting operator across many solves.
+
+The paper's §V workload (Riemannian similarity learning) and the ROADMAP
+serving target are not one SVD but a *stream* of partial SVDs of an
+operator that drifts slowly between solves (a gradient operator along a
+training trajectory, a similarity matrix under live updates).  A
+:class:`Session` owns that stream:
+
+    sess = session(A, SVDSpec(method="fsvd", rank=8), key=key)
+    f0 = sess.solve()                 # cold: full Krylov budget
+    f1 = sess.update(A_next)          # warm: refine from f0, reduced budget
+    f2 = sess.delta(LowRankOp(...))   # additive low-rank drift, same path
+
+Per update the session measures the **subspace angle** between the previous
+Ritz basis and its image under the new operator — ``sin θ = ||(I − U Uᵀ)
+A' V||_F / ||A' V||_F``, r matvecs, negligible next to a solve — and
+decides *refine vs restart*: below ``restart_angle`` the new solve
+warm-starts from ``prev.warm_start()`` with the reduced ``refine_iters``
+Krylov budget; above it (operator rotated away — tracking would converge
+to a stale subspace) it falls back to a cold solve with the full budget.
+
+Solves run through one shared :class:`~repro.api.plan.SolverPlan`, so a
+session pays exactly one XLA trace per (operand signature, budget) for its
+entire lifetime, and every solve appends a record (kind, iterations,
+drift, residual) to ``history`` — the ``ConvergenceInfo`` diagnostics are
+captured in-graph, no per-iteration host round-trips.
+
+Sessions checkpoint: ``sess.save(dir, step)`` persists the previous
+factorization + plan spec through ``repro.checkpoint`` (atomic, crash
+safe); ``Session.restore(dir, A)`` / ``sess.load_latest(dir)`` resume
+tracking where the stream left off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import method_needs_key
+from repro.api.plan import plan as _make_plan
+from repro.api.results import Factorization
+from repro.api.spec import SVDSpec
+from repro.core._keys import resolve_key
+from repro.core.operators import as_operator
+
+Array = jax.Array
+
+
+def spec_to_dict(spec: SVDSpec) -> dict:
+    """JSON-able spec (dtype names, not dtype objects) for manifests."""
+    d = dataclasses.asdict(spec)
+    d["dtype"] = None if spec.dtype is None else jnp.dtype(spec.dtype).name
+    return d
+
+
+def spec_from_dict(d: dict) -> SVDSpec:
+    d = dict(d)
+    if d.get("dtype") is not None:
+        d["dtype"] = jnp.dtype(d["dtype"])
+    return SVDSpec(**d)
+
+
+def _cold_iters(spec: SVDSpec, shape) -> int:
+    """The Krylov budget a cold solve actually runs (facade defaults —
+    the ``k=None`` rule lives in ``repro.core.fsvd.default_k``)."""
+    from repro.core.fsvd import default_k
+    cold = spec.max_iters if spec.max_iters is not None \
+        else default_k(spec.rank, shape)
+    return max(min(cold, min(shape)), spec.rank)
+
+
+def _default_refine_iters(spec: SVDSpec, shape) -> int:
+    """Initial Krylov budget for a warm-started refine solve.
+
+    A cold solve explores from a random vector and needs ``~4 r``
+    iterations for the top-r Ritz values to converge; a warm start already
+    lies in the (nearly invariant) previous subspace, so ``r`` iterations
+    re-extract it and a modest slack absorbs the drift.  Never exceeds the
+    cold budget — refine must be a strict saving.  This is only the
+    *seed*: the session re-learns the budget from each solve's observed
+    convergence trace (see ``Session._learn_refine_iters``).
+    """
+    return max(1, min(max(spec.rank + 8, (3 * spec.rank) // 2),
+                      _cold_iters(spec, shape), min(shape)))
+
+
+# budget learning: the per-iteration GK residual proxy (beta) collapses
+# once the Krylov space has captured the reachable spectrum — the collapse
+# index measures how hard THIS spectrum is (r for a gapped matrix, never
+# for a flat one), which is exactly what the refine budget should track.
+_DECAY_TOL = 3e-2      # "collapsed" = beta below this fraction of max beta
+_DECAY_SLACK = 8       # iterations granted beyond the collapse index
+_REFINE_CAP = 0.75     # hard-spectrum cap as a fraction of the cold budget
+_BUDGET_QUANTUM = 4    # round budgets up to multiples (bounds recompiles)
+
+
+class Session:
+    """Stateful compile-once / solve-many tracker for one operand stream.
+
+    Parameters
+    ----------
+    A             initial operand (anything ``factorize`` accepts).
+    spec          solve configuration; ``method="auto"`` resolves
+                  operator-aware, once.
+    key           PRNG key stream seed; per-solve keys are folded in, so
+                  one session key covers the whole stream.  Omitted: the
+                  facade's implicit-key policy applies (warn + PRNGKey(0)).
+    refine_iters  Krylov budget for warm refine solves (default: see
+                  ``_default_refine_iters``).
+    restart_angle refine/restart threshold on the drift sine in [0, 1]
+                  (default 0.5 ≈ 30°).
+    track_residuals
+                  append the relative residual ``||AᵀU − VΣ||/||Σ||`` to
+                  each history record (r extra matvecs + one host sync per
+                  solve); disable for latency-critical streams.
+    """
+
+    def __init__(self, A, spec: Optional[SVDSpec] = None, *,
+                 key: Optional[Array] = None,
+                 refine_iters: Optional[int] = None,
+                 restart_angle: float = 0.5,
+                 track_residuals: bool = True,
+                 **overrides):
+        spec = (spec or SVDSpec())
+        if overrides:
+            spec = spec.replace(**overrides)
+        self.op = as_operator(A, backend=spec.backend)
+        self.plan = _make_plan(spec, like=self.op)
+        self.spec = self.plan.spec
+        # an explicit refine_iters pins the budget; otherwise the session
+        # seeds it optimistically and re-learns it from every solve's
+        # convergence trace.
+        self._auto_refine = refine_iters is None
+        if refine_iters is None:
+            refine_iters = _default_refine_iters(self.spec, self.op.shape)
+        self.refine_iters = int(refine_iters)
+        # the refine plan shares the resolved method but not the budget —
+        # both executables live in the process-wide cache.
+        self.refine_plan = _make_plan(
+            self.spec.replace(max_iters=self.refine_iters), like=self.op)
+        self.restart_angle = float(restart_angle)
+        self.track_residuals = track_residuals
+        self._key = key
+        self._step = 0
+        self.fact: Optional[Factorization] = None
+        self.history: list[dict] = []
+
+    # --- key stream ---------------------------------------------------
+    def _next_key(self, key: Optional[Array]) -> Array:
+        if key is not None:
+            return key
+        if self._key is None:
+            self._key = resolve_key(None, caller="session")
+        return jax.random.fold_in(self._key, self._step)
+
+    # --- drift measurement --------------------------------------------
+    def drift(self, op=None) -> Optional[float]:
+        """sin of the aggregate angle between span(U_prev) and the image
+        of the previous right Ritz basis under the (new) operator; None
+        before the first solve.  ~0 for an unchanged operator."""
+        if self.fact is None:
+            return None
+        op = self.op if op is None else as_operator(
+            op, backend=self.spec.backend)
+        f = self.fact
+        if (f.U.shape[0], f.V.shape[0]) != tuple(op.shape):
+            # geometry changed under the session: the previous basis spans
+            # nothing of the new operand — maximal drift, forcing the
+            # restart branch instead of a shape-mismatched matmat.
+            return float("inf")
+        compute = jnp.promote_types(f.U.dtype, jnp.float32)
+        U = f.U.astype(compute)
+        B = op.matmat(f.V.astype(compute))          # (m, r): A' V_prev
+        R = B - U @ (U.T @ B)                        # component off span(U)
+        num = jnp.linalg.norm(R)
+        den = jnp.maximum(jnp.linalg.norm(B), jnp.finfo(compute).tiny)
+        return float(num / den)
+
+    # --- solves -------------------------------------------------------
+    def solve(self, *, key: Optional[Array] = None) -> Factorization:
+        """Solve the current operand: cold on first use, tracked after."""
+        return self._tracked_solve(key)
+
+    def update(self, A, *, key: Optional[Array] = None) -> Factorization:
+        """Replace the operand with ``A`` (a drifted version) and solve.
+
+        Same-kind/shape operands reuse the session's staged executables;
+        a structural change (different operator class / shape / mesh)
+        simply compiles a fresh cache entry.
+        """
+        self.op = as_operator(A, backend=self.spec.backend)
+        return self._tracked_solve(key)
+
+    def delta(self, delta_op, *, key: Optional[Array] = None
+              ) -> Factorization:
+        """Apply an additive drift ``A ← A + delta_op`` (e.g. a
+        ``LowRankOp`` rank-1 update) and solve.
+
+        Note each ``delta`` extends the operand's pytree *structure* (a
+        ``SumOp`` term), which keys a new executable — for long streams of
+        additive updates, fold the accumulated delta into one operand and
+        call :meth:`update` instead.
+        """
+        self.op = self.op + as_operator(delta_op,
+                                        backend=self.spec.backend)
+        return self._tracked_solve(key)
+
+    def _learn_refine_iters(self, info) -> None:
+        """Re-fit the refine budget to the observed GK residual trace.
+
+        The collapse index of the beta trace is the number of iterations
+        this spectrum actually needed; gapped spectra collapse at ~r (the
+        optimistic seed holds), hard flat spectra never collapse (budget
+        rises to the cap — still a strict saving over cold).  Budgets are
+        quantized so the stream stages at most a handful of executables.
+        """
+        if not self._auto_refine or info is None or info.method != "gk":
+            return
+        res = np.asarray(info.residuals, np.float64)
+        if res.size == 0 or res.max() <= 0.0:
+            return
+        cold = _cold_iters(self.spec, self.op.shape)
+        floor = _default_refine_iters(self.spec, self.op.shape)
+        cap = max(floor, int(np.ceil(_REFINE_CAP * cold)))
+        idx = np.nonzero(res < _DECAY_TOL * res.max())[0]
+        learned = int(idx[0]) + _DECAY_SLACK if idx.size else cap
+        learned = -(-learned // _BUDGET_QUANTUM) * _BUDGET_QUANTUM
+        learned = int(np.clip(learned, floor, cap))
+        if learned != self.refine_iters:
+            self.refine_iters = learned
+            self.refine_plan = _make_plan(
+                self.spec.replace(max_iters=learned), like=self.op)
+
+    def _tracked_solve(self, key: Optional[Array]) -> Factorization:
+        drift = self.drift() if self.fact is not None else None
+        refine = drift is not None and drift <= self.restart_angle
+        if refine:
+            q1 = self.fact.warm_start()
+            # key-consuming methods (the sketch) draw from the session's
+            # key stream even on refines — q1 has no warm-start seam there
+            rkey = self._next_key(key) if method_needs_key(
+                self.plan.method) else key
+            fact, info = self.refine_plan.solve(self.op, key=rkey, q1=q1,
+                                                with_info=True)
+            kind = "refine"
+        else:
+            fact, info = self.plan.solve(self.op, key=self._next_key(key),
+                                         with_info=True)
+            kind = "cold" if drift is None else "restart"
+        budget = self.refine_iters if refine else None
+        self._learn_refine_iters(info)
+        rec = {"step": self._step, "kind": kind, "drift": drift,
+               "iterations": int(fact.iterations),
+               "breakdown": bool(fact.breakdown)}
+        if budget is not None:
+            rec["budget"] = budget
+        if self.track_residuals:
+            rec["residual"] = self._residual(fact)
+        self.history.append(rec)
+        self.fact = fact
+        self._step += 1
+        return fact
+
+    def _residual(self, fact: Factorization) -> float:
+        compute = jnp.promote_types(fact.U.dtype, jnp.float32)
+        ATU = self.op.rmatmat(fact.U.astype(compute))
+        num = jnp.linalg.norm(ATU - fact.V.astype(compute)
+                              * fact.s[None, :].astype(compute))
+        return float(num / jnp.maximum(jnp.linalg.norm(fact.s), 1e-30))
+
+    # --- bookkeeping ---------------------------------------------------
+    @property
+    def solves(self) -> int:
+        return self._step
+
+    def counts(self) -> dict:
+        """{"cold": n, "refine": n, "restart": n} over the history."""
+        out = {"cold": 0, "refine": 0, "restart": 0}
+        for rec in self.history:
+            out[rec["kind"]] += 1
+        return out
+
+    def meta(self) -> dict:
+        """JSON-able session metadata (manifest ``extra`` payload)."""
+        return {"spec": spec_to_dict(self.spec), "method": self.plan.method,
+                "refine_iters": self.refine_iters,
+                "auto_refine": self._auto_refine,
+                "restart_angle": self.restart_angle,
+                "step": self._step, "history": self.history}
+
+    # --- persistence ----------------------------------------------------
+    def save(self, directory: str, step: Optional[int] = None, *,
+             keep: int = 0) -> str:
+        """Atomic checkpoint of the tracking state (previous factorization
+        + plan spec + history) via ``repro.checkpoint``.  ``keep > 0``
+        prunes old session states to the newest ``keep``."""
+        from repro.checkpoint.store import save_session_state
+        return save_session_state(directory,
+                                  self._step if step is None else step,
+                                  self, keep=keep)
+
+    def load_latest(self, directory: str) -> bool:
+        """Restore tracking state in place from the latest valid session
+        checkpoint under ``directory``; False when none exists."""
+        from repro.checkpoint.store import latest_step, load_session_state
+        step = latest_step(directory)
+        if step is None:
+            return False
+        fact, meta = load_session_state(directory, step)
+        if meta["spec"] != spec_to_dict(self.spec):
+            import warnings
+            warnings.warn(
+                "session checkpoint was written under a different spec "
+                f"({meta['spec']} != {spec_to_dict(self.spec)}); restoring "
+                "its factorization anyway — the next solve re-tracks under "
+                "the current spec.", stacklevel=2)
+        self.fact = fact
+        self._step = int(meta["step"])
+        self.history = list(meta["history"])
+        self._auto_refine = bool(meta.get("auto_refine",
+                                          self._auto_refine))
+        learned = int(meta.get("refine_iters", self.refine_iters))
+        if learned != self.refine_iters:
+            self.refine_iters = learned
+            self.refine_plan = _make_plan(
+                self.spec.replace(max_iters=learned), like=self.op)
+        return True
+
+    @classmethod
+    def restore(cls, directory: str, A, *, key: Optional[Array] = None,
+                step: Optional[int] = None) -> "Session":
+        """Rebuild a session around operand ``A`` from a checkpoint —
+        spec, factorization and history all come from the manifest."""
+        from repro.checkpoint.store import (latest_step,
+                                            load_session_state)
+        step = latest_step(directory) if step is None else step
+        if step is None:
+            raise FileNotFoundError(
+                f"no valid session checkpoint under {directory!r}")
+        fact, meta = load_session_state(directory, step)
+        sess = cls(A, spec_from_dict(meta["spec"]), key=key,
+                   refine_iters=meta.get("refine_iters"),
+                   restart_angle=meta.get("restart_angle", 0.5))
+        # carry the learned budget but keep learning if the original did
+        sess._auto_refine = bool(meta.get("auto_refine", True))
+        sess.fact = fact
+        sess._step = int(meta["step"])
+        sess.history = list(meta["history"])
+        return sess
+
+
+def session(A, spec: Optional[SVDSpec] = None, *,
+            key: Optional[Array] = None, **kwargs) -> Session:
+    """Build a :class:`Session` (keyword conveniences as in ``plan``)."""
+    return Session(A, spec, key=key, **kwargs)

@@ -25,7 +25,7 @@ Array = jax.Array
 
 @register_solver("fsvd")
 def solve_fsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
-               q1: Optional[Array] = None) -> Factorization:
+               q1: Optional[Array] = None, callback=None) -> Factorization:
     """Paper Alg 2: k-step GK bidiagonalization + Ritz extraction."""
     if q1 is None:
         key = resolve_key(key, caller="factorize(method='fsvd')")
@@ -33,14 +33,14 @@ def solve_fsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
                 eps=spec.tol, relative_eps=spec.relative_tol,
                 reorth_passes=spec.reorth_passes,
                 host_loop=bool(spec.host_loop), dtype=spec.dtype,
-                precision=spec.precision)
+                precision=spec.precision, callback=callback)
     return Factorization(res.U, res.s, res.V, res.kprime, res.breakdown,
                          method="fsvd")
 
 
 @register_solver("rsvd")
 def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
-               q1: Optional[Array] = None) -> Factorization:
+               q1: Optional[Array] = None, callback=None) -> Factorization:
     """HMT 2011 randomized range sketch (+ optional power iterations).
 
     ``q1`` is accepted for signature parity but unused — sketching has no
@@ -49,7 +49,7 @@ def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
     key = resolve_key(key, caller="factorize(method='rsvd')")
     res = _rsvd(A, spec.rank, p=spec.oversample,
                 power_iters=spec.power_iters, key=key, dtype=spec.dtype,
-                precision=spec.precision)
+                precision=spec.precision, callback=callback)
     return Factorization(
         res.U, res.s, res.V,
         iterations=jnp.asarray(spec.power_iters, jnp.int32),
@@ -58,7 +58,8 @@ def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
 
 @register_solver("fsvd_blocked")
 def solve_fsvd_blocked(A, spec: SVDSpec, *, key: Optional[Array] = None,
-                       q1: Optional[Array] = None) -> Factorization:
+                       q1: Optional[Array] = None,
+                       callback=None) -> Factorization:
     """Streaming block-GK with Ritz locking + thick restart — for operators
     whose dense form would not fit memory (sparse / Kronecker / sharded).
 
@@ -73,7 +74,7 @@ def solve_fsvd_blocked(A, spec: SVDSpec, *, key: Optional[Array] = None,
                         relative_tol=spec.relative_tol,
                         max_restarts=spec.max_iters or 40, key=key, q1=q1,
                         reorth_passes=spec.reorth_passes, dtype=spec.dtype,
-                        precision=spec.precision)
+                        precision=spec.precision, callback=callback)
     return Factorization(res.U, res.s, res.V,
                          iterations=jnp.asarray(res.block_passes, jnp.int32),
                          breakdown=jnp.asarray(not res.converged),

@@ -19,8 +19,11 @@ class SVDSpec:
     """Declarative description of a partial-SVD / rank-estimation solve.
 
     method        "fsvd" (paper Alg 2), "rsvd" (HMT baseline), "auto"
-                  (heuristic: F-SVD unless the tolerance is loose enough
-                  that a sketch is sufficient), or any name registered via
+                  (operator-aware: sharded operands -> "fsvd_sharded",
+                  matrix-free sparse/Kronecker/Gram operands -> the
+                  streaming "fsvd_blocked"; dense operands pick F-SVD
+                  unless the tolerance is loose enough that a sketch is
+                  sufficient), or any name registered via
                   ``repro.api.register_solver``.
     rank          number of dominant triplets wanted (r).
     max_iters     GK iteration budget k (fsvd) or the iteration cap for

@@ -1,7 +1,9 @@
 """Fault-tolerant checkpointing: atomic directories, keep-N GC, async
-writes, and reshard-on-restore (elastic mesh changes)."""
+writes, reshard-on-restore (elastic mesh changes), and solver-session
+state (``repro.api.session``)."""
 from repro.checkpoint.store import (CheckpointManager, latest_step,
-                                    load_checkpoint, save_checkpoint)
+                                    load_checkpoint, load_session_state,
+                                    save_checkpoint, save_session_state)
 
 __all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
-           "save_checkpoint"]
+           "save_checkpoint", "save_session_state", "load_session_state"]

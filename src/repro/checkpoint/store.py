@@ -162,6 +162,60 @@ def _gc(directory: str, keep: int) -> None:
                 shutil.rmtree(full, ignore_errors=True)
 
 
+# ---------------------------------------------------------------------------
+# Session state (repro.api.session): previous factorization + plan spec
+# ---------------------------------------------------------------------------
+# A Factorization flattens to exactly these children (results.py pytree
+# registration order); the manifest stores them as indexed leaves, so a
+# template can be rebuilt from shapes alone — restoring a session does not
+# require the caller to know the factorization geometry up front.
+_FACT_FIELDS = ("U", "s", "V", "iterations", "breakdown")
+
+
+def save_session_state(directory: str, step: int, session,
+                       keep: int = 0) -> str:
+    """Atomic save of a ``repro.api.session.Session``'s tracking state.
+
+    Array state (the previous :class:`Factorization`) goes through the
+    leaf protocol; static state (plan spec, method, drift thresholds,
+    history) rides in the manifest ``extra`` — the same crash-safety
+    guarantees as any checkpoint.  ``keep > 0`` prunes to the newest
+    ``keep`` valid session states (the tracking state only needs the
+    latest, but keep-N matches the model-checkpoint retention so a
+    rolled-back restore still finds a matching session).
+    """
+    path = save_checkpoint(directory, step, {"fact": session.fact},
+                           extra={"session": session.meta()})
+    if keep > 0:
+        _gc(directory, keep)
+    return path
+
+
+def load_session_state(directory: str, step: int):
+    """Load (factorization, session_meta) written by
+    :func:`save_session_state`.  The factorization template is rebuilt
+    from the manifest's recorded shapes/dtypes, so no geometry needs to be
+    supplied; returns ``(None, meta)`` for a pre-first-solve session."""
+    from repro.api.results import Factorization
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest["extra"]["session"]
+    if not manifest["leaves"]:
+        return None, meta
+    template_leaves = [
+        np.zeros(leaf["shape"], dtype=leaf["dtype"])
+        for leaf in manifest["leaves"]]
+    if len(template_leaves) != len(_FACT_FIELDS):
+        raise ValueError(
+            f"session checkpoint {path} has {len(template_leaves)} leaves; "
+            f"expected {len(_FACT_FIELDS)} (a Factorization)")
+    template = {"fact": Factorization(*template_leaves,
+                                      method=meta.get("method", "fsvd"))}
+    tree, _ = load_checkpoint(directory, step, template)
+    return tree["fact"], meta
+
+
 class CheckpointManager:
     """Keep-N, optionally-async checkpoint writer."""
 

@@ -23,6 +23,18 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """Deprecation of a *repro* entry point (shims kept for API compat).
+
+    A dedicated subclass so CI can escalate exactly the in-repo shims to
+    errors (``-W error::repro.compat.ReproDeprecationWarning``) without
+    also erroring on third-party DeprecationWarnings — the plain-category
+    ``module`` filter cannot do this, because our shims warn with
+    ``stacklevel=2`` and therefore attribute the warning to the *caller's*
+    module, not ``repro.*``.
+    """
+
 try:  # jax >= 0.5-ish
     from jax.sharding import AxisType  # type: ignore[attr-defined]
 except ImportError:  # pragma: no cover - depends on installed jax

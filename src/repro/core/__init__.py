@@ -33,9 +33,10 @@ from repro.core.rsvd import RSVDResult, rsvd as _rsvd_impl
 def _deprecated(fn, replacement: str):
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
+        from repro.compat import ReproDeprecationWarning
         warnings.warn(
             f"repro.core.{fn.__name__}(...) is a deprecated entry point; "
-            f"use {replacement} (repro.api).", DeprecationWarning,
+            f"use {replacement} (repro.api).", ReproDeprecationWarning,
             stacklevel=2)
         return fn(*args, **kwargs)
     return wrapper

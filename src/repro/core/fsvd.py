@@ -57,6 +57,14 @@ def _assemble(op, res: gk_mod.GKResult, r: int) -> FSVDResult:
     return FSVDResult(U, s, V, res.kprime, res.breakdown)
 
 
+def default_k(r: int, shape) -> int:
+    """The Krylov budget a cold F-SVD uses when ``k`` is omitted:
+    ``min(4 r, min(m, n))`` — the space needs slack beyond r for the top-r
+    Ritz values to converge.  Shared with the session layer, whose refine
+    cap must track what cold solves actually run."""
+    return min(4 * r, min(shape))
+
+
 def fsvd(
     A: Operator | LinOp | Array,
     r: int,
@@ -70,6 +78,7 @@ def fsvd(
     host_loop: bool = False,
     dtype=None,
     precision=None,
+    callback=None,
 ) -> FSVDResult:
     """Top-r singular triplets of A via k-step GK bidiagonalization.
 
@@ -78,15 +87,18 @@ def fsvd(
     k=550 for r=100).  ``host_loop=True`` uses the early-exit host loop.
     ``precision="bf16"`` stores the Lanczos bases half-width (see
     :func:`repro.core.gk.gk_bidiag`); the Ritz extraction stays f32.
+    ``callback`` is a ``repro.api.callbacks.ConvergenceCallback``: host-loop
+    runs get ``on_step`` per iteration, every run gets the final
+    ``on_info`` (in-graph: a pytree of device arrays / tracers).
     """
     A = as_operator(A)
     if k is None:
-        k = min(4 * r, min(A.shape))
+        k = default_k(r, A.shape)
     k = max(k, r)
     runner = gk_mod.gk_bidiag_host if host_loop else gk_mod.gk_bidiag
     res = runner(A, k, key=key, q1=q1, eps=eps, relative_eps=relative_eps,
                  reorth_passes=reorth_passes, dtype=dtype,
-                 precision=precision)
+                 precision=precision, callback=callback)
     return _assemble(A, res, r)
 
 

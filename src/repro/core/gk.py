@@ -81,6 +81,20 @@ def _eff_eps(eps: float, dtype, store) -> float:
                40.0 * float(jnp.finfo(store).eps) ** 2)
 
 
+def _notify(callback, alphas, betas, kprime, breakdown):
+    """Assemble a ``ConvergenceInfo`` and hand it to ``callback.on_info``.
+
+    The residual proxy per iteration is ``beta_{i+1}`` — the recurrence
+    coupling whose collapse under the breakdown threshold is the paper's
+    Alg-1 convergence event.  Lazy import: ``repro.api`` imports this
+    module at load time, so the reverse edge must stay call-time only.
+    """
+    if callback is None:
+        return
+    from repro.api.callbacks import ConvergenceInfo
+    callback.on_info(ConvergenceInfo(betas, kprime, breakdown, method="gk"))
+
+
 def _step(op, p, y, alpha, basis, passes):
     """Dispatch one fused left half-step (LinOp closures lack the method)."""
     fn = getattr(op, "lanczos_step", None)
@@ -129,6 +143,7 @@ def gk_bidiag(
     reorth_passes: int = 2,
     dtype=None,
     precision: Optional[str] = None,
+    callback=None,
 ) -> GKResult:
     """In-graph GK bidiagonalization (fixed k iterations, breakdown masking).
 
@@ -226,6 +241,10 @@ def gk_bidiag(
     qn = u / jnp.where(beta > 0, beta, 1.0)
     Qf = _set_col(c.Q, c.kprime, qn, valid)
     betas_f = _set_elt(c.betas, c.kprime - 1, beta, valid)
+    # in-graph diagnostics: the betas buffer IS the per-iteration residual
+    # trace — no extra device work, and under jit the info pytree holds
+    # tracers the caller can return as compiled-program outputs.
+    _notify(callback, c.alphas, betas_f, c.kprime, c.done)
     return GKResult(c.alphas, betas_f, beta1, c.P, Qf,
                     c.kprime, c.done)
 
@@ -241,6 +260,7 @@ def gk_bidiag_host(
     reorth_passes: int = 2,
     dtype=None,
     precision: Optional[str] = None,
+    callback=None,
 ) -> GKResult:
     """Host-loop GK with real early exit (paper wall-time behaviour).
 
@@ -296,6 +316,10 @@ def gk_bidiag_host(
         v, alpha_d = _rstep(op, qn, ps[-1], beta_d, Pm, reorth_passes)
         v = v.astype(dtype)
         beta, alpha = (float(x) for x in jax.device_get((beta_d, alpha_d)))
+        if callback is not None:
+            # the loop just synced these scalars anyway — observing them
+            # costs nothing extra.
+            callback.on_step(len(al), alpha=alpha, beta=beta)
         if beta < thresh:
             breakdown = True
             break
@@ -325,5 +349,7 @@ def gk_bidiag_host(
     kp = len(al)
     alphas = jnp.zeros((k,), dtype).at[:kp].set(jnp.asarray(al, dtype))
     betas = jnp.zeros((k,), dtype).at[:len(be)].set(jnp.asarray(be, dtype))
+    _notify(callback, alphas, betas, jnp.asarray(kp, jnp.int32),
+            jnp.asarray(breakdown))
     return GKResult(alphas, betas, jnp.asarray(beta1, dtype), Pm, Qm,
                     jnp.asarray(kp, jnp.int32), jnp.asarray(breakdown))

@@ -305,6 +305,7 @@ def fsvd_blocked(
     reorth_passes: int = 2,
     dtype=None,
     precision: Optional[str] = None,
+    callback=None,
 ) -> BlockedFSVDResult:
     """Top-r singular triplets by streaming block GK under a memory budget.
 
@@ -335,6 +336,10 @@ def fsvd_blocked(
     part) half-width; every expansion, orthogonalization and Rayleigh-Ritz
     extraction still accumulates in the compute dtype, and the locking
     threshold / MGS drop floor widen to the storage's noise floor.
+    ``callback`` (``repro.api.callbacks.ConvergenceCallback``) gets
+    ``on_step(cycle, residual=..., locked=...)`` per restart cycle — host
+    scalars this loop computes anyway — and a final ``on_info`` whose
+    residual trace is the per-cycle minimum Ritz residual.
     """
     from repro.core.gk import _store_dtype
     A = as_operator(A)
@@ -378,6 +383,7 @@ def fsvd_blocked(
     restarts = 0
     converged = False
     sigma_max = 0.0
+    cycle_res: list[float] = []             # per-cycle min Ritz residual
     Us = S = Vr = None                      # last Rayleigh-Ritz extraction
 
     for restart in range(max_restarts):
@@ -449,6 +455,10 @@ def fsvd_blocked(
             locked_U = jnp.concatenate(
                 [locked_U, Us[:, sel].astype(store)], axis=1)
             locked_s.extend(float(S[i]) for i in lock_idx)
+        cycle_res.append(float(jnp.min(resn)) if S.shape[0] else 0.0)
+        if callback is not None:
+            callback.on_step(restart, residual=cycle_res[-1],
+                             locked=len(locked_s))
         if len(locked_s) >= r:
             converged = True
             break
@@ -496,5 +506,11 @@ def fsvd_blocked(
         U = jnp.concatenate([U, jnp.zeros((m, pad), store)], axis=1)
         V_out = jnp.concatenate([V_out, jnp.zeros((n, pad), store)], axis=1)
         s_arr = jnp.concatenate([s_arr, jnp.zeros((pad,), dtype)])
+    if callback is not None:
+        from repro.api.callbacks import ConvergenceInfo
+        callback.on_info(ConvergenceInfo(
+            jnp.asarray(cycle_res, jnp.float32),
+            jnp.asarray(block_passes, jnp.int32),
+            jnp.asarray(not converged), method="fsvd_blocked"))
     return BlockedFSVDResult(U[:, :r], s_arr[:r], V_out[:, :r],
                              restarts, block_passes, converged)

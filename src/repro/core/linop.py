@@ -75,11 +75,12 @@ def from_dense(A: Array, use_kernels: bool = False):
     """
     import warnings
 
+    from repro.compat import ReproDeprecationWarning
     from repro.core.operators import DenseOp
     warnings.warn(
         "from_dense() is deprecated; construct repro.core.operators.DenseOp"
         "(A, backend='pallas'|'xla') instead (operators are pytrees and "
-        "cross jit/vmap boundaries).", DeprecationWarning, stacklevel=2)
+        "cross jit/vmap boundaries).", ReproDeprecationWarning, stacklevel=2)
     return DenseOp(jnp.asarray(A),
                    backend="pallas" if use_kernels else "xla")
 
@@ -94,11 +95,12 @@ def from_factors(U: Array, s: Array, Vt: Array,
     """
     import warnings
 
+    from repro.compat import ReproDeprecationWarning
     from repro.core.operators import LowRankOp
     warnings.warn(
         "from_factors() is deprecated; construct repro.core.operators."
         "LowRankOp(U, s, Vt, extra=..., scale=...) instead.",
-        DeprecationWarning, stacklevel=2)
+        ReproDeprecationWarning, stacklevel=2)
     return LowRankOp(jnp.asarray(U), jnp.asarray(s), jnp.asarray(Vt),
                      extra=tuple(extra or ()), scale=scale)
 

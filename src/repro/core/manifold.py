@@ -135,19 +135,32 @@ def add(xi: TangentVector, zeta: TangentVector) -> TangentVector:
 
 def retract_fsvd(W: FixedRankPoint, xi: TangentVector, step: float | Array,
                  *, fsvd_iters: int = 20, key: Optional[jax.Array] = None,
-                 reorth_passes: int = 2) -> FixedRankPoint:
+                 reorth_passes: int = 2,
+                 warm_start: bool = True) -> FixedRankPoint:
     """Metric-projection retraction (eq. 24/25): rank-r SVD of W + step*xi
     via F-SVD on the implicit rank-<=3r operator — the paper's Alg 4 line 9.
 
     ``fsvd_iters`` is the paper's inner-iteration knob ("lower iter" 20 vs
     "higher iter" 35, Fig 2).
+
+    ``warm_start=True`` (default) is the *tracking* retraction: the
+    operand ``W + step*xi`` is a drift of W, and W's own singular factors
+    are sitting in the carry — so the GK solve starts from the
+    sigma-weighted blend ``U diag(s)·1`` instead of a fresh random vector.
+    The Krylov space then opens inside the already-converged subspace
+    (the in-graph analogue of ``repro.api.Session`` tracking), the solve
+    is deterministic (no key consumed), and per-step cost drops because
+    ``fsvd_iters`` can sit near r instead of 4r.  ``warm_start=False``
+    restores the cold keyed start (the paper's literal Alg 4).
     """
     from repro.api import SVDSpec, factorize
     r = W.rank
     op = as_linop(W, xi, step)
     k = min(max(fsvd_iters, r + 2), min(op.shape))
+    q1 = (W.U @ W.s) if warm_start else None
     out = factorize(op, SVDSpec(method="fsvd", rank=r, max_iters=k,
-                                reorth_passes=reorth_passes), key=key)
+                                reorth_passes=reorth_passes), key=key,
+                    q1=q1)
     return FixedRankPoint(out.U, out.s, out.V)
 
 

@@ -111,6 +111,11 @@ class RSGDOptions:
     retraction: str = "fsvd"      # fsvd (paper) | qr (closed-form baseline)
     project_at: str = "w"         # w (eq 27) | grad (literal Alg 4 line 7-8)
     reorth_passes: int = 2
+    # tracking retraction: warm-start each step's F-SVD from the current
+    # point's factors (the retraction operand W - eta*Z is a *drift* of W,
+    # exactly the repro.api.Session situation, staged in-graph) instead of
+    # a cold keyed start vector.  False = the paper's literal cold solve.
+    track: bool = True
 
 
 def rsgd_step(W: mf.FixedRankPoint, Xb: Array, Vb: Array, y: Array,
@@ -140,7 +145,8 @@ def rsgd_step(W: mf.FixedRankPoint, Xb: Array, Vb: Array, y: Array,
     else:
         W_new = mf.retract_fsvd(W, xi, -opts.lr,
                                 fsvd_iters=opts.fsvd_iters, key=key,
-                                reorth_passes=opts.reorth_passes)
+                                reorth_passes=opts.reorth_passes,
+                                warm_start=opts.track)
     return W_new, bg.loss
 
 

@@ -31,6 +31,7 @@ def rsvd(
     key: Optional[jax.Array] = None,
     dtype=None,
     precision=None,
+    callback=None,
 ) -> RSVDResult:
     """Top-k triplets via Gaussian range sketching (HMT Algorithms 4.3/5.1).
 
@@ -39,6 +40,9 @@ def rsvd(
     ``power_iters`` = q subspace/power iterations with QR re-orthonormalization.
     ``precision="bf16"`` stores the sketch/range bases half-width between
     passes over A (the QR factorizations and the small SVD stay f32).
+    ``callback`` gets a single ``on_info`` — sketching has no per-iteration
+    residual signal (a residual estimate would cost extra passes over A),
+    so the info carries an empty residual trace and the pass count.
     """
     from repro.core.gk import _store_dtype
     A = as_operator(A)
@@ -61,4 +65,10 @@ def rsvd(
     B = A.rmatmat(Qs).T.astype(dtype)         # (l, n) = Q^T A
     Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)
     U = Q @ Ub
+    if callback is not None:
+        from repro.api.callbacks import ConvergenceInfo
+        callback.on_info(ConvergenceInfo(
+            jnp.zeros((0,), jnp.float32),
+            jnp.asarray(power_iters, jnp.int32),
+            jnp.asarray(False), method="rsvd"))
     return RSVDResult(U[:, :k], s[:k], Vt[:k, :].T)

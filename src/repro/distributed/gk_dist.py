@@ -34,15 +34,22 @@ Array = jax.Array
 
 
 @register_solver("fsvd_sharded")
-def solve_fsvd_sharded(A, spec: SVDSpec, *, key=None, q1=None
-                       ) -> Factorization:
+def solve_fsvd_sharded(A, spec: SVDSpec, *, key=None, q1=None,
+                       callback=None) -> Factorization:
     """Registration shim: F-SVD on a pod-sharded operator.
 
     ``A`` must already be a :class:`ShardedOp` (use :func:`sharded_fsvd`
-    to place a dense matrix on a mesh first).  ``host_loop=True`` is
+    to place a dense matrix on a mesh first; ``method="auto"`` on a
+    sharded operand also resolves here).  ``host_loop=True`` is
     rejected: the host loop synchronizes a gathered scalar pair every
     iteration, which on a sharded operand serializes the mesh behind the
     host round-trip — use the in-graph loop (``host_loop=None``/False).
+
+    The method is plan-stageable (``repro.api.plan``): the compile-cache
+    key includes the operand's pytree treedef, and a ``ShardedOp`` carries
+    its ``Mesh`` (plus logical shape and backend) as static aux data — so
+    plans on different meshes or mesh factorizations never share an
+    executable, while repeat solves on the same placement reuse one.
     """
     if not isinstance(A, ShardedOp):
         raise TypeError(
@@ -56,7 +63,8 @@ def solve_fsvd_sharded(A, spec: SVDSpec, *, key=None, q1=None
             "stalling the whole mesh on one host round-trip per step.  Use "
             "host_loop=None/False (the in-graph fori_loop), or run the "
             "plain 'fsvd' method if you accept the per-step sync.")
-    out = solve_fsvd(A, spec.replace(host_loop=False), key=key, q1=q1)
+    out = solve_fsvd(A, spec.replace(host_loop=False), key=key, q1=q1,
+                     callback=callback)
     return Factorization(out.U, out.s, out.V, out.iterations,
                          out.breakdown, method="fsvd_sharded")
 
@@ -89,9 +97,10 @@ def fsvd_sharded(A: Array, mesh: Mesh, r: int, k: Optional[int] = None,
                  **kw) -> Factorization:
     """Deprecated: use :func:`sharded_fsvd` with an :class:`SVDSpec`."""
     import warnings
+    from repro.compat import ReproDeprecationWarning
     warnings.warn("fsvd_sharded(A, mesh, r, k) is deprecated; use "
                   "sharded_fsvd(A, mesh, SVDSpec(rank=r, max_iters=k)).",
-                  DeprecationWarning, stacklevel=2)
+                  ReproDeprecationWarning, stacklevel=2)
     key = kw.pop("key", None)
     q1 = kw.pop("q1", None)
     spec = SVDSpec(method="fsvd_sharded", rank=r, max_iters=k, **{
@@ -108,9 +117,10 @@ def rank_sharded(A: Array, mesh: Mesh, **kw) -> RankEstimate:
     """Deprecated alias of :func:`sharded_rank` (kwargs pass through in the
     legacy ``repro.core.rank.numerical_rank`` spellings)."""
     import warnings
+    from repro.compat import ReproDeprecationWarning
     warnings.warn("rank_sharded(A, mesh, **kw) is deprecated; use "
                   "sharded_rank(A, mesh, SVDSpec(...)).",
-                  DeprecationWarning, stacklevel=2)
+                  ReproDeprecationWarning, stacklevel=2)
     key = kw.pop("key", None)
     spec = SVDSpec(
         max_iters=kw.pop("max_iters", None),

@@ -12,11 +12,19 @@ Failure modes handled (and unit-tested):
   * elastic restarts     -> reshard-on-restore (checkpoint stores host
                             arrays; restore re-places them under the current
                             mesh, which may differ from the writer's)
+
+A training loop that owns a solver ``repro.api.Session`` (e.g. the RSL
+loop tracking its drifting gradient operator) can hand it to the trainer:
+its tracking state (previous factorization + plan spec) checkpoints
+alongside the model state under ``<ckpt_dir>/session`` and resumes with
+``maybe_resume`` — a restarted job keeps its warm-start seam instead of
+paying a cold solve.
 """
 from __future__ import annotations
 
 import collections
 import math
+import os
 import signal
 import time
 from typing import Any, Callable, Optional
@@ -61,7 +69,8 @@ class Trainer:
                  state: PyTree,
                  state_sharding_fn: Optional[Callable] = None,
                  log_fn: Callable[[str], None] = print,
-                 install_sigterm: bool = True):
+                 install_sigterm: bool = True,
+                 session=None):
         self.cfg = run_cfg
         self.train_step = train_step
         self.batch_fn = batch_fn
@@ -73,6 +82,7 @@ class Trainer:
         self.watchdog = StragglerWatchdog(run_cfg.runtime.straggler_zscore,
                                           run_cfg.runtime.straggler_window)
         self.state_sharding_fn = state_sharding_fn
+        self.session = session       # optional repro.api.Session (tracking)
         self.step = 0
         self.consecutive_nans = 0
         self.history: list[dict] = []
@@ -87,6 +97,17 @@ class Trainer:
         self.log("[trainer] SIGTERM received - draining")
         self._drain = True
 
+    @property
+    def _session_dir(self) -> str:
+        return os.path.join(self.cfg.checkpoint.directory, "session")
+
+    def _save_session(self) -> None:
+        if self.session is not None:
+            # same keep-N retention as the model checkpoints, so a
+            # rolled-back restore still finds a matching session state
+            self.session.save(self._session_dir, self.step,
+                              keep=self.ckpt.keep)
+
     def maybe_resume(self) -> bool:
         restored = self.ckpt.restore_latest(self.state,
                                             self.state_sharding_fn)
@@ -95,6 +116,10 @@ class Trainer:
         step, state, extra = restored
         self.state = state
         self.step = step
+        if self.session is not None and self.session.load_latest(
+                self._session_dir):
+            self.log(f"[trainer] solver session resumed "
+                     f"({self.session.solves} tracked solves)")
         self.log(f"[trainer] resumed from step {step}")
         return True
 
@@ -138,9 +163,11 @@ class Trainer:
                     and self.step % cfg.checkpoint.every_steps == 0):
                 self.ckpt.save(self.step, self.state,
                                extra={"run": cfg.to_dict()})
+                self._save_session()
 
         if self._drain:
             self.log(f"[trainer] drained at step {self.step}; final checkpoint")
         self.ckpt.save(self.step, self.state, extra={"run": cfg.to_dict()})
+        self._save_session()
         self.ckpt.wait()
         return self.history

@@ -83,3 +83,75 @@ def test_extra_metadata_survives(tmp_path, tree):
     save_checkpoint(str(tmp_path), 4, tree, extra={"mesh": [16, 16]})
     _, extra = load_checkpoint(str(tmp_path), 4, tree)
     assert extra["mesh"] == [16, 16]
+
+
+# ---------------------------------------------------------------------------
+# solver-result pytrees (repro.api) through the leaf protocol
+# ---------------------------------------------------------------------------
+
+def _fact(method="fsvd"):
+    from repro.api import SVDSpec, factorize
+    key = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (24, 5)) @ jax.random.normal(k2, (5, 18))
+    return A, factorize(A, SVDSpec(method=method, rank=4, max_iters=16),
+                        key=key)
+
+
+def test_factorization_roundtrip_bit_equal(tmp_path):
+    """A Factorization checkpoints like any state pytree: bit-equal leaves
+    and the static ``method`` aux intact (it rides the template, never the
+    disk)."""
+    from repro.api import Factorization
+    _, fact = _fact()
+    save_checkpoint(str(tmp_path), 1, {"fact": fact})
+    out, _ = load_checkpoint(str(tmp_path), 1, {"fact": fact})
+    back = out["fact"]
+    assert isinstance(back, Factorization) and back.method == fact.method
+    for a, b in zip(jax.tree.leaves(fact), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_rank_estimate_roundtrip_bit_equal(tmp_path):
+    from repro.api import RankEstimate, estimate_rank
+    key = jax.random.PRNGKey(6)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (30, 7)) @ jax.random.normal(k2, (7, 22))
+    est = estimate_rank(A, key=key)
+    save_checkpoint(str(tmp_path), 2, {"rank": est})
+    out, _ = load_checkpoint(str(tmp_path), 2, {"rank": est})
+    back = out["rank"]
+    assert isinstance(back, RankEstimate) and back.method == est.method
+    assert int(back.rank) == int(est.rank) == 7
+    for a, b in zip(jax.tree.leaves(est), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_session_state_roundtrip(tmp_path):
+    """save_session_state/load_session_state: factorization template is
+    rebuilt from the manifest (no geometry supplied) and the plan-spec
+    metadata survives."""
+    from repro.api import SVDSpec, session
+    from repro.checkpoint import load_session_state, save_session_state
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (20, 4)) @ jax.random.normal(k2, (4, 16))
+    sess = session(A, SVDSpec(method="fsvd", rank=3, max_iters=12), key=key)
+    sess.solve()
+    save_session_state(str(tmp_path), 1, sess)
+    fact, meta = load_session_state(str(tmp_path), 1)
+    assert meta["spec"]["rank"] == 3 and meta["spec"]["method"] == "fsvd"
+    assert fact.method == sess.fact.method
+    for a, b in zip(jax.tree.leaves(fact), jax.tree.leaves(sess.fact)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_session_state_before_first_solve(tmp_path):
+    from repro.api import SVDSpec, session
+    from repro.checkpoint import load_session_state, save_session_state
+    A = jnp.eye(8)
+    sess = session(A, SVDSpec(rank=2), key=jax.random.PRNGKey(0))
+    save_session_state(str(tmp_path), 0, sess)
+    fact, meta = load_session_state(str(tmp_path), 0)
+    assert fact is None and meta["step"] == 0

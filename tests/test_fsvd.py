@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from conftest import make_lowrank
-from repro.core import fsvd, rsvd
-from repro.core.fsvd import truncated_svd_errors
-from repro.core.linop import from_dense, from_factors
+from repro.core.fsvd import fsvd, truncated_svd_errors
+from repro.core.operators import DenseOp, LowRankOp
+from repro.core.rsvd import rsvd
 
 
 @pytest.mark.parametrize("host", [False, True])
@@ -54,15 +54,15 @@ def test_fsvd_on_implicit_operator(rng):
     U = jnp.linalg.qr(jax.random.normal(k1, (120, 6)))[0]
     Vt = jnp.linalg.qr(jax.random.normal(k2, (80, 6)))[0].T
     s = jnp.sort(jax.random.uniform(k3, (6,)) + 0.5)[::-1]
-    op = from_factors(U, s, Vt)
+    op = LowRankOp(U, s, Vt)
     out = fsvd(op, 6, 30)
     np.testing.assert_allclose(np.asarray(out.s), np.asarray(s), rtol=1e-4)
 
 
 def test_fsvd_with_pallas_kernels(rng):
     A = make_lowrank(rng, 256, 192, 15)
-    out_k = fsvd(from_dense(A, use_kernels=True), 8, 60, host_loop=True)
-    out_p = fsvd(from_dense(A, use_kernels=False), 8, 60, host_loop=True)
+    out_k = fsvd(DenseOp(A, backend="pallas"), 8, 60, host_loop=True)
+    out_p = fsvd(DenseOp(A, backend="xla"), 8, 60, host_loop=True)
     np.testing.assert_allclose(np.asarray(out_k.s), np.asarray(out_p.s),
                                rtol=1e-4)
 
@@ -80,3 +80,19 @@ def test_fsvd_beats_default_rsvd_in_tail(rng):
     err_r = float(jnp.max(jnp.abs(rs.s - s_true) / s_true))
     assert err_f < 1e-3
     assert err_r > 10 * err_f   # R-SVD default-p visibly worse in the tail
+
+
+def test_legacy_linop_shims_warn_and_work(rng):
+    """The PR-1 shims stay functional but warn with the repo-local
+    deprecation category CI escalates to an error (-W error::...), so
+    in-repo call sites cannot silently regrow."""
+    from repro.compat import ReproDeprecationWarning
+    from repro.core.linop import from_dense, from_factors
+    A = make_lowrank(rng, 40, 30, 5)
+    with pytest.warns(ReproDeprecationWarning):
+        op = from_dense(A)
+    assert isinstance(op, DenseOp)
+    with pytest.warns(ReproDeprecationWarning):
+        lo = from_factors(jnp.ones((6, 2)), jnp.ones((2,)),
+                          jnp.ones((2, 5)))
+    assert isinstance(lo, LowRankOp)

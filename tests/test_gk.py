@@ -7,7 +7,7 @@ import pytest
 
 from conftest import make_lowrank
 from repro.core import gk_bidiag, gk_bidiag_host
-from repro.core.linop import from_dense
+from repro.core.operators import DenseOp
 from repro.core.tridiag import btb_tridiagonal
 
 
@@ -199,7 +199,7 @@ def test_bf16_precision_basis(rng, runner):
 def test_fused_matvec_linop_equivalence(rng):
     """LinOp default fused path == explicit composition."""
     A = jax.random.normal(rng, (50, 40))
-    op = from_dense(A)
+    op = DenseOp(A)
     p = jax.random.normal(jax.random.PRNGKey(1), (40,))
     y = jax.random.normal(jax.random.PRNGKey(2), (50,))
     np.testing.assert_allclose(np.asarray(op.mv_fused(p, y, 0.5)),

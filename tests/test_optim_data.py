@@ -6,7 +6,7 @@ import pytest
 
 from conftest import make_lowrank
 from repro.configs.base import OptimConfig
-from repro.core import rsvd
+from repro.core.rsvd import rsvd
 from repro.data.synthetic import (LMBatchSpec, lm_batch, make_rsl_dataset,
                                   rsl_batch)
 from repro.optim import make_optimizer, make_schedule

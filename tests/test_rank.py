@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from conftest import make_lowrank
-from repro.core import numerical_rank
+from repro.core.rank import numerical_rank
 
 
 @pytest.mark.parametrize("m,n,rank", [(100, 80, 10), (60, 120, 25),

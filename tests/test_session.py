@@ -1,0 +1,191 @@
+"""Session layer: tracked solves on drifting operators.
+
+The acceptance battery: on the parity zoo, ``Session.update`` after a
+small drift must converge in strictly fewer GK iterations than a cold
+``factorize`` of the drifted matrix — at the same accuracy gate the
+cold solve is held to (max |ŝ − s| / σ_max vs dense SVD).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.api import (Session, SVDSpec, clear_plan_cache, factorize,
+                       session, trace_count)
+from repro.core.operators import LowRankOp
+from test_solver_parity import R, ZOO
+
+KEY = jax.random.PRNGKey(11)
+
+SPEC = SVDSpec(method="fsvd", rank=R, max_iters=48)
+STOL = 5e-4          # the parity battery's GK gate (vs sigma_max)
+
+
+def _drifted(A, key, rel=1e-3):
+    G = jax.random.normal(key, A.shape)
+    return A + rel * jnp.linalg.norm(A) * G / jnp.linalg.norm(G)
+
+
+def _accuracy(fact, A) -> float:
+    s_true = jnp.linalg.svd(A, compute_uv=False)[: fact.rank]
+    return float(jnp.max(jnp.abs(fact.s - s_true)) / s_true[0])
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_update_beats_cold_on_zoo(name):
+    """Acceptance: tracked refine converges in fewer GK iterations than a
+    cold solve of the drifted matrix, at the same accuracy gate."""
+    A, _ = ZOO[name]
+    spec = SPEC.replace(max_iters=min(48, min(A.shape)))
+    A2 = _drifted(A, jax.random.fold_in(KEY, 1))
+    cold = factorize(A2, spec, key=jax.random.fold_in(KEY, 2))
+
+    sess = session(A, spec, key=KEY)
+    sess.solve()
+    tracked = sess.update(A2)
+
+    assert sess.history[-1]["kind"] == "refine"
+    assert int(tracked.iterations) < int(cold.iterations)
+    acc_cold = _accuracy(cold, A2)
+    acc_tracked = _accuracy(tracked, A2)
+    assert acc_tracked <= max(STOL, 2.0 * acc_cold), (
+        f"{name}: tracked {acc_tracked:.2e} vs cold {acc_cold:.2e}")
+
+
+def test_refine_vs_restart_decision():
+    A, _ = ZOO["lowrank_noise"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    # tiny drift -> refine
+    sess.update(_drifted(A, jax.random.fold_in(KEY, 3), rel=1e-4))
+    assert sess.history[-1]["kind"] == "refine"
+    assert sess.history[-1]["drift"] < sess.restart_angle
+    # unrelated operator -> subspace angle blows past the threshold
+    B = make_lowrank(jax.random.PRNGKey(99), *A.shape, R)
+    sess.update(B)
+    assert sess.history[-1]["kind"] == "restart"
+    assert sess.history[-1]["drift"] > sess.restart_angle
+    assert sess.counts() == {"cold": 1, "refine": 1, "restart": 1}
+
+
+def test_drift_is_zero_for_unchanged_operator():
+    A, _ = ZOO["graded"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    assert sess.drift() < 1e-4
+    again = sess.solve()                      # re-solve same operand
+    assert sess.history[-1]["kind"] == "refine"
+    assert _accuracy(again, A) <= STOL
+
+
+def test_delta_lowrank_update():
+    A, _ = ZOO["lowrank_noise"]
+    m, n = A.shape
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    u = jax.random.normal(jax.random.fold_in(KEY, 5), (m, 1))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (1, n))
+    scale = 1e-3 * float(jnp.linalg.norm(A)) / float(
+        jnp.linalg.norm(u) * jnp.linalg.norm(v))
+    fact = sess.delta(LowRankOp(u, jnp.asarray([scale]), v))
+    assert sess.history[-1]["kind"] == "refine"
+    A2 = A + scale * (u @ v)
+    assert _accuracy(fact, A2) <= STOL
+
+
+def test_session_residual_history():
+    A, _ = ZOO["tall"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    sess.update(_drifted(A, jax.random.fold_in(KEY, 7)))
+    assert all("residual" in rec for rec in sess.history)
+    assert all(rec["residual"] < 1e-4 for rec in sess.history)
+    quiet = session(A, SPEC, key=KEY, track_residuals=False)
+    quiet.solve()
+    assert "residual" not in quiet.history[-1]
+
+
+def test_session_compiles_twice_for_many_solves():
+    """One cold-budget trace + one refine-budget trace cover an arbitrary
+    stream of same-shaped updates."""
+    A, _ = ZOO["wide"]
+    clear_plan_cache()
+    base = trace_count()
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    for t in range(4):
+        sess.update(_drifted(A, jax.random.fold_in(KEY, 20 + t)))
+    assert trace_count() - base == 2
+    assert sess.counts()["refine"] == 4
+
+
+def test_session_save_restore_roundtrip(tmp_path):
+    A, _ = ZOO["lowrank_noise"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    A2 = _drifted(A, jax.random.fold_in(KEY, 8))
+    sess.update(A2)
+    sess.save(str(tmp_path))
+
+    back = Session.restore(str(tmp_path), A2, key=KEY)
+    assert back.solves == sess.solves
+    assert back.history == sess.history
+    assert back.spec == sess.spec
+    for a, b in zip(jax.tree.leaves(back.fact), jax.tree.leaves(sess.fact)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert back.fact.method == sess.fact.method
+    # the restored session keeps tracking warm
+    back.update(_drifted(A2, jax.random.fold_in(KEY, 9)))
+    assert back.history[-1]["kind"] == "refine"
+
+
+def test_load_latest_into_live_session(tmp_path):
+    A, _ = ZOO["graded"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    sess.save(str(tmp_path))
+    fresh = session(A, SPEC, key=KEY)
+    assert fresh.fact is None
+    assert fresh.load_latest(str(tmp_path))
+    assert fresh.solves == 1 and fresh.fact is not None
+    assert not session(A, SPEC, key=KEY).load_latest(str(tmp_path / "no"))
+
+
+def test_update_with_new_shape_restarts_not_crashes():
+    """A geometry change under the session is maximal drift: route to the
+    cold/restart branch instead of a shape-mismatched drift matmat."""
+    A, _ = ZOO["lowrank_noise"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    B = make_lowrank(jax.random.PRNGKey(5), 40, 24, R)
+    fact = sess.update(B)
+    assert sess.history[-1]["kind"] == "restart"
+    assert fact.shape == (40, 24)
+    assert _accuracy(fact, B) <= STOL
+
+
+def test_refine_uses_session_key_stream_for_sketch(recwarn):
+    """rsvd has no warm-start seam — refines must draw from the session's
+    key stream, not warn and fall back to PRNGKey(0)."""
+    import warnings
+    from repro.api import ImplicitKeyWarning
+    A, _ = ZOO["lowrank_noise"]
+    sess = session(A, SVDSpec(method="rsvd", rank=4, power_iters=2),
+                   key=KEY)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ImplicitKeyWarning)
+        sess.solve()
+        sess.update(_drifted(A, jax.random.fold_in(KEY, 30)))
+
+
+def test_session_save_keep_n(tmp_path):
+    A, _ = ZOO["graded"]
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    import os
+    for s in (1, 2, 3, 4):
+        sess.save(str(tmp_path), s, keep=2)
+    names = sorted(os.listdir(tmp_path))
+    assert "step_3" in names and "step_4" in names
+    assert "step_1" not in names and "step_2" not in names

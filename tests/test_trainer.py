@@ -127,3 +127,36 @@ def test_sigterm_drain(tmp_path):
     assert tr.step == 6                    # drained right after step 5
     from repro.checkpoint import latest_step
     assert latest_step(str(tmp_path)) == 6   # final checkpoint written
+
+
+def test_trainer_checkpoints_and_resumes_solver_session(tmp_path):
+    """A tracking Session handed to the trainer checkpoints alongside the
+    model state and resumes warm: the restarted trainer's session starts
+    from the saved factorization instead of a cold solve."""
+    from repro.api import SVDSpec, session
+
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (24, 4)) @ jax.random.normal(k2, (4, 18))
+    sess = session(A, SVDSpec(method="fsvd", rank=3, max_iters=12), key=key)
+    sess.solve()
+
+    cfg, run, state, step, spec = _setup(tmp_path, every=10)
+    tr = Trainer(run, step, lambda s: lm_batch(spec, 0, s), state,
+                 install_sigterm=False, log_fn=lambda s: None,
+                 session=sess)
+    tr.run(5)       # final checkpoint (+ session state) at step 5
+
+    sess2 = session(A, SVDSpec(method="fsvd", rank=3, max_iters=12),
+                    key=key)
+    state2 = init_state(cfg, run.optim, jax.random.PRNGKey(9))
+    tr2 = Trainer(run, step, lambda s: lm_batch(spec, 0, s), state2,
+                  install_sigterm=False, log_fn=lambda s: None,
+                  session=sess2)
+    assert tr2.maybe_resume()
+    assert sess2.fact is not None and sess2.solves == sess.solves
+    np.testing.assert_array_equal(np.asarray(sess2.fact.s),
+                                  np.asarray(sess.fact.s))
+    # the resumed session refines (warm) rather than re-solving cold
+    sess2.update(A + 1e-3 * jax.random.normal(key, A.shape))
+    assert sess2.history[-1]["kind"] == "refine"
