@@ -132,6 +132,44 @@ def _check_session_section(path: str, sec: dict) -> int:
     return n
 
 
+_SERVE_RAW = ("requests", "rank", "batched_wall_ms", "unbatched_wall_ms",
+              "batched_err", "unbatched_err", "tenant_iters", "cold_iters")
+
+
+def _check_serve_section(path: str, sec: dict) -> int:
+    """Validate a ``serve/v1`` section: raw batched-vs-unbatched traffic
+    fields present; derived ``speedup`` / ``iter_ratio`` and both rps
+    figures re-derivable from the raw walls."""
+    n = 0
+    for r in sec["records"]:
+        missing = [f for f in _SERVE_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: serve record missing {missing}")
+        derived = (
+            ("speedup", r["unbatched_wall_ms"] /
+             max(r["batched_wall_ms"], 1e-9)),
+            ("iter_ratio", r["cold_iters"] / max(r["tenant_iters"], 1e-9)),
+            ("batched_rps", r["requests"] /
+             max(r["batched_wall_ms"] / 1e3, 1e-9)),
+            ("unbatched_rps", r["requests"] /
+             max(r["unbatched_wall_ms"] / 1e3, 1e-9)),
+        )
+        for field, want in derived:
+            have = r.get(field)
+            if have is not None and abs(have - want) > 1e-6 * abs(want):
+                raise SystemExit(
+                    f"{path}: serve mix={r.get('mix')!r} "
+                    f"requests={r['requests']}: stored {field}="
+                    f"{have:.4f} disagrees with raw values ({want:.4f})")
+            r[field] = want
+        print(f"[reanalyze] serve mix={r.get('mix')!r} "
+              f"requests={r['requests']} r={r['rank']}: "
+              f"{r['speedup']:.2f}x throughput, "
+              f"{r['iter_ratio']:.2f}x fewer tenant GK iters")
+        n += 1
+    return n
+
+
 def reanalyze_bench(path: str) -> int:
     """Validate a ``repro-bench/v1`` file and recompute derived fields."""
     bench = json.load(open(path))
@@ -167,6 +205,8 @@ def reanalyze_bench(path: str) -> int:
             n += _check_dist_section(path, sec)
         elif schema == "session/v1":
             n += _check_session_section(path, sec)
+        elif schema == "serve/v1":
+            n += _check_serve_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new
@@ -196,6 +236,11 @@ def _headline(schema, records) -> tuple[str, float]:
         sp = [r["cold_ms"] / max(r["tracked_ms"], 1e-9) for r in records]
         return "mean tracked-session speedup", (sum(sp) / len(sp)
                                                if sp else 0.0)
+    if schema == "serve/v1":
+        sp = [r["unbatched_wall_ms"] / max(r["batched_wall_ms"], 1e-9)
+              for r in records]
+        return "mean batched-serving speedup", (sum(sp) / len(sp)
+                                                if sp else 0.0)
     return "records", float(len(records))
 
 

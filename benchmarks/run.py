@@ -29,19 +29,21 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
                              "kernels", "sparse", "gk_step", "dist",
-                             "session"])
+                             "session", "serve"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
                          "json (default PATH: BENCH_pr3.json; use --only "
                          "dist --emit-json BENCH_pr4.json for the device-"
                          "scaling artifact, --only session --emit-json "
-                         "BENCH_pr5.json for the tracked-session one)")
+                         "BENCH_pr5.json for the tracked-session one, "
+                         "--only serve --emit-json BENCH_pr6.json for the "
+                         "serve-traffic one)")
     args = ap.parse_args()
 
     from benchmarks import (dist_bench, fig1, fig2, gk_step_bench,
-                            kernels_bench, roofline, session_bench,
-                            sparse_bench, table1, table2)
+                            kernels_bench, roofline, serve_bench,
+                            session_bench, sparse_bench, table1, table2)
 
     t0 = time.time()
     sections = []
@@ -77,6 +79,12 @@ def main() -> None:
             sizes=session_bench.QUICK_SIZES if args.quick else None,
             repeats=1 if args.quick else 3,
             steps=4 if args.quick else session_bench.STEPS)))
+    if args.only in (None, "serve"):
+        sections.append(("serve", lambda: serve_bench.run(
+            requests=serve_bench.QUICK_REQUESTS if args.quick
+            else serve_bench.REQUESTS,
+            mixes=serve_bench.QUICK_MIXES if args.quick else None,
+            repeats=1 if args.quick else 3)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(
             mesh="pod16x16")))

@@ -131,18 +131,35 @@ _LOCK = threading.RLock()
 _CACHE: "collections.OrderedDict[tuple, Any]" = collections.OrderedDict()
 _CACHE_SIZE = 128
 _STATS = {"traces": 0, "hits": 0, "misses": 0, "evictions": 0}
+# single-flight: cache key -> Event, present while one thread builds that
+# entry; concurrent requesters wait instead of duplicating the build.
+_BUILDING: dict = {}
 
 
-def clear_plan_cache() -> None:
-    """Drop every memoized executable (tests / memory pressure)."""
+def clear_plan_cache(reset_stats: bool = False) -> None:
+    """Drop every memoized executable (tests / memory pressure).
+
+    ``reset_stats=True`` also zeroes the hit/miss/eviction/trace counters —
+    the serve layer snapshots deltas, but tests (and a server restart)
+    want a clean origin."""
     with _LOCK:
         _CACHE.clear()
+        if reset_stats:
+            for k in _STATS:
+                _STATS[k] = 0
 
 
 def plan_cache_stats() -> dict:
-    """Snapshot of {traces, hits, misses, evictions, entries}."""
+    """Snapshot of {traces, hits, misses, evictions, entries, hit_rate}.
+
+    ``hits``/``misses`` count :func:`_memoized` lookups (one per staged
+    ``solve``/``estimate``/``solve_batched`` call), ``evictions`` counts
+    LRU drops, ``traces`` counts real solver tracings — the serve layer's
+    bucket-hit-rate metric is ground-truthed against these counters."""
     with _LOCK:
-        return {**_STATS, "entries": len(_CACHE)}
+        total = _STATS["hits"] + _STATS["misses"]
+        return {**_STATS, "entries": len(_CACHE),
+                "hit_rate": _STATS["hits"] / total if total else 0.0}
 
 
 def trace_count() -> int:
@@ -190,23 +207,73 @@ def _accepts_callback(fn) -> bool:
         p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
+def _once_then_parallel(fn):
+    """Serialize calls to ``fn`` until the first one completes.
+
+    ``jax.jit`` compiles lazily on the first *call*, and concurrent first
+    calls with the same signature can race into duplicate traces.  The
+    compile-once contract (exactly one trace per cache key) therefore
+    needs the first call fenced; once it returns, the executable exists
+    and subsequent calls run lock-free.
+    """
+    lock = threading.Lock()
+    primed = threading.Event()
+
+    def wrapper(*args, **kwargs):
+        if primed.is_set():
+            return fn(*args, **kwargs)
+        with lock:
+            out = fn(*args, **kwargs)
+            primed.set()
+        return out
+
+    return wrapper
+
+
 def _memoized(cache_key: tuple, build):
-    """LRU lookup; ``build()`` constructs the jitted callable on a miss."""
-    with _LOCK:
-        hit = _CACHE.get(cache_key)
-        if hit is not None:
+    """Single-flight LRU lookup; ``build()`` constructs the jitted callable
+    on a miss.
+
+    Concurrent misses on the same key coalesce: the first thread builds
+    (off-lock — building may itself take locks, e.g. jax internals) while
+    the rest wait on a per-key event, so N threads hammering the same
+    (spec, aval) key stage exactly one executable and trace exactly once.
+    Waiters count as hits — they end up sharing the built executable.
+    """
+    while True:
+        with _LOCK:
+            hit = _CACHE.get(cache_key)
+            if hit is not None:
+                _CACHE.move_to_end(cache_key)
+                _STATS["hits"] += 1
+                return hit
+            event = _BUILDING.get(cache_key)
+            if event is None:
+                event = threading.Event()
+                _BUILDING[cache_key] = event
+                _STATS["misses"] += 1
+                builder = True
+            else:
+                builder = False
+        if not builder:
+            event.wait()
+            continue        # built (or failed — then we take over the build)
+        try:
+            fn = _once_then_parallel(build())
+        except BaseException:
+            with _LOCK:
+                _BUILDING.pop(cache_key, None)
+            event.set()     # wake waiters; one of them retries the build
+            raise
+        with _LOCK:
+            _CACHE[cache_key] = fn
             _CACHE.move_to_end(cache_key)
-            _STATS["hits"] += 1
-            return hit
-        _STATS["misses"] += 1
-    fn = build()
-    with _LOCK:
-        _CACHE[cache_key] = fn
-        _CACHE.move_to_end(cache_key)
-        while len(_CACHE) > _CACHE_SIZE:
-            _CACHE.popitem(last=False)
-            _STATS["evictions"] += 1
-    return fn
+            while len(_CACHE) > _CACHE_SIZE:
+                _CACHE.popitem(last=False)
+                _STATS["evictions"] += 1
+            _BUILDING.pop(cache_key, None)
+        event.set()
+        return fn
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +394,70 @@ class SolverPlan:
             fact = solver(op, self.spec, key=key, q1=q1)
         info = rec.info if rec.info is not None else empty_info(self.method)
         return (fact, info) if with_info else fact
+
+    def solve_batched(self, ops: Any, *, keys: Optional[Array] = None,
+                      q1s: Optional[Array] = None, with_info: bool = False):
+        """Run the planned factorization over a *stacked* operand — one
+        operator pytree whose array leaves carry a leading batch axis
+        (e.g. ``DenseOp(A)`` with ``A`` of shape ``(B, m, n)``).
+
+        This is the serve layer's dispatch seam: the solver is staged
+        ONCE per (spec, stacked signature) as ``jit(vmap(run))`` and
+        memoized in the same process-wide cache as single solves, so a
+        continuous-batching queue pays one trace per (bucket, batch-size)
+        and the batched matvecs execute as batched GEMMs.  ``keys`` is a
+        stacked key array (one per example; required unless every example
+        is warm-started), ``q1s`` an optional stacked warm-start buffer.
+        Returns a batched ``Factorization`` (leaves gain the batch axis),
+        plus a batched ``ConvergenceInfo`` when ``with_info=True``.
+
+        Unlike ``solve`` there is no eager fallback: batching exists to
+        amortize staging, so a plan that cannot stage (host-loop method,
+        non-pytree operand) is a caller error.
+        """
+        if not self.staged:
+            raise ValueError(
+                f"solve_batched requires a stageable plan; method="
+                f"{self.method!r} host_loop={self.spec.host_loop!r} runs "
+                "a host-side loop")
+        op = as_operator(ops, backend=self.spec.backend)
+        okey = _operand_signature(op)
+        if okey is None:
+            raise ValueError(
+                "solve_batched requires a pytree operand with array "
+                f"leaves; got {type(ops).__name__}")
+        if keys is None and (q1s is None or self.method in _NEEDS_KEY):
+            raise ValueError(
+                "solve_batched needs stacked `keys` (one per example) "
+                "unless every example is warm-started via `q1s`")
+        cache_key = ("solve_batched", self.spec, self.method, okey,
+                     keys is None, q1s is None)
+        fn = _memoized(cache_key,
+                       lambda: self._build_batched(keys is None,
+                                                   q1s is None))
+        fact, info = fn(op, keys, q1s)
+        return (fact, info) if with_info else fact
+
+    def _build_batched(self, no_keys: bool, no_q1: bool):
+        solver = get_solver(self.method)
+        spec = self.spec
+        method = self.method
+        takes_cb = _accepts_callback(solver)
+
+        # same scalars-only closure rule as _build_solve: the staged
+        # callable outlives the plan in the process-wide cache.
+        def run(op, key, q1):
+            _bump_traces()
+            cb = CaptureCallback()
+            if takes_cb:
+                fact = solver(op, spec, key=key, q1=q1, callback=cb)
+            else:
+                fact = solver(op, spec, key=key, q1=q1)
+            info = cb.info if cb.info is not None else empty_info(method)
+            return fact, info
+
+        in_axes = (0, None if no_keys else 0, None if no_q1 else 0)
+        return jax.jit(jax.vmap(run, in_axes=in_axes))
 
     def estimate(self, A: Any = None, *, key: Optional[Array] = None,
                  sigma_tol: Optional[float] = None) -> RankEstimate:

@@ -1,0 +1,83 @@
+"""Zero-padding to canonical shapes — the one helper behind every layer
+that needs operands on a coarser shape grid.
+
+Two consumers share the same arithmetic:
+
+  * ``repro.distributed.partition`` pads a dense operand up to the mesh
+    tiling so every shard is full (``padded_operand_shape``);
+  * ``repro.serve.bucket`` pads request operands up to a shape *bucket* so
+    a heavy-traffic shape mix collapses onto a bounded set of canonical
+    avals (bounded executable count, stackable request buffers).
+
+Zero rows/columns are *mathematically* inert for every matvec / CGS
+reduction the solvers issue — they contribute nothing to any dot — but
+they are **not bitwise inert**: XLA picks a different reduction
+association (and possibly a different dot emitter) for the padded width,
+so ``A_pad @ p_pad`` generally differs from ``A @ p`` in the last ulp.
+Layers that promise bit-identical results therefore must not feed padded
+buffers to the solver; they slice the logical operand back out first
+(:func:`unpad` — exact, it only moves bytes) and solve at the logical
+shape.  ``repro.serve.bucket`` documents both modes.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def pad_dim(size: int, multiple: int) -> int:
+    """Smallest ``s >= size`` with ``s % multiple == 0`` (multiple >= 1)."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    return size + (-size) % multiple
+
+
+def padded_shape(shape: Sequence[int],
+                 multiples: Sequence[int]) -> Tuple[int, ...]:
+    """Per-dim :func:`pad_dim`: smallest shape >= ``shape`` whose dims are
+    multiples of ``multiples`` (the mesh tiling or the bucket granularity)."""
+    if len(shape) != len(multiples):
+        raise ValueError(
+            f"shape {tuple(shape)} and multiples {tuple(multiples)} must "
+            "have equal length")
+    return tuple(pad_dim(s, t) for s, t in zip(shape, multiples))
+
+
+def pad_to(A, shape: Sequence[int]):
+    """Zero-embed ``A`` in the top-left corner of ``shape``.
+
+    A no-op (same array, no copy) when the shape already matches.  Numpy
+    inputs stay numpy (``np.pad`` — no XLA compile per shape signature,
+    which matters on the serve intake path); jax arrays go through
+    ``jnp.pad`` so the distributed call sites stay traceable."""
+    shape = tuple(shape)
+    if tuple(A.shape) == shape:
+        return A
+    widths = []
+    for have, want in zip(A.shape, shape):
+        if want < have:
+            raise ValueError(
+                f"cannot pad {tuple(A.shape)} down to {shape}")
+        widths.append((0, want - have))
+    if isinstance(A, np.ndarray):
+        return np.pad(A, widths)
+    return jnp.pad(A, widths)
+
+
+def unpad(A: Array, shape: Sequence[int]) -> Array:
+    """Slice the logical top-left ``shape`` block back out of a padded
+    buffer.  Exact — slicing moves bytes, it never rounds; this is the
+    step that restores bit-identical solves after padded transport."""
+    shape = tuple(shape)
+    if tuple(A.shape) == shape:
+        return A
+    index = tuple(slice(0, s) for s in shape)
+    return A[index]
+
+
+__all__ = ["pad_dim", "padded_shape", "pad_to", "unpad"]

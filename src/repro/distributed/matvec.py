@@ -474,8 +474,9 @@ def _sparse_shards(sp: SparseOp, mesh: Mesh) -> tuple[SparseShards, tuple]:
             "sparse ShardedOp supports row-sharded meshes only (no "
             "'model' axis); got mesh axes "
             f"{tuple(mesh.axis_names)}")
+    from repro.core.padding import pad_dim
     m, n = sp.spshape
-    m_pad = m + (-m) % rows_n
+    m_pad = pad_dim(m, rows_n)
     m_loc = m_pad // rows_n
     data = np.asarray(sp.data)
     idx = np.asarray(sp.indices)
@@ -540,10 +541,9 @@ def sharded_operator(x, mesh: Mesh, backend: Optional[str] = None):
             f"sharded_operator cannot lay out {type(x).__name__}; supported "
             "operands: dense arrays / DenseOp, SparseOp (row-sharded), "
             "GramOp / TransposedOp wrappers, ShardedOp")
+    from repro.core.padding import pad_to
     A = jnp.asarray(x) if not isinstance(x, jax.Array) else x
     lshape = tuple(A.shape)
-    mp, np_ = padded_operand_shape(lshape, mesh)
-    if tuple(A.shape) != (mp, np_):
-        A = jnp.pad(A, ((0, mp - A.shape[0]), (0, np_ - A.shape[1])))
+    A = pad_to(A, padded_operand_shape(lshape, mesh))
     return ShardedOp(place_operator(A, mesh), mesh, lshape=lshape,
                      backend=backend or "xla")

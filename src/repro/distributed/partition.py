@@ -35,6 +35,8 @@ from typing import Any, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.padding import padded_shape as _padded_shape
+
 PyTree = Any
 
 # logical axis -> preferred mesh axis (None = replicate)
@@ -138,10 +140,11 @@ def padded_operand_shape(shape: Tuple[int, int], mesh: Mesh
     """Smallest shape >= ``shape`` whose rows/cols tile the mesh layout.
 
     Zero-padding to this shape is exact for every matvec/CGS reduction the
-    solvers issue (zero rows and columns contribute nothing to any dot)."""
-    m, n = shape
+    solvers issue (zero rows and columns contribute nothing to any dot).
+    The arithmetic is the shared :mod:`repro.core.padding` helper — the
+    serve layer's shape buckets use the same one."""
     r, c = operator_counts(mesh)
-    return (m + (-m) % r, n + (-n) % c)
+    return _padded_shape(shape, (r, c))
 
 
 def place_operator(A: jax.Array, mesh: Mesh) -> jax.Array:

@@ -1,0 +1,147 @@
+"""Solve-server CLI: synthetic traffic through ``repro.serve``.
+
+    PYTHONPATH=src python -m repro.launch.solve_serve --requests 200 \
+        --rank 8 --tenants 4 --max-batch 8 --window-ms 4
+
+Drives a Zipf-distributed shape mix (``repro.serve.traffic``) into a
+:class:`~repro.serve.server.SolveServer` from a pool of client threads and
+prints the server's stats endpoint as JSON — requests/sec, p50/p99
+latency, bucket hit rate, batch histogram, tenant-session counters and the
+process-wide plan-cache counters.  ``--stats-every N`` streams interim
+snapshots (one JSON line each) while traffic runs, which is the
+"endpoint": poll it instead of scraping logs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import jax
+
+from repro.api.spec import SVDSpec
+from repro.serve import QueueFull, SolveServer
+from repro.serve.traffic import DEFAULT_SHAPES, synthetic_stream
+
+
+def run_traffic(server: SolveServer, requests, *, clients: int = 4,
+                timeout: float = 120.0) -> dict:
+    """Replay ``requests`` through ``server`` from ``clients`` threads.
+
+    Returns {"ok": n, "rejected": n, "failed": n, "wall_s": t}.  Rejected
+    submissions (backpressure) retry once after a short backoff, then
+    count as rejected — the server's contract is reject-don't-OOM and the
+    driver honors it.
+    """
+    requests = list(requests)
+    counts = {"ok": 0, "rejected": 0, "failed": 0}
+    lock = threading.Lock()
+    it = iter(requests)
+
+    def worker():
+        while True:
+            with lock:
+                req = next(it, None)
+            if req is None:
+                return
+            for attempt in (0, 1):
+                try:
+                    server.solve(req.A, kind=req.kind if req.tenant is None
+                                 else "factorize", tenant=req.tenant,
+                                 timeout=timeout)
+                    with lock:
+                        counts["ok"] += 1
+                    break
+                except QueueFull:
+                    if attempt == 0:
+                        time.sleep(0.05)
+                        continue
+                    with lock:
+                        counts["rejected"] += 1
+                except Exception:           # noqa: BLE001 — keep draining
+                    with lock:
+                        counts["failed"] += 1
+                    break
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    counts["wall_s"] = time.perf_counter() - t0
+    return counts
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent client threads")
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--method", default="fsvd")
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--tenant-fraction", type=float, default=0.25)
+    ap.add_argument("--estimate-fraction", type=float, default=0.0)
+    ap.add_argument("--quantum", type=int, default=32)
+    ap.add_argument("--mode", choices=("exact", "shared"), default="exact")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--window-ms", type=float, default=4.0)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="evicted tenant sessions checkpoint here")
+    ap.add_argument("--stats-every", type=float, default=0.0,
+                    help="stream interim stats JSON every N seconds")
+    ap.add_argument("--stats-json", default=None,
+                    help="write the final stats snapshot to this file")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip deploy-time staging of the traffic shape "
+                         "menu (first-of-a-signature batches then compile "
+                         "inside the serving path)")
+    args = ap.parse_args(argv)
+
+    spec = SVDSpec(method=args.method, rank=args.rank)
+    server = SolveServer(spec, quantum=args.quantum, mode=args.mode,
+                         max_batch=args.max_batch,
+                         window_ms=args.window_ms,
+                         max_queue=args.max_queue,
+                         checkpoint_dir=args.checkpoint_dir,
+                         key=jax.random.key(args.seed))
+    stream = synthetic_stream(
+        args.requests, zipf_a=args.zipf_a, rank=args.rank,
+        tenants=args.tenants, tenant_fraction=args.tenant_fraction,
+        estimate_fraction=args.estimate_fraction, seed=args.seed)
+    if not args.no_warmup:
+        t0 = time.perf_counter()
+        staged = server.warmup(DEFAULT_SHAPES,
+                               estimates=args.estimate_fraction > 0)
+        print(json.dumps({"warmup": {
+            "signatures": staged,
+            "wall_s": time.perf_counter() - t0}}), flush=True)
+
+    stop_poll = threading.Event()
+    if args.stats_every > 0:
+        def poll():
+            while not stop_poll.wait(args.stats_every):
+                print(json.dumps({"interim": server.stats()}), flush=True)
+        threading.Thread(target=poll, daemon=True).start()
+
+    with server:
+        counts = run_traffic(server, stream, clients=args.clients)
+        stop_poll.set()
+        stats = server.stats()
+
+    out = {"driver": counts, "server": stats}
+    print(json.dumps(out, indent=2, sort_keys=True))
+    if args.stats_json:
+        with open(args.stats_json, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,9 @@
-"""Spectral training-health telemetry: the paper's Algorithm 3 applied to
-gradients.
+"""Training- and serving-health telemetry.
+
+Two signals live here: the paper's Algorithm 3 applied to gradients
+(spectral training health, below), and :class:`LatencyStats` — the
+thread-safe latency reservoir behind the solve server's stats endpoint
+(``repro.serve.server``).
 
 The numerical rank (and top-Ritz spectrum) of per-layer gradients is a
 cheap-to-compute training-health signal: a collapsing gradient rank flags
@@ -11,10 +15,13 @@ k ~ 16 — negligible next to the step itself; run every
 """
 from __future__ import annotations
 
+import collections
+import threading
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FsvdConfig
 from repro.core.gk import gk_bidiag
@@ -23,6 +30,57 @@ from repro.core.tridiag import btb_eigh
 
 Array = jax.Array
 PyTree = Any
+
+
+class LatencyStats:
+    """Thread-safe latency accumulator with bounded memory.
+
+    Percentiles come from a sliding window of the most recent ``window``
+    samples (a long-running server must not grow without bound); count,
+    mean and max are exact over the full lifetime.  All methods take one
+    short lock — safe to call from submit threads and the dispatch worker
+    concurrently.
+    """
+
+    def __init__(self, window: int = 8192):
+        self._buf: "collections.deque[float]" = collections.deque(
+            maxlen=int(window))
+        self._lock = threading.Lock()
+        self._count = 0
+        self._total = 0.0
+        self._max = 0.0
+
+    def record(self, ms: float) -> None:
+        ms = float(ms)
+        with self._lock:
+            self._buf.append(ms)
+            self._count += 1
+            self._total += ms
+            self._max = max(self._max, ms)
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    def percentile(self, p: float) -> float:
+        with self._lock:
+            if not self._buf:
+                return 0.0
+            return float(np.percentile(np.asarray(self._buf), p))
+
+    def summary(self) -> dict:
+        """{count, mean_ms, p50_ms, p99_ms, max_ms} snapshot."""
+        with self._lock:
+            if self._count == 0:
+                return {"count": 0, "mean_ms": 0.0, "p50_ms": 0.0,
+                        "p99_ms": 0.0, "max_ms": 0.0}
+            data = np.asarray(self._buf)
+            return {"count": self._count,
+                    "mean_ms": self._total / self._count,
+                    "p50_ms": float(np.percentile(data, 50)),
+                    "p99_ms": float(np.percentile(data, 99)),
+                    "max_ms": self._max}
 
 
 def grad_spectrum(g: Array, k: int = 16, eps: float = 1e-6) -> dict:

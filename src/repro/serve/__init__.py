@@ -1,0 +1,37 @@
+"""Factorization-as-a-service: the multi-tenant solve server.
+
+The paper's target workloads issue *streams* of partial SVDs; PR 5's
+Plan/Session layer made one stream compile-once, this package serves many
+concurrent clients through the same process-wide plan cache:
+
+    bucket.py   shape-bucketing + zero-padded transport to canonical avals
+    batcher.py  continuous batching (thread + queue.Queue, no asyncio)
+    tenant.py   per-tenant Session state (LRU-evicted, checkpointable)
+    traffic.py  synthetic Zipf traffic shared by the CLI and the bench
+    server.py   the front end wiring intake -> bucket -> batch -> plan
+
+Quickstart::
+
+    from repro.serve import SolveServer
+    with SolveServer(SVDSpec(rank=8), key=jax.random.key(0)) as srv:
+        fact = srv.solve(A).value            # sync, batched under the hood
+        t = srv.submit(A2)                    # async: a Ticket
+        print(t.result(timeout=5.0).value.s)
+        print(srv.stats())
+
+or from a shell: ``python -m repro.launch.solve_serve --requests 200``.
+"""
+from repro.serve.batcher import (Cancelled, ContinuousBatcher, QueueFull,
+                                 Ticket)
+from repro.serve.bucket import (Bucketed, bucket_shape, embed, stack_buckets,
+                                unpad_factors)
+from repro.serve.server import ServeResult, SolveServer
+from repro.serve.tenant import TenantRegistry
+from repro.serve.traffic import Request, synthetic_stream
+
+__all__ = [
+    "Bucketed", "bucket_shape", "embed", "stack_buckets", "unpad_factors",
+    "Cancelled", "ContinuousBatcher", "QueueFull", "Ticket",
+    "TenantRegistry", "ServeResult", "SolveServer",
+    "Request", "synthetic_stream",
+]

@@ -1,0 +1,237 @@
+"""Continuous batching: coalesce same-group requests within a deadline
+window, dispatch them as one batch.
+
+Plain threads + ``queue.Queue`` — no asyncio runtime dependency, so the
+batcher embeds in any host (a test, the CLI, a larger service) without an
+event loop.  One worker thread owns all dispatch; per-group pending lists
+flush when they reach ``max_batch`` or when their oldest request has aged
+past the ``window_ms`` deadline, whichever comes first.  The intake queue
+is *bounded*: past ``max_queue`` undispatched requests, ``submit`` raises
+:class:`QueueFull` — the server rejects rather than OOMs under overload
+(the caller retries with backoff; silently buffering unbounded operands is
+how a solve server dies).
+
+Per-request lifecycle is a :class:`Ticket`: the client blocks on
+``result(timeout=...)``, may ``cancel()`` at any point (a cancelled ticket
+is dropped at flush time, before any solver work), and reads its measured
+``latency_ms`` afterwards.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Hashable, List, Optional
+
+_SENTINEL = object()
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the intake queue is at capacity; retry later."""
+
+
+class Cancelled(RuntimeError):
+    """The request was cancelled (by the client or at shutdown)."""
+
+
+class Ticket:
+    """One in-flight request: a result slot + completion event.
+
+    Created by :meth:`ContinuousBatcher.submit`; resolved (or failed) by
+    the dispatch function on the worker thread.
+    """
+
+    __slots__ = ("group", "payload", "submitted_at", "dispatched_at",
+                 "latency_ms", "_done", "_result", "_error", "_cancelled")
+
+    def __init__(self, group: Hashable, payload: Any):
+        self.group = group
+        self.payload = payload
+        self.submitted_at = time.perf_counter()
+        self.dispatched_at: Optional[float] = None
+        self.latency_ms: Optional[float] = None
+        self._done = threading.Event()
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+        self._cancelled = False
+
+    # --- client side ---------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Cancel if not already completed; True when the cancel won.
+
+        A cancelled ticket never reaches the solver (the worker drops it
+        at flush time); any thread blocked in :meth:`result` gets
+        :class:`Cancelled`.
+        """
+        if self._done.is_set():
+            return False
+        self._cancelled = True
+        self._fail(Cancelled("request cancelled"))
+        return True
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until resolved; raises the dispatch error, ``Cancelled``,
+        or ``TimeoutError`` after ``timeout`` seconds."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request not served within {timeout}s (group="
+                f"{self.group!r}); cancel() to drop it")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    # --- worker side ---------------------------------------------------
+    def _resolve(self, result: Any) -> None:
+        if self._done.is_set():
+            return
+        self.latency_ms = (time.perf_counter() - self.submitted_at) * 1e3
+        self._result = result
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        if self._done.is_set():
+            return
+        self.latency_ms = (time.perf_counter() - self.submitted_at) * 1e3
+        self._error = exc
+        self._done.set()
+
+
+DispatchFn = Callable[[Hashable, List[Ticket]], None]
+
+
+class ContinuousBatcher:
+    """Deadline-window request coalescer with one dispatch worker thread.
+
+    ``dispatch(group, tickets)`` receives only live (non-cancelled)
+    tickets and must resolve every one (``Ticket._resolve``/``_fail``);
+    an exception escaping dispatch fails the whole batch, and any ticket
+    a dispatch forgets is failed defensively — a client can never hang on
+    a flushed batch.
+
+    Parameters
+    ----------
+    dispatch    the batch executor (runs on the worker thread).
+    max_batch   flush a group at this many pending requests.
+    window_ms   flush a group when its oldest request is this old.
+    max_queue   bound on undispatched requests across all groups; beyond
+                it ``submit`` raises :class:`QueueFull`.
+    """
+
+    def __init__(self, dispatch: DispatchFn, *, max_batch: int = 8,
+                 window_ms: float = 4.0, max_queue: int = 256,
+                 name: str = "solve-batcher"):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._dispatch = dispatch
+        self.max_batch = int(max_batch)
+        self.window = float(window_ms) / 1e3
+        self.max_queue = int(max_queue)
+        self._intake: "queue.Queue" = queue.Queue()
+        self._pending_n = 0
+        self._lock = threading.Lock()
+        self._stopping = threading.Event()
+        self._stopped = threading.Event()
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # --- client side ---------------------------------------------------
+    def submit(self, group: Hashable, payload: Any) -> Ticket:
+        if self._stopping.is_set():
+            raise RuntimeError("batcher is stopped")
+        with self._lock:
+            if self._pending_n >= self.max_queue:
+                raise QueueFull(
+                    f"{self._pending_n} requests already queued "
+                    f"(max_queue={self.max_queue}); retry with backoff")
+            self._pending_n += 1
+        ticket = Ticket(group, payload)
+        self._intake.put(ticket)
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending_n
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Drain: flush everything already queued, then stop the worker."""
+        self._stopping.set()
+        self._intake.put(_SENTINEL)
+        self._stopped.wait(timeout)
+
+    # --- worker side ---------------------------------------------------
+    def _run(self) -> None:
+        pending: "collections.OrderedDict[Hashable, List[Ticket]]" = \
+            collections.OrderedDict()
+        oldest: Dict[Hashable, float] = {}
+        try:
+            while True:
+                timeout: Optional[float] = None
+                if pending:
+                    now = time.perf_counter()
+                    nearest = min(oldest.values())
+                    timeout = max(0.0, nearest + self.window - now)
+                try:
+                    item = self._intake.get(timeout=timeout)
+                except queue.Empty:
+                    item = None
+                if item is not None and item is not _SENTINEL:
+                    grp = pending.setdefault(item.group, [])
+                    grp.append(item)
+                    # window measured from when the group started pending,
+                    # NOT from submit time: requests that queued up behind
+                    # a long dispatch still get a chance to coalesce.
+                    oldest.setdefault(item.group, time.perf_counter())
+                    if len(grp) >= self.max_batch:
+                        self._flush(pending, oldest, item.group)
+                # deadline-expired groups (and everything, at shutdown)
+                now = time.perf_counter()
+                for g in [g for g, t0 in list(oldest.items())
+                          if self._stopping.is_set()
+                          or now - t0 >= self.window]:
+                    self._flush(pending, oldest, g)
+                if (self._stopping.is_set() and not pending
+                        and self._intake.empty()):
+                    return
+        finally:
+            # fail anything still live so no client hangs forever
+            for batch in pending.values():
+                for t in batch:
+                    t._fail(Cancelled("batcher stopped"))
+            self._stopped.set()
+
+    def _flush(self, pending, oldest, group: Hashable) -> None:
+        batch = pending.pop(group, [])
+        oldest.pop(group, None)
+        if not batch:
+            return
+        with self._lock:
+            self._pending_n -= len(batch)
+        live = [t for t in batch if not t.cancelled]
+        if not live:
+            return
+        now = time.perf_counter()
+        for t in live:
+            t.dispatched_at = now
+        try:
+            self._dispatch(group, live)
+        except BaseException as exc:   # noqa: BLE001 — fail the batch, keep serving
+            for t in live:
+                t._fail(exc)
+        for t in live:                 # dispatch forgot one: fail defensively
+            if not t.done:
+                t._fail(RuntimeError(
+                    f"dispatch left ticket unresolved (group={group!r})"))
+
+
+__all__ = ["Cancelled", "ContinuousBatcher", "QueueFull", "Ticket"]

@@ -1,0 +1,418 @@
+"""The solve server: intake -> bucket -> continuous batch -> plan cache.
+
+One :class:`SolveServer` owns a solve configuration (an ``SVDSpec``) and
+serves three request kinds through a single dispatch worker:
+
+* anonymous ``factorize`` — bucketed, coalesced by the continuous batcher
+  and dispatched through ``SolverPlan.solve_batched`` (one ``jit(vmap)``
+  executable per (group, padded-batch-size) signature, shared process-wide
+  via the plan LRU).  Batch sizes are padded up to powers of two by
+  repeating the last request, so the executable count per group is
+  ``O(log max_batch)``, not ``O(max_batch)``.
+* ``estimate`` — Algorithm-3 rank estimates, staged per logical shape with
+  the in-graph loop (``host_loop=False``) so repeat shapes reuse one
+  executable.
+* tenant ``factorize`` — routed to the tenant's
+  :class:`~repro.api.session.Session`; repeat requests run the tracked
+  refine path (strictly fewer GK iterations than cold).
+
+Accuracy contract: in ``mode="exact"`` (default) every solver input is
+the caller's logical operand, bit-for-bit — padding is transport-only.
+``mode="shared"`` solves at bucket shape for maximal executable sharing,
+with the documented roundoff-level σ perturbation (see ``serve.bucket``).
+Rank estimates always run exact.
+
+The stats endpoint (:meth:`SolveServer.stats`) reports requests/sec,
+p50/p99 latency (``runtime.telemetry.LatencyStats``), the bucket hit rate
+(fraction of requests landing on an already-staged (group, batch)
+signature — ground-truthed against ``plan_cache_stats`` in the tests),
+batch-size histogram, tenant-session counters and the plan-cache counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, Hashable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import SolverPlan, plan as _make_plan, plan_cache_stats
+from repro.api.spec import SVDSpec
+from repro.core.operators import DenseOp
+from repro.runtime.telemetry import LatencyStats
+from repro.serve.batcher import ContinuousBatcher, QueueFull, Ticket
+from repro.serve.bucket import (DEFAULT_QUANTUM, Bucketed, embed,
+                                stack_buckets, unpad_factors)
+from repro.serve.tenant import TenantRegistry
+
+Array = jax.Array
+
+_KINDS = ("factorize", "estimate")
+_MODES = ("exact", "shared")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What a resolved ticket carries.
+
+    ``value`` is a ``Factorization`` (factorize/tenant) or a
+    ``RankEstimate`` (estimate); ``info`` the per-request
+    ``ConvergenceInfo`` when the path captures one; ``batch`` the size of
+    the coalesced batch this request rode in; ``meta`` path-specific
+    extras (tenant solves report the Session's kind + iteration count).
+    """
+
+    kind: str
+    value: Any
+    batch: int = 1
+    info: Any = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _pow2_pad(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+# Process-wide (NOT per-server): each server instance jitting its own
+# closure would recompile this per (server, batch size) — ~100ms a pop on
+# every fresh server's first batches.  Shared, it stages once per
+# (key aval, batch size) for the life of the process.
+_FOLD_KEYS = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
+
+
+class SolveServer:
+    """Multi-tenant factorization service over one ``SVDSpec``.
+
+    Parameters
+    ----------
+    spec            solve configuration (``**overrides`` merge like
+                    ``plan(...)``).
+    quantum         bucket granularity (dims round up to multiples).
+    mode            "exact" (bit-identical inputs, default) | "shared"
+                    (solve at bucket shape, maximal executable sharing).
+    max_batch       continuous-batching flush size.
+    window_ms       continuous-batching deadline window.
+    max_queue       backpressure bound; beyond it ``submit`` raises
+                    :class:`~repro.serve.batcher.QueueFull`.
+    max_tenants     resident tenant-session LRU capacity.
+    checkpoint_dir  evicted tenant sessions checkpoint here (optional).
+    key             base PRNG key; per-request keys are folded in.
+    """
+
+    def __init__(self, spec: Optional[SVDSpec] = None, *,
+                 quantum: int = DEFAULT_QUANTUM,
+                 mode: str = "exact",
+                 max_batch: int = 8,
+                 window_ms: float = 4.0,
+                 max_queue: int = 256,
+                 max_tenants: int = 32,
+                 checkpoint_dir: Optional[str] = None,
+                 key: Optional[Array] = None,
+                 **overrides):
+        if mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+        spec = spec or SVDSpec()
+        if overrides:
+            spec = spec.replace(**overrides)
+        self.spec = spec
+        self.quantum = int(quantum)
+        self.mode = mode
+        self.plan: SolverPlan = _make_plan(spec)
+        # estimates stage per shape with the in-graph loop: a server must
+        # not stall its dispatch thread on per-iteration host round-trips.
+        self._est_plan: SolverPlan = _make_plan(spec.replace(host_loop=False))
+        self.tenants = TenantRegistry(
+            spec, max_tenants=max_tenants, checkpoint_dir=checkpoint_dir,
+            key=key)
+        self._base_key = key if key is not None else jax.random.key(0)
+        self._seq = 0
+        self._lock = threading.Lock()
+        self._counters = {"submitted": 0, "completed": 0, "rejected": 0,
+                          "cancelled": 0, "timeouts": 0, "errors": 0,
+                          "batches": 0, "tenant_requests": 0,
+                          "bucket_hits": 0, "bucket_misses": 0}
+        self._batch_hist: Dict[int, int] = {}
+        self._seen_signatures: set = set()
+        self.latency = LatencyStats()
+        self._t0 = time.perf_counter()
+        self._closed = False
+        self.batcher = ContinuousBatcher(
+            self._dispatch, max_batch=max_batch, window_ms=window_ms,
+            max_queue=max_queue)
+
+    # --- intake ---------------------------------------------------------
+    def _next_seq(self) -> int:
+        """Per-request key *sequence number* — the key itself materializes
+        at dispatch (one vmapped fold_in per batch), keeping the submit
+        path free of jax ops."""
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        return seq
+
+    def _request_key(self, seq: int) -> Array:
+        return jax.random.fold_in(self._base_key, seq)
+
+    def _group(self, kind: str, tenant: Optional[str],
+               b: Bucketed) -> Hashable:
+        if tenant is not None:
+            return ("tenant", str(tenant))
+        dtype = str(b.data.dtype)
+        if kind == "estimate":
+            return ("estimate", b.logical_shape, dtype)
+        if self.mode == "shared":
+            return ("solve", b.bucket, dtype)
+        return ("solve", b.logical_shape, dtype)
+
+    def submit(self, A, *, kind: str = "factorize",
+               tenant: Optional[str] = None) -> Ticket:
+        """Enqueue one request; returns its :class:`Ticket` immediately.
+
+        Raises :class:`QueueFull` under backpressure — the request was
+        NOT accepted; retry with backoff.
+        """
+        if self._closed:
+            raise RuntimeError("server is closed")
+        if kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
+        if kind == "estimate" and tenant is not None:
+            raise ValueError("estimate requests are stateless; "
+                             "tenant routing applies to factorize only")
+        b = embed(A, self.quantum)
+        payload = {"bucketed": b, "kind": kind, "tenant": tenant,
+                   "seq": self._next_seq()}
+        try:
+            ticket = self.batcher.submit(self._group(kind, tenant, b),
+                                         payload)
+        except QueueFull:
+            with self._lock:
+                self._counters["rejected"] += 1
+            raise
+        with self._lock:
+            self._counters["submitted"] += 1
+            if tenant is not None:
+                self._counters["tenant_requests"] += 1
+        return ticket
+
+    def solve(self, A, *, kind: str = "factorize",
+              tenant: Optional[str] = None,
+              timeout: Optional[float] = 30.0) -> ServeResult:
+        """Synchronous submit + wait.  On timeout the request is cancelled
+        (it will never reach the solver) and ``TimeoutError`` re-raises."""
+        ticket = self.submit(A, kind=kind, tenant=tenant)
+        try:
+            return ticket.result(timeout)
+        except TimeoutError:
+            self.cancel(ticket)
+            with self._lock:
+                self._counters["timeouts"] += 1
+            raise
+
+    def cancel(self, ticket: Ticket) -> bool:
+        """Cancel a submitted ticket (counted in the stats)."""
+        won = ticket.cancel()
+        if won:
+            with self._lock:
+                self._counters["cancelled"] += 1
+        return won
+
+    # --- warmup ---------------------------------------------------------
+    def warmup(self, shapes, *, dtype=np.float32,
+               estimates: bool = False) -> int:
+        """Stage every executable the dispatch path can reach for a menu
+        of logical operand ``shapes`` — call at deploy time.
+
+        Batch composition is timing-dependent: without warmup, which
+        (group, batch-size) signatures compile is decided by how requests
+        happen to coalesce, and the first batch of any new signature pays
+        its full XLA compile (~1s) *inside* the serving path — a latency
+        cliff for whichever requests ride that batch.  Warming every
+        power-of-two batch size up to ``max_batch`` per shape removes the
+        cliff deterministically.  Returns the number of staged (group,
+        batch) signatures.
+        """
+        shapes = [tuple(s) for s in shapes]
+        staged = 0
+        for shape in dict.fromkeys(shapes):
+            b = embed(np.zeros(shape, dtype), self.quantum)
+            group = self._group("factorize", None, b)
+            solve_shape = b.bucket if self.mode == "shared" else shape
+            if not self.plan.staged:
+                fact = self.plan.solve(np.zeros(solve_shape, dtype),
+                                       key=self._request_key(0))
+                jax.block_until_ready(fact.s)
+                with self._lock:
+                    self._seen_signatures.add((group, 1))
+                staged += 1
+            else:
+                batch = 1
+                while batch <= self.batcher.max_batch:
+                    stacked = jax.device_put(
+                        np.zeros((batch,) + solve_shape, dtype))
+                    keys = _FOLD_KEYS(self._base_key,
+                                      jnp.zeros((batch,), jnp.uint32))
+                    fact, _ = self.plan.solve_batched(
+                        DenseOp(stacked), keys=keys, with_info=True)
+                    jax.block_until_ready(fact.s)
+                    with self._lock:
+                        self._seen_signatures.add((group, batch))
+                    staged += 1
+                    batch *= 2
+            if estimates:
+                res = self._est_plan.estimate(np.zeros(shape, dtype),
+                                              key=self._request_key(0))
+                jax.block_until_ready(res.rank)
+                with self._lock:
+                    self._seen_signatures.add(
+                        (("estimate", shape, str(np.dtype(dtype))), 1))
+                staged += 1
+        # warmup is deploy time, not serving time: restart the stats clock
+        # so requests_per_sec reflects traffic actually served.
+        self._t0 = time.perf_counter()
+        return staged
+
+    # --- dispatch (runs on the batcher worker thread) -------------------
+    def _dispatch(self, group: Hashable, tickets: List[Ticket]) -> None:
+        try:
+            if group[0] == "tenant":
+                self._dispatch_tenant(tickets)
+            elif group[0] == "estimate":
+                self._dispatch_estimate(group, tickets)
+            else:
+                self._dispatch_solve(group, tickets)
+        except BaseException:
+            with self._lock:
+                self._counters["errors"] += 1
+            raise
+        finally:
+            with self._lock:
+                self._counters["batches"] += 1
+                n = len(tickets)
+                self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
+                for t in tickets:
+                    if t.done and t.latency_ms is not None \
+                            and t._error is None:
+                        self._counters["completed"] += 1
+                        self.latency.record(t.latency_ms)
+
+    def _note_signature(self, signature: Hashable, n: int) -> None:
+        """Bucket-hit accounting: a request 'hits' when its executable
+        signature (group x padded batch size) is already staged."""
+        with self._lock:
+            if signature in self._seen_signatures:
+                self._counters["bucket_hits"] += n
+            else:
+                self._seen_signatures.add(signature)
+                self._counters["bucket_misses"] += n
+
+    def _dispatch_solve(self, group: Hashable, tickets: List[Ticket]
+                        ) -> None:
+        n = len(tickets)
+        shared = self.mode == "shared"
+        if shared:
+            ops = [t.payload["bucketed"] for t in tickets]
+        else:
+            ops = [t.payload["bucketed"].extract() for t in tickets]
+        seqs = [t.payload["seq"] for t in tickets]
+        if not self.plan.staged:
+            # host-loop methods cannot vmap-batch: serve them one by one
+            # through the same plan (still compile-once per shape).
+            self._note_signature((group, 1), n)
+            for t, A, s in zip(tickets,
+                               (o.extract() if shared else o for o in ops),
+                               seqs):
+                fact, info = self.plan.solve(A, key=self._request_key(s),
+                                             with_info=True)
+                t._resolve(ServeResult(kind="factorize", value=fact,
+                                       batch=1, info=info))
+            return
+        pad_to_n = _pow2_pad(n)
+        ops = ops + [ops[-1]] * (pad_to_n - n)
+        seqs = seqs + [seqs[-1]] * (pad_to_n - n)
+        self._note_signature((group, pad_to_n), n)
+        # host-side stack + one device_put: no XLA compile per (shape,
+        # batch) signature on the dispatch path (jnp.stack would stage a
+        # fresh concatenate for each — ~30ms of compile per combination).
+        stacked = stack_buckets(ops) if shared \
+            else jax.device_put(np.stack([np.asarray(o) for o in ops]))
+        keys = _FOLD_KEYS(self._base_key, jnp.asarray(seqs, jnp.uint32))
+        fact, info = self.plan.solve_batched(
+            DenseOp(stacked), keys=keys, with_info=True)
+        # one device->host sync for the whole batch, then per-ticket
+        # numpy-view slicing: per-request jax slicing would issue ~10 tiny
+        # device ops per ticket and dominate the dispatch loop.
+        fact, info = jax.tree.map(np.asarray, (fact, info))
+        for i, t in enumerate(tickets):
+            fi = jax.tree.map(lambda x, i=i: x[i], fact)
+            ii = jax.tree.map(lambda x, i=i: x[i], info)
+            if shared:
+                fi = unpad_factors(fi, t.payload["bucketed"].logical_shape)
+            t._resolve(ServeResult(kind="factorize", value=fi, batch=n,
+                                   info=ii))
+
+    def _dispatch_estimate(self, group: Hashable, tickets: List[Ticket]
+                           ) -> None:
+        self._note_signature((group, 1), len(tickets))
+        for t in tickets:
+            res = self._est_plan.estimate(
+                t.payload["bucketed"].extract(),
+                key=self._request_key(t.payload["seq"]))
+            t._resolve(ServeResult(kind="estimate", value=res,
+                                   batch=len(tickets)))
+
+    def _dispatch_tenant(self, tickets: List[Ticket]) -> None:
+        for t in tickets:
+            tid = t.payload["tenant"]
+            A = t.payload["bucketed"].extract()
+            sess = self.tenants.get(tid, A)
+            fact = sess.update(A, key=self._request_key(t.payload["seq"]))
+            rec = sess.history[-1]
+            t._resolve(ServeResult(
+                kind="tenant", value=fact, batch=len(tickets),
+                meta={"kind": rec["kind"],
+                      "iterations": rec["iterations"],
+                      "step": rec["step"]}))
+
+    # --- stats / lifecycle ----------------------------------------------
+    def stats(self) -> dict:
+        """JSON-able snapshot of the serving counters (the CLI's stats
+        endpoint payload)."""
+        now = time.perf_counter()
+        with self._lock:
+            counters = dict(self._counters)
+            hist = {str(k): v for k, v in sorted(self._batch_hist.items())}
+        elapsed = max(now - self._t0, 1e-9)
+        lookups = counters["bucket_hits"] + counters["bucket_misses"]
+        return {
+            "uptime_s": elapsed,
+            **counters,
+            "requests_per_sec": counters["completed"] / elapsed,
+            "latency_ms": self.latency.summary(),
+            "batch_histogram": hist,
+            "bucket_hit_rate":
+                counters["bucket_hits"] / lookups if lookups else 0.0,
+            "mode": self.mode,
+            "quantum": self.quantum,
+            "tenants": self.tenants.stats(),
+            "plan_cache": plan_cache_stats(),
+        }
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Drain the queue, stop the worker, checkpoint tenant sessions."""
+        if self._closed:
+            return
+        self._closed = True
+        self.batcher.stop(timeout)
+        self.tenants.save_all()
+
+    def __enter__(self) -> "SolveServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = ["ServeResult", "SolveServer"]

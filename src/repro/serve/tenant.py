@@ -1,0 +1,139 @@
+"""Per-tenant Session state: repeat clients get *tracked* solves.
+
+The prefill/decode analogy from ``launch/serve.py``: a tenant's first
+request pays the cold Krylov budget (prefill); every later request against
+its drifted operand warm-starts from the previous Ritz basis and runs the
+Session's learned refine budget (decode) — strictly fewer GK iterations
+end-to-end, which is the acceptance bar ``tests/test_serve.py`` pins.
+
+The registry is a bounded LRU: past ``max_tenants`` live sessions the
+coldest is evicted — checkpointed first (``repro.checkpoint``, atomic)
+when a ``checkpoint_dir`` is configured, so an evicted tenant that
+returns restores its factorization and keeps refining instead of
+re-paying prefill.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.api.session import Session
+from repro.api.spec import SVDSpec
+
+Array = jax.Array
+
+
+def _tenant_key(base: Array, tenant_id: str) -> Array:
+    """Deterministic per-tenant key stream seed (stable across restarts,
+    unlike ``hash``)."""
+    return jax.random.fold_in(base, zlib.crc32(str(tenant_id).encode()))
+
+
+class TenantRegistry:
+    """LRU map tenant-id -> :class:`~repro.api.session.Session`.
+
+    Thread-safe for lookups/insertions; the sessions themselves are NOT —
+    the server funnels all tenant solves through its single dispatch
+    worker, which is the supported usage.
+    """
+
+    def __init__(self, spec: Optional[SVDSpec] = None, *,
+                 max_tenants: int = 32,
+                 checkpoint_dir: Optional[str] = None,
+                 key: Optional[Array] = None,
+                 refine_iters: Optional[int] = None,
+                 restart_angle: float = 0.5):
+        if max_tenants < 1:
+            raise ValueError(f"max_tenants must be >= 1, got {max_tenants}")
+        self.spec = spec or SVDSpec()
+        self.max_tenants = int(max_tenants)
+        self.checkpoint_dir = checkpoint_dir
+        self.refine_iters = refine_iters
+        self.restart_angle = float(restart_angle)
+        self._key = key if key is not None else jax.random.key(0)
+        self._sessions: "collections.OrderedDict[str, Session]" = \
+            collections.OrderedDict()
+        self._lock = threading.RLock()
+        self._counters = {"creates": 0, "restores": 0, "evictions": 0,
+                          "reuses": 0}
+
+    def _tenant_dir(self, tenant_id: str) -> Optional[str]:
+        if self.checkpoint_dir is None:
+            return None
+        return os.path.join(self.checkpoint_dir, str(tenant_id))
+
+    # --- lookup ---------------------------------------------------------
+    def get(self, tenant_id: str, A: Any) -> Session:
+        """The tenant's session (most-recently-used), created — or
+        restored from its eviction checkpoint — around operand ``A``."""
+        with self._lock:
+            sess = self._sessions.get(tenant_id)
+            if sess is not None:
+                self._sessions.move_to_end(tenant_id)
+                self._counters["reuses"] += 1
+                return sess
+            sess = self._make(tenant_id, A)
+            self._sessions[tenant_id] = sess
+            while len(self._sessions) > self.max_tenants:
+                old_id, old = self._sessions.popitem(last=False)
+                self._counters["evictions"] += 1
+                self._checkpoint(old_id, old)
+            return sess
+
+    def _make(self, tenant_id: str, A: Any) -> Session:
+        key = _tenant_key(self._key, tenant_id)
+        directory = self._tenant_dir(tenant_id)
+        if directory is not None:
+            try:
+                sess = Session.restore(directory, A, key=key)
+                self._counters["restores"] += 1
+                return sess
+            except FileNotFoundError:
+                pass
+        self._counters["creates"] += 1
+        # track_residuals costs r extra matvecs + a host sync per solve —
+        # a latency-critical serving session reads residuals from the
+        # in-graph ConvergenceInfo instead.
+        return Session(A, self.spec, key=key,
+                       refine_iters=self.refine_iters,
+                       restart_angle=self.restart_angle,
+                       track_residuals=False)
+
+    def _checkpoint(self, tenant_id: str, sess: Session) -> None:
+        directory = self._tenant_dir(tenant_id)
+        if directory is not None and sess.fact is not None:
+            sess.save(directory, keep=1)
+
+    # --- maintenance ----------------------------------------------------
+    def peek(self, tenant_id: str) -> Optional[Session]:
+        """The tenant's live session without touching LRU order (stats /
+        tests); None when not resident."""
+        with self._lock:
+            return self._sessions.get(tenant_id)
+
+    def save_all(self) -> int:
+        """Checkpoint every resident session (graceful shutdown)."""
+        with self._lock:
+            items = list(self._sessions.items())
+        n = 0
+        for tenant_id, sess in items:
+            if self.checkpoint_dir is not None and sess.fact is not None:
+                self._checkpoint(tenant_id, sess)
+                n += 1
+        return n
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sessions)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {**self._counters, "resident": len(self._sessions)}
+
+
+__all__ = ["TenantRegistry"]

@@ -1,0 +1,105 @@
+"""Synthetic serve traffic: Zipf shape mix + slowly drifting tenant streams.
+
+One generator feeds the CLI demo, the ``serve-smoke`` CI job and
+``benchmarks/serve_bench.py`` so all three measure the same workload: a
+head-heavy (Zipf) distribution over operand shapes — the regime where
+shape bucketing and continuous batching pay — with an optional fraction of
+requests pinned to repeat *tenants* whose operands drift slowly between
+requests (the Session-tracking regime).
+
+Pure numpy; operands are low-rank-plus-noise like the solver zoo, so every
+request is a realistic partial-SVD target rather than white noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+# a head-heavy but bounded shape menu: several logical shapes per 32-grid
+# bucket, so bucketing actually coalesces.
+DEFAULT_SHAPES: Tuple[Tuple[int, int], ...] = (
+    (96, 64), (90, 60), (80, 56), (64, 64), (120, 48), (48, 96),
+)
+
+
+@dataclasses.dataclass
+class Request:
+    """One synthetic serve request."""
+
+    A: np.ndarray
+    shape: Tuple[int, int]
+    tenant: Optional[str] = None
+    kind: str = "factorize"
+
+
+def zipf_choice(rng: np.random.Generator, k: int, size: int,
+                a: float = 1.1) -> np.ndarray:
+    """``size`` indices in [0, k) with a truncated-Zipf(a) rank law
+    (index 0 = hottest)."""
+    ranks = np.arange(1, k + 1, dtype=np.float64)
+    p = ranks ** -a
+    p /= p.sum()
+    return rng.choice(k, size=size, p=p)
+
+
+def lowrank_operand(rng: np.random.Generator, shape: Tuple[int, int],
+                    rank: int, noise: float = 1e-3,
+                    dtype=np.float32) -> np.ndarray:
+    """Low-rank-plus-noise operand with a geometric spectrum (the zoo's
+    default texture)."""
+    m, n = shape
+    r = min(rank, m, n)
+    U = rng.standard_normal((m, r))
+    V = rng.standard_normal((n, r))
+    s = np.logspace(0.0, -2.0, r)
+    A = (U * s) @ V.T + noise * rng.standard_normal((m, n))
+    return np.asarray(A, dtype=dtype)
+
+
+def synthetic_stream(n_requests: int, *,
+                     shapes: Sequence[Tuple[int, int]] = DEFAULT_SHAPES,
+                     zipf_a: float = 1.1,
+                     rank: int = 8,
+                     tenants: int = 0,
+                     tenant_fraction: float = 0.25,
+                     drift: float = 1e-3,
+                     estimate_fraction: float = 0.0,
+                     seed: int = 0) -> Iterator[Request]:
+    """Yield ``n_requests`` synthetic :class:`Request`\\ s.
+
+    ``tenants > 0`` routes ~``tenant_fraction`` of the stream to that many
+    repeat clients, each pinned to one shape with an operand that drifts
+    by ``drift`` (relative Frobenius) per request — small enough that the
+    Session refine path stays engaged.  ``estimate_fraction`` converts
+    that share of the anonymous stream into rank-estimate requests.
+    """
+    rng = np.random.default_rng(seed)
+    shapes = [tuple(s) for s in shapes]
+    picks = zipf_choice(rng, len(shapes), n_requests, a=zipf_a)
+    tenant_state: Dict[str, np.ndarray] = {}
+    for i in range(n_requests):
+        if tenants > 0 and rng.random() < tenant_fraction:
+            tid = f"tenant-{int(rng.integers(tenants))}"
+            A = tenant_state.get(tid)
+            if A is None:
+                shape = shapes[picks[i]]
+                A = lowrank_operand(rng, shape, rank)
+            else:
+                step = rng.standard_normal(A.shape).astype(A.dtype)
+                scale = drift * np.linalg.norm(A) / max(
+                    np.linalg.norm(step), 1e-30)
+                A = A + scale * step
+            tenant_state[tid] = A
+            yield Request(A=A, shape=tuple(A.shape), tenant=tid)
+            continue
+        shape = shapes[picks[i]]
+        kind = "estimate" if rng.random() < estimate_fraction \
+            else "factorize"
+        yield Request(A=lowrank_operand(rng, shape, rank), shape=shape,
+                      kind=kind)
+
+
+__all__ = ["DEFAULT_SHAPES", "Request", "lowrank_operand",
+           "synthetic_stream", "zipf_choice"]

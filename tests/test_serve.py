@@ -1,0 +1,305 @@
+"""Serve subsystem: bucket transport bit-identity on the parity zoo, the
+continuous batcher's lifecycle contracts (coalescing, backpressure,
+cancellation, drain), end-to-end server correctness at equal accuracy,
+tenant warm paths (strictly fewer GK iterations than cold), and the stats
+endpoint ground-truthed against the plan-cache counters."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.api import (SVDSpec, clear_plan_cache, plan, plan_cache_stats,
+                       trace_count)
+from repro.serve import (Cancelled, ContinuousBatcher, QueueFull,
+                         SolveServer, bucket_shape, embed, unpad_factors)
+from repro.serve.traffic import lowrank_operand, synthetic_stream
+from test_solver_parity import ZOO
+
+KEY = jax.random.PRNGKey(3)
+SPEC = SVDSpec(method="fsvd", rank=8, max_iters=48)
+SERVE_SPEC = SVDSpec(method="fsvd", rank=4, max_iters=24)
+
+
+# ---------------------------------------------------------------------------
+# bucketing: padding is transport, never arithmetic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_padded_solve_bit_identical_on_zoo(name):
+    """The exact-mode contract: embedding into a bucket and extracting
+    back feeds the solver the caller's bytes — σ is bit-identical, not
+    merely close."""
+    A, _ = ZOO[name]
+    b = embed(A, 32)
+    assert b.bucket == bucket_shape(A.shape, 32)
+    assert tuple(b.data.shape) == b.bucket
+    back = b.extract()
+    np.testing.assert_array_equal(back, np.asarray(A))
+    # the padded region is zero, the logical region untouched
+    m, n = b.logical_shape
+    assert not np.any(np.asarray(b.data)[m:, :])
+    assert not np.any(np.asarray(b.data)[:, n:])
+    p = plan(SPEC, like=A)
+    s_direct = np.asarray(p.solve(A, key=KEY).s)
+    s_roundtrip = np.asarray(p.solve(back, key=KEY).s)
+    np.testing.assert_array_equal(s_direct, s_roundtrip)
+
+
+def test_shared_mode_solves_bucket_at_roundoff():
+    """mode="shared" solves the zero-padded bucket: zero rows/cols leave
+    the singular values mathematically unchanged, so σ agrees with the
+    logical solve to f32 roundoff and unpad_factors restores the logical
+    factor shapes."""
+    A, _ = ZOO["lowrank_noise"]
+    b = embed(A, 32)
+    padded = np.asarray(b.data)
+    fact = plan(SPEC, like=padded).solve(padded, key=KEY)
+    fact = unpad_factors(fact, b.logical_shape)
+    m, n = b.logical_shape
+    assert fact.U.shape[-2] == m and fact.V.shape[-2] == n
+    s_direct = np.asarray(plan(SPEC, like=A).solve(A, key=KEY).s)
+    err = np.max(np.abs(np.asarray(fact.s) - s_direct)) / s_direct[0]
+    assert err < 5e-5
+
+
+# ---------------------------------------------------------------------------
+# the continuous batcher (no solver involved)
+# ---------------------------------------------------------------------------
+
+def _recording_batcher(**kw):
+    batches = []
+
+    def dispatch(group, tickets):
+        batches.append((group, [t.payload for t in tickets]))
+        for t in tickets:
+            t._resolve(len(tickets))
+
+    return ContinuousBatcher(dispatch, **kw), batches
+
+
+def test_batcher_flushes_at_max_batch():
+    b, batches = _recording_batcher(max_batch=4, window_ms=500.0,
+                                    max_queue=64)
+    try:
+        tickets = [b.submit("g", i) for i in range(4)]
+        # window is 500ms: only the max_batch trigger can flush this fast
+        assert [t.result(timeout=5.0) for t in tickets] == [4, 4, 4, 4]
+        assert batches == [("g", [0, 1, 2, 3])]
+    finally:
+        b.stop()
+
+
+def test_batcher_window_flush_keeps_groups_separate():
+    b, batches = _recording_batcher(max_batch=8, window_ms=10.0,
+                                    max_queue=64)
+    try:
+        ta = [b.submit("a", i) for i in range(2)]
+        tb = b.submit("b", 9)
+        assert [t.result(timeout=5.0) for t in ta] == [2, 2]
+        assert tb.result(timeout=5.0) == 1
+        assert sorted(g for g, _ in batches) == ["a", "b"]
+        assert dict(batches) == {"a": [0, 1], "b": [9]}
+    finally:
+        b.stop()
+
+
+@pytest.fixture
+def blocked_batcher():
+    """A batcher whose worker is parked inside a dispatch until released;
+    yields (batcher, started_event, release_event, seen_payloads)."""
+    started, release = threading.Event(), threading.Event()
+    seen = []
+
+    def dispatch(group, tickets):
+        seen.extend(t.payload for t in tickets)
+        started.set()
+        release.wait(timeout=30)
+        for t in tickets:
+            t._resolve("ok")
+
+    b = ContinuousBatcher(dispatch, max_batch=1, window_ms=1.0, max_queue=3)
+    yield b, started, release, seen
+    release.set()
+    b.stop()
+
+
+def test_batcher_backpressure_rejects_not_buffers(blocked_batcher):
+    b, started, release, _ = blocked_batcher
+    blocker = b.submit("g", "blocker")
+    assert started.wait(timeout=5.0)
+    queued = [b.submit("g", i) for i in range(3)]     # fills max_queue
+    with pytest.raises(QueueFull):
+        b.submit("g", "overflow")
+    release.set()
+    assert blocker.result(timeout=5.0) == "ok"
+    assert [t.result(timeout=5.0) for t in queued] == ["ok"] * 3
+
+
+def test_batcher_cancel_never_reaches_dispatch(blocked_batcher):
+    b, started, release, seen = blocked_batcher
+    b.submit("g", "blocker")
+    assert started.wait(timeout=5.0)
+    victim = b.submit("g", "victim")
+    assert victim.cancel() is True
+    assert victim.cancel() is False                   # already done
+    with pytest.raises(Cancelled):
+        victim.result(timeout=5.0)
+    release.set()
+    b.stop()
+    assert "victim" not in seen
+
+
+def test_batcher_result_timeout(blocked_batcher):
+    b, started, _, _ = blocked_batcher
+    b.submit("g", "blocker")
+    assert started.wait(timeout=5.0)
+    waiting = b.submit("g", "later")
+    with pytest.raises(TimeoutError):
+        waiting.result(timeout=0.05)
+    assert not waiting.done                           # timeout != cancel
+
+
+def test_batcher_stop_drains_queued_work():
+    b, batches = _recording_batcher(max_batch=8, window_ms=200.0,
+                                    max_queue=64)
+    tickets = [b.submit("g", i) for i in range(5)]
+    b.stop(timeout=10.0)                # drain flushes before the window
+    # every queued request is served (batch composition during a drain is
+    # timing-dependent — the contract is completeness, not coalescing)
+    for t in tickets:
+        assert isinstance(t.result(timeout=0.1), int)
+    assert sorted(p for _, ps in batches for p in ps) == [0, 1, 2, 3, 4]
+    with pytest.raises(RuntimeError):
+        b.submit("g", 99)
+
+
+def test_batcher_dispatch_error_fails_whole_batch():
+    def dispatch(group, tickets):
+        raise ValueError("solver exploded")
+
+    b = ContinuousBatcher(dispatch, max_batch=2, window_ms=1.0,
+                          max_queue=8)
+    try:
+        t1, t2 = b.submit("g", 1), b.submit("g", 2)
+        for t in (t1, t2):
+            with pytest.raises(ValueError, match="solver exploded"):
+                t.result(timeout=5.0)
+    finally:
+        b.stop()
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+def test_server_end_to_end_warm_traffic_compiles_nothing():
+    """After warmup, anonymous traffic adds ZERO plan-cache traces — the
+    deterministic-staging contract — and the stats endpoint's bucket hit
+    rate / counters agree with the plan-cache ground truth."""
+    shapes = ((48, 32), (40, 24))
+    reqs = list(synthetic_stream(24, shapes=shapes, rank=4, tenants=0,
+                                 seed=3))
+    with SolveServer(SERVE_SPEC, max_batch=2, window_ms=2.0,
+                     key=jax.random.key(1)) as server:
+        server.warmup(shapes)
+        before, t_before = plan_cache_stats(), trace_count()
+        tickets = [server.submit(r.A) for r in reqs]
+        results = [t.result(timeout=120.0) for t in tickets]
+        server.batcher.stop()           # settle worker-side accounting
+        after, stats = plan_cache_stats(), server.stats()
+    assert trace_count() == t_before
+    assert after["misses"] == before["misses"]
+    assert after["hits"] > before["hits"]
+    assert stats["bucket_hit_rate"] == 1.0
+    assert stats["submitted"] == stats["completed"] == len(reqs)
+    assert stats["errors"] == 0
+    assert sum(int(k) * v for k, v in stats["batch_histogram"].items()) \
+        == len(reqs)
+    # equal accuracy: σ tracks dense SVD on every served request
+    for r, res in zip(reqs, results):
+        s_true = np.linalg.svd(np.asarray(r.A), compute_uv=False)[:4]
+        err = np.max(np.abs(np.asarray(res.value.s) - s_true)) / s_true[0]
+        assert err < 1e-2
+        assert res.value.U.shape == (r.shape[0], 4)
+        assert res.value.V.shape == (r.shape[1], 4)
+
+
+def test_tenant_repeat_requests_strictly_fewer_iterations():
+    rng = np.random.default_rng(0)
+    base = lowrank_operand(rng, (48, 32), 4)
+    with SolveServer(SERVE_SPEC, max_batch=2, window_ms=2.0,
+                     key=jax.random.key(2)) as server:
+        metas = []
+        for _ in range(3):
+            A = base + 1e-4 * rng.standard_normal(
+                base.shape).astype(np.float32)
+            res = server.solve(A, tenant="acme", timeout=120.0)
+            assert res.kind == "tenant"
+            metas.append(res.meta)
+        stats = server.stats()
+    assert [m["kind"] for m in metas] == ["cold", "refine", "refine"]
+    cold = metas[0]["iterations"]
+    assert all(m["iterations"] < cold for m in metas[1:])
+    assert stats["tenant_requests"] == 3
+    assert stats["tenants"]["creates"] == 1
+    assert stats["tenants"]["reuses"] == 2
+
+
+def test_estimate_requests_are_stateless():
+    A = np.asarray(make_lowrank(jax.random.PRNGKey(5), 48, 32, 4))
+    spec = SVDSpec(method="fsvd", rank=4, max_iters=32)
+    with SolveServer(spec, key=jax.random.key(3)) as server:
+        res = server.solve(A, kind="estimate", timeout=120.0)
+        assert res.kind == "estimate"
+        assert int(res.value.rank) == 4
+        with pytest.raises(ValueError):
+            server.submit(A, kind="estimate", tenant="acme")
+
+
+def test_server_counts_rejections(monkeypatch):
+    server = SolveServer(SERVE_SPEC, key=jax.random.key(4))
+    try:
+        def full(group, payload):
+            raise QueueFull("full")
+        monkeypatch.setattr(server.batcher, "submit", full)
+        with pytest.raises(QueueFull):
+            server.submit(np.zeros((8, 8), np.float32))
+        assert server.stats()["rejected"] == 1
+        assert server.stats()["submitted"] == 0
+    finally:
+        server.close()
+
+
+def test_server_timeout_cancels_and_counts(monkeypatch):
+    started, release = threading.Event(), threading.Event()
+    server = SolveServer(SERVE_SPEC, max_batch=1, window_ms=1.0,
+                         key=jax.random.key(5))
+    try:
+        def slow(group, tickets):
+            started.set()
+            release.wait(timeout=30)
+            for t in tickets:
+                t._resolve("late")
+        monkeypatch.setattr(server.batcher, "_dispatch", slow)
+        A = np.zeros((8, 8), np.float32)
+        server.submit(A)                       # parks the worker
+        assert started.wait(timeout=5.0)
+        with pytest.raises(TimeoutError):
+            server.solve(A, timeout=0.05)
+        stats = server.stats()
+        assert stats["timeouts"] == 1 and stats["cancelled"] == 1
+    finally:
+        release.set()
+        server.close()
+
+
+def test_closed_server_refuses_submissions():
+    server = SolveServer(SERVE_SPEC, key=jax.random.key(6))
+    server.close()
+    server.close()                             # idempotent
+    with pytest.raises(RuntimeError):
+        server.submit(np.zeros((8, 8), np.float32))
