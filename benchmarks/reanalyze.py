@@ -170,6 +170,43 @@ def _check_serve_section(path: str, sec: dict) -> int:
     return n
 
 
+_UPDATE_RAW = ("m", "n", "rank", "k_drift", "steps", "cold_ms",
+               "refine_ms", "update_ms", "cold_iters", "refine_iters",
+               "updates")
+
+
+def _check_update_section(path: str, sec: dict) -> int:
+    """Validate an ``update/v1`` section: raw three-arm (cold / refine /
+    rank-k update) fields present, every stored speedup ratio
+    re-derivable from the raw wall times."""
+    n = 0
+    for r in sec["records"]:
+        missing = [f for f in _UPDATE_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: update record missing {missing}")
+        derived = (
+            ("update_vs_refine", r["refine_ms"] /
+             max(r["update_ms"], 1e-9)),
+            ("update_vs_cold", r["cold_ms"] / max(r["update_ms"], 1e-9)),
+            ("refine_vs_cold", r["cold_ms"] / max(r["refine_ms"], 1e-9)),
+        )
+        for field, want in derived:
+            have = r.get(field)
+            if have is not None and abs(have - want) > 1e-6 * abs(want):
+                raise SystemExit(
+                    f"{path}: update {r['m']}x{r['n']} r={r['rank']} "
+                    f"k={r['k_drift']}: stored {field}={have:.4f} "
+                    f"disagrees with raw timings ({want:.4f})")
+            r[field] = want
+        print(f"[reanalyze] update {r['m']}x{r['n']} r={r['rank']} "
+              f"k={r['k_drift']} steps={r['steps']}: "
+              f"{r['update_vs_refine']:.2f}x vs refine, "
+              f"{r['update_vs_cold']:.2f}x vs cold "
+              f"({r['updates']} zero-iteration updates)")
+        n += 1
+    return n
+
+
 def reanalyze_bench(path: str) -> int:
     """Validate a ``repro-bench/v1`` file and recompute derived fields."""
     bench = json.load(open(path))
@@ -207,6 +244,8 @@ def reanalyze_bench(path: str) -> int:
             n += _check_session_section(path, sec)
         elif schema == "serve/v1":
             n += _check_serve_section(path, sec)
+        elif schema == "update/v1":
+            n += _check_update_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new
@@ -240,6 +279,10 @@ def _headline(schema, records) -> tuple[str, float]:
         sp = [r["unbatched_wall_ms"] / max(r["batched_wall_ms"], 1e-9)
               for r in records]
         return "mean batched-serving speedup", (sum(sp) / len(sp)
+                                                if sp else 0.0)
+    if schema == "update/v1":
+        sp = [r["refine_ms"] / max(r["update_ms"], 1e-9) for r in records]
+        return "mean update-vs-refine speedup", (sum(sp) / len(sp)
                                                 if sp else 0.0)
     return "records", float(len(records))
 

@@ -29,7 +29,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
                              "kernels", "sparse", "gk_step", "dist",
-                             "session", "serve"])
+                             "session", "serve", "update"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
@@ -38,12 +38,14 @@ def main() -> None:
                          "scaling artifact, --only session --emit-json "
                          "BENCH_pr5.json for the tracked-session one, "
                          "--only serve --emit-json BENCH_pr6.json for the "
-                         "serve-traffic one)")
+                         "serve-traffic one, --only update --emit-json "
+                         "BENCH_pr7.json for the rank-k-update one)")
     args = ap.parse_args()
 
     from benchmarks import (dist_bench, fig1, fig2, gk_step_bench,
                             kernels_bench, roofline, serve_bench,
-                            session_bench, sparse_bench, table1, table2)
+                            session_bench, sparse_bench, table1, table2,
+                            update_bench)
 
     t0 = time.time()
     sections = []
@@ -79,6 +81,11 @@ def main() -> None:
             sizes=session_bench.QUICK_SIZES if args.quick else None,
             repeats=1 if args.quick else 3,
             steps=4 if args.quick else session_bench.STEPS)))
+    if args.only in (None, "update"):
+        sections.append(("update", lambda: update_bench.run(
+            sizes=update_bench.QUICK_SIZES if args.quick else None,
+            repeats=1 if args.quick else 3,
+            steps=4 if args.quick else update_bench.STEPS)))
     if args.only in (None, "serve"):
         sections.append(("serve", lambda: serve_bench.run(
             requests=serve_bench.QUICK_REQUESTS if args.quick

@@ -1,0 +1,174 @@
+"""Zero-iteration rank-k update vs tracked refine vs cold factorize.
+
+The PR 7 acceptance bench: a stream of *structured* drifts ``A_{t+1} =
+A_t + U_t diag(s_t) Vt_t`` (rank-k, exactly the regime ROADMAP's
+incremental-updates item names).  Three arms solve the identical stream:
+
+* **cold** — per-step ``factorize`` of the drifted operand (full Krylov
+  budget; shares the plan compile cache, so the comparison isolates
+  algorithmic cost).
+* **refine** — ``Session`` with ``update_tol=0.0``: the update path
+  disabled, so every delta folds into the operand and runs the PR 5
+  warm-started refine solve (reduced GK budget).
+* **update** — ``Session`` with the default learned gate: every delta
+  takes the rank-k Brand update (``repro.core.update``) — **zero** GK
+  iterations, O((m+n)(r+k)^2) instead of O(iters * m * n).
+
+All three arms are held to the same accuracy gate (max singular-value
+error vs dense SVD of the true drifted matrix), so
+``update ≫ refine ≫ cold`` is a like-for-like wall-time claim.
+
+Section schema ``update/v1`` (validated by ``benchmarks.reanalyze``):
+records carry raw timings/iterations and the re-derivable ratios
+``update_vs_refine``/``update_vs_cold``/``refine_vs_cold``.
+
+    PYTHONPATH=src python -m benchmarks.update_bench
+    PYTHONPATH=src python -m benchmarks.run --only update --emit-json \
+        BENCH_pr7.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, make_lowrank
+from repro.api import LowRankOp, Session, SVDSpec, clear_plan_cache, \
+    factorize
+
+SIZES = [(512, 384, 8, 2), (1024, 512, 16, 4)]
+QUICK_SIZES = [(256, 160, 8, 2)]
+
+STEPS = 8          # structured drift steps per sweep
+DRIFT = 1e-3       # per-step relative (Frobenius) drift
+
+
+def _drift_stream(key, m: int, n: int, r: int, k: int, steps: int,
+                  drift: float):
+    """Exactly rank-r A_0, then ``steps`` cumulative rank-k deltas.
+
+    Returns (operands, deltas): ``operands[t+1] = operands[t] +
+    deltas[t]`` densified — the cold/refine arms consume the operands,
+    the update arm consumes the deltas.
+    """
+    k0, kd = jax.random.split(key)
+    A = make_lowrank(k0, m, n, r)
+    operands, deltas = [A], []
+    for t in range(steps):
+        ku, kv = jax.random.split(jax.random.fold_in(kd, t))
+        U = jax.random.normal(ku, (m, k))
+        Vt = jax.random.normal(kv, (k, n))
+        scale = drift * jnp.linalg.norm(A) / jnp.linalg.norm(U @ Vt)
+        d = LowRankOp(U, jnp.full((k,), scale), Vt)
+        A = A + (U * d.s) @ Vt
+        deltas.append(d)
+        operands.append(A)
+    return ([jax.device_put(x) for x in operands],
+            [jax.tree.map(jax.device_put, d) for d in deltas])
+
+
+def _accuracy(fact, s_true) -> float:
+    return float(jnp.max(jnp.abs(fact.s - s_true[: fact.rank]))
+                 / s_true[0])
+
+
+def _cold_sweep(operands, s_true, spec, key):
+    """(total_ms, mean_iters, worst_err) for per-step cold factorize."""
+    facts = []
+    t0 = time.perf_counter()
+    for t, A in enumerate(operands):
+        f = factorize(A, spec, key=jax.random.fold_in(key, t))
+        jax.block_until_ready(f.s)
+        facts.append(f)
+    ms = (time.perf_counter() - t0) * 1e3
+    iters = sum(int(f.iterations) for f in facts) / len(facts)
+    err = max(_accuracy(f, s) for f, s in zip(facts, s_true))
+    return ms, iters, err
+
+
+def _session_sweep(operands, deltas, s_true, spec, key, update_tol):
+    """One Session over the stream: solve A_0 cold, then one delta()
+    per step.  ``update_tol=0.0`` pins the refine arm (update disabled);
+    ``None`` lets the gated update path engage."""
+    sess = Session(operands[0], spec, key=key, track_residuals=False,
+                   update_tol=update_tol)
+    facts = []
+    t0 = time.perf_counter()
+    f = sess.solve()
+    jax.block_until_ready(f.s)
+    facts.append(f)
+    for d in deltas:
+        f = sess.delta(d)
+        jax.block_until_ready(f.s)
+        facts.append(f)
+    ms = (time.perf_counter() - t0) * 1e3
+    iters = sum(r["iterations"] for r in sess.history) / len(sess.history)
+    err = max(_accuracy(f, s) for f, s in zip(facts, s_true))
+    return ms, iters, err, sess.counts()
+
+
+def run(sizes=None, repeats: int = 3, steps: int = STEPS,
+        drift: float = DRIFT) -> dict:
+    key = jax.random.PRNGKey(7)
+    records = []
+    for m, n, r, k in (sizes or SIZES):
+        spec = SVDSpec(method="fsvd", rank=r)
+        operands, deltas = _drift_stream(jax.random.fold_in(key, m * n),
+                                         m, n, r, k, steps, drift)
+        s_true = [jnp.linalg.svd(A, compute_uv=False) for A in operands]
+        # one uncounted warm sweep per arm stages every executable (cold
+        # budget, refine budget, update) — the measurement then isolates
+        # solve cost, exactly like session_bench.  The update arm warms
+        # two deltas: the first traces against the cold-solve fact
+        # (method="fsvd"), the second against an update-produced fact
+        # (method="update"); both executables must be staged.
+        _cold_sweep(operands[:2], s_true[:2], spec, key)
+        _session_sweep(operands[:3], deltas[:2], s_true[:3], spec, key, 0.0)
+        _session_sweep(operands[:3], deltas[:2], s_true[:3], spec, key,
+                       None)
+        cold_runs, refine_runs, update_runs = [], [], []
+        for rep in range(repeats):
+            cold_runs.append(_cold_sweep(
+                operands, s_true, spec, jax.random.fold_in(key, rep)))
+            refine_runs.append(_session_sweep(
+                operands, deltas, s_true, spec,
+                jax.random.fold_in(key, 100 + rep), 0.0))
+            update_runs.append(_session_sweep(
+                operands, deltas, s_true, spec,
+                jax.random.fold_in(key, 200 + rep), None))
+        cold_ms, cold_iters, cold_err = \
+            sorted(cold_runs)[len(cold_runs) // 2]
+        refine_ms, refine_iters, refine_err, _ = sorted(
+            refine_runs, key=lambda x: x[0])[len(refine_runs) // 2]
+        update_ms, update_iters, update_err, counts = sorted(
+            update_runs, key=lambda x: x[0])[len(update_runs) // 2]
+        records.append({
+            "m": m, "n": n, "rank": r, "k_drift": k, "steps": steps,
+            "drift": drift,
+            "cold_ms": cold_ms, "refine_ms": refine_ms,
+            "update_ms": update_ms,
+            "cold_iters": cold_iters, "refine_iters": refine_iters,
+            "update_iters": update_iters,
+            "cold_err": cold_err, "refine_err": refine_err,
+            "update_err": update_err,
+            "updates": counts.get("update", 0),
+            "update_vs_refine": refine_ms / update_ms,
+            "update_vs_cold": cold_ms / update_ms,
+            "refine_vs_cold": cold_ms / refine_ms,
+        })
+    rows = [[f"{r['m']}x{r['n']}", r["rank"], r["k_drift"], r["steps"],
+             f"{r['cold_ms']:.1f}", f"{r['refine_ms']:.1f}",
+             f"{r['update_ms']:.1f}", f"{r['update_vs_refine']:.2f}x",
+             f"{r['update_vs_cold']:.2f}x",
+             f"{r['cold_err']:.1e}", f"{r['update_err']:.1e}"]
+            for r in records]
+    print(fmt_table(["shape", "r", "k", "steps", "cold ms", "refine ms",
+                     "update ms", "upd/refine", "upd/cold",
+                     "cold err", "update err"], rows))
+    clear_plan_cache()
+    return {"schema": "update/v1", "records": records}
+
+
+if __name__ == "__main__":
+    run()

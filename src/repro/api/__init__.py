@@ -42,6 +42,8 @@ from repro.core._keys import ImplicitKeyWarning, resolve_key
 from repro.core.operators import (DenseOp, GramOp, KroneckerOp, LowRankOp,
                                   Operator, ScaledOp, SparseOp, SumOp,
                                   TransposedOp, as_operator)
+from repro.core.update import (downdate_cols, downdate_rows,
+                               update_factorization)
 
 # importing the module registers the built-in solvers
 from repro.api import solvers as _solvers  # noqa: E402,F401  (side effect)
@@ -54,6 +56,7 @@ __all__ = [
     "plan", "SolverPlan", "clear_plan_cache", "plan_cache_stats",
     "trace_count", "register_ingraph_method",
     "session", "Session",
+    "update_factorization", "downdate_rows", "downdate_cols",
     "ConvergenceInfo", "ConvergenceCallback", "RecordingCallback",
     "CaptureCallback",
     "Factorization", "RankEstimate",

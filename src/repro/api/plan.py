@@ -37,6 +37,7 @@ import threading
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api.callbacks import CaptureCallback, empty_info
@@ -44,9 +45,9 @@ from repro.api.registry import get_solver
 from repro.api.results import Factorization, RankEstimate
 from repro.api.spec import SVDSpec
 from repro.core._keys import resolve_key
-from repro.core.operators import (GramOp, KroneckerOp, Operator, ScaledOp,
-                                  SparseOp, SumOp, TransposedOp, as_operator,
-                                  sharding_mesh)
+from repro.core.operators import (GramOp, KroneckerOp, LowRankOp, Operator,
+                                  ScaledOp, SparseOp, SumOp, TransposedOp,
+                                  as_operator, sharding_mesh)
 
 Array = jax.Array
 
@@ -394,6 +395,40 @@ class SolverPlan:
             fact = solver(op, self.spec, key=key, q1=q1)
         info = rec.info if rec.info is not None else empty_info(self.method)
         return (fact, info) if with_info else fact
+
+    def update(self, fact: Factorization, delta: Any, *, beta=1.0):
+        """Rank-k update of an existing ``Factorization`` — zero GK
+        iterations (see :mod:`repro.core.update`).
+
+        Staged through the same process-wide cache as solves, keyed by the
+        (spec, factorization signature, delta signature) triple, so a
+        tracking stream pays ONE trace for every update of a given shape.
+        ``beta`` enters the staged program as a traced scalar: one
+        executable covers all decay factors.
+        """
+        from repro.core.update import update_factorization
+        dop = as_operator(delta, backend=self.spec.backend)
+        if not isinstance(dop, LowRankOp):
+            raise TypeError(
+                f"plan.update requires a low-rank delta (LowRankOp), got "
+                f"{type(dop).__name__}; use solve() for unstructured drift")
+        backend = self.spec.backend
+        fsig = _operand_signature(fact)
+        dsig = _operand_signature(dop)
+        if fsig is None or dsig is None:
+            return update_factorization(fact, dop, beta=beta,
+                                        backend=backend)
+        cache_key = ("update", self.spec, fsig, dsig)
+
+        def build():
+            def run(fact, dop, beta):
+                _bump_traces()
+                return update_factorization(fact, dop, beta=beta,
+                                            backend=backend)
+            return jax.jit(run)
+
+        fn = _memoized(cache_key, build)
+        return fn(fact, dop, jnp.asarray(beta, jnp.float32))
 
     def solve_batched(self, ops: Any, *, keys: Optional[Array] = None,
                       q1s: Optional[Array] = None, with_info: bool = False):

@@ -9,31 +9,51 @@ training trajectory, a similarity matrix under live updates).  A
     sess = session(A, SVDSpec(method="fsvd", rank=8), key=key)
     f0 = sess.solve()                 # cold: full Krylov budget
     f1 = sess.update(A_next)          # warm: refine from f0, reduced budget
-    f2 = sess.delta(LowRankOp(...))   # additive low-rank drift, same path
+    f2 = sess.delta(LowRankOp(...))   # structured drift: rank-k update,
+                                      # ZERO Krylov iterations when it
+                                      # passes the parity gate
 
-Per update the session measures the **subspace angle** between the previous
-Ritz basis and its image under the new operator — ``sin θ = ||(I − U Uᵀ)
-A' V||_F / ||A' V||_F``, r matvecs, negligible next to a solve — and
-decides *refine vs restart*: below ``restart_angle`` the new solve
-warm-starts from ``prev.warm_start()`` with the reduced ``refine_iters``
-Krylov budget; above it (operator rotated away — tracking would converge
-to a stale subspace) it falls back to a cold solve with the full budget.
+The decision is **three-way** per step:
+
+  ============  =============================================  ==========
+  branch        taken when                                     GK iters
+  ============  =============================================  ==========
+  ``update``    drift is an explicit ``LowRankOp`` delta AND   0
+                the measured residual-after-update passes the
+                parity gate (``update_tol``, learned when not
+                pinned)
+  ``refine``    measured subspace drift ≤ ``restart_angle``    reduced
+  ``restart``   drift above ``restart_angle`` (or no previous  full
+                factorization)
+  ============  =============================================  ==========
+
+For refine/restart the session measures the **subspace angle** between the
+previous Ritz basis and its image under the new operator — ``sin θ =
+||(I − U Uᵀ) A' V||_F / ||A' V||_F``, r matvecs, negligible next to a
+solve.  For a structured delta it instead runs the rank-k Brand update
+(:mod:`repro.core.update`) and measures the resulting residual directly:
+the update is *exact* when the previous factorization captured the operand
+exactly, and the gate catches the noisy-tail case where it would silently
+degrade — rejected updates fall through to the refine/restart policy with
+the rejection recorded in ``history``.
 
 Solves run through one shared :class:`~repro.api.plan.SolverPlan`, so a
 session pays exactly one XLA trace per (operand signature, budget) for its
-entire lifetime, and every solve appends a record (kind, iterations,
-drift, residual) to ``history`` — the ``ConvergenceInfo`` diagnostics are
-captured in-graph, no per-iteration host round-trips.
+entire lifetime — the update path included.  Every step appends a record
+(kind, iterations, drift, residual) to ``history``; device scalars are
+recorded lazily and only materialized when ``history``/``meta()`` is read,
+so ``track_residuals=False`` streams never block on a per-solve host sync.
 
 Sessions checkpoint: ``sess.save(dir, step)`` persists the previous
 factorization + plan spec through ``repro.checkpoint`` (atomic, crash
 safe); ``Session.restore(dir, A)`` / ``sess.load_latest(dir)`` resume
-tracking where the stream left off.
+tracking where the stream left off — including ``track_residuals``,
+``restart_angle``, ``update_tol`` and the update counts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +64,7 @@ from repro.api.plan import plan as _make_plan
 from repro.api.results import Factorization
 from repro.api.spec import SVDSpec
 from repro.core._keys import resolve_key
-from repro.core.operators import as_operator
+from repro.core.operators import DenseOp, LowRankOp, as_operator
 
 Array = jax.Array
 
@@ -96,6 +116,16 @@ _DECAY_SLACK = 8       # iterations granted beyond the collapse index
 _REFINE_CAP = 0.75     # hard-spectrum cap as a fraction of the cold budget
 _BUDGET_QUANTUM = 4    # round budgets up to multiples (bounds recompiles)
 
+# update gate learning: an update is accepted when its measured residual
+# stays within a margin of the residual the *solver* itself achieves on
+# this stream (the gate's reference), floored so exact-rank operands with
+# ~eps residuals don't demand the impossible.  The reference comes only
+# from solver-produced factorizations — update-produced residuals never
+# ratchet the gate, so accumulated tail drift eventually fails the gate
+# and falls back to a real solve, which re-anchors the reference.
+_UPDATE_MARGIN = 4.0   # accepted when r_update <= margin * r_solver
+_UPDATE_FLOOR = 1e-5   # parity gate floor (matches the acceptance gate)
+
 
 class Session:
     """Stateful compile-once / solve-many tracker for one operand stream.
@@ -116,6 +146,13 @@ class Session:
                   append the relative residual ``||AᵀU − VΣ||/||Σ||`` to
                   each history record (r extra matvecs + one host sync per
                   solve); disable for latency-critical streams.
+    update_tol    parity gate for the zero-iteration update path taken by
+                  :meth:`delta`/:meth:`downdate`.  ``None`` (default)
+                  learns the gate from the stream (margin over the
+                  solver's own residual, floored at 1e-5); a positive
+                  float pins an absolute residual gate; ``0.0`` disables
+                  the update path entirely (every delta folds + re-solves,
+                  the pre-PR-7 behavior).
     """
 
     def __init__(self, A, spec: Optional[SVDSpec] = None, *,
@@ -123,6 +160,7 @@ class Session:
                  refine_iters: Optional[int] = None,
                  restart_angle: float = 0.5,
                  track_residuals: bool = True,
+                 update_tol: Optional[float] = None,
                  **overrides):
         spec = (spec or SVDSpec())
         if overrides:
@@ -143,10 +181,16 @@ class Session:
             self.spec.replace(max_iters=self.refine_iters), like=self.op)
         self.restart_angle = float(restart_angle)
         self.track_residuals = track_residuals
+        self.update_tol = None if update_tol is None else float(update_tol)
         self._key = key
         self._step = 0
         self.fact: Optional[Factorization] = None
-        self.history: list[dict] = []
+        self._history: list[dict] = []
+        # deferred state: the previous solve's ConvergenceInfo (budget
+        # learning reads it at the START of the next solve, keeping the
+        # solve itself sync-free) and the solver-residual gate reference.
+        self._pending_info = None
+        self._ref_residual: Optional[float] = None
 
     # --- key stream ---------------------------------------------------
     def _next_key(self, key: Optional[Array]) -> Array:
@@ -194,19 +238,112 @@ class Session:
         self.op = as_operator(A, backend=self.spec.backend)
         return self._tracked_solve(key)
 
-    def delta(self, delta_op, *, key: Optional[Array] = None
-              ) -> Factorization:
-        """Apply an additive drift ``A ← A + delta_op`` (e.g. a
-        ``LowRankOp`` rank-1 update) and solve.
+    def delta(self, delta_op, *, beta: float = 1.0,
+              key: Optional[Array] = None) -> Factorization:
+        """Apply an additive drift ``A ← beta * A + delta_op`` and solve.
 
-        Note each ``delta`` extends the operand's pytree *structure* (a
-        ``SumOp`` term), which keys a new executable — for long streams of
-        additive updates, fold the accumulated delta into one operand and
-        call :meth:`update` instead.
+        A ``LowRankOp`` delta first attempts the zero-iteration rank-k
+        update (:meth:`SolverPlan.update`); acceptance is gated on the
+        measured residual-after-update (see ``update_tol``).  Rejected or
+        ineligible deltas fall back to the refine/restart policy.  Dense
+        operands fold the delta in place (no ``SumOp`` structure growth,
+        so long delta streams keep reusing the same staged executables).
         """
-        self.op = self.op + as_operator(delta_op,
-                                        backend=self.spec.backend)
-        return self._tracked_solve(key)
+        dop = as_operator(delta_op, backend=self.spec.backend)
+        return self._apply_delta(dop, beta, key, kind="update")
+
+    def downdate(self, *, rows=None, cols=None,
+                 key: Optional[Array] = None) -> Factorization:
+        """Remove (zero) ``rows`` or ``cols`` of the tracked operand.
+
+        The removal is itself a rank-|idx| delta derived from the current
+        factorization (:func:`repro.core.update.row_removal_delta`), so it
+        rides the same gated update path; dense operands are zeroed
+        exactly, other operator kinds compose the removal delta.
+        """
+        if (rows is None) == (cols is None):
+            raise ValueError("pass exactly one of rows= / cols=")
+        if self.fact is None:
+            raise RuntimeError("downdate requires a previous solve; call "
+                               "solve() first")
+        from repro.core.update import col_removal_delta, row_removal_delta
+        dop = (row_removal_delta(self.fact, rows) if rows is not None
+               else col_removal_delta(self.fact, cols))
+        fold: Optional[Callable[[], Any]] = None
+        if isinstance(self.op, DenseOp):
+            base, A = self.op, self.op.A
+            idx = jnp.asarray(rows if rows is not None else cols, jnp.int32)
+            A2 = (A.at[idx, :].set(0) if rows is not None
+                  else A.at[:, idx].set(0))
+            fold = lambda: DenseOp(A2, backend=base.backend)  # noqa: E731
+        return self._apply_delta(dop, 1.0, key, kind="downdate", fold=fold)
+
+    # --- the three-way policy -----------------------------------------
+    def _fold(self, dop, beta):
+        """The post-delta operand.  Dense operands absorb the delta (and
+        any decay) in place — pytree structure, and therefore every staged
+        executable, stays stable across arbitrarily long delta streams.
+        Other operator kinds compose ``beta * op + dop``."""
+        if isinstance(self.op, DenseOp) and isinstance(dop, LowRankOp):
+            from repro.core.update import materialize_lowrank
+            W = materialize_lowrank(dop, backend=self.op.backend,
+                                    dtype=self.op.A.dtype)
+            A = self.op.A if beta == 1.0 else beta * self.op.A
+            return DenseOp(A + W, backend=self.op.backend)
+        base = self.op if beta == 1.0 else beta * self.op
+        return base + dop
+
+    def _update_eligible(self, dop) -> bool:
+        if self.fact is None or not isinstance(dop, LowRankOp):
+            return False
+        if self.update_tol is not None and self.update_tol <= 0.0:
+            return False        # update_tol=0.0: update path disabled
+        if tuple(dop.shape) != tuple(self.op.shape):
+            return False
+        from repro.core.update import delta_rank
+        return self.fact.rank + delta_rank(dop) <= min(self.op.shape)
+
+    def _update_gate(self) -> float:
+        if self.update_tol is not None:
+            return self.update_tol
+        if self._ref_residual is None:
+            # no solver residual on file (track_residuals off, or it was
+            # invalidated by a newer solve): measure the current
+            # factorization against the PRE-delta operand once, lazily.
+            self._ref_residual = self._residual(self.fact)
+        return max(_UPDATE_FLOOR, _UPDATE_MARGIN * self._ref_residual)
+
+    def _apply_delta(self, dop, beta, key, kind: str,
+                     fold: Optional[Callable[[], Any]] = None
+                     ) -> Factorization:
+        eligible = self._update_eligible(dop)
+        gate = self._update_gate() if eligible else None
+        new_op = self._fold(dop, beta) if fold is None else fold()
+        rejected = None
+        if eligible:
+            fact = self.plan.update(self.fact, dop, beta=beta)
+            r_upd = self._residual(fact, op=new_op)
+            if r_upd <= gate:
+                self.op = new_op
+                rec = {"step": self._step, "kind": kind, "drift": None,
+                       "iterations": 0, "breakdown": False,
+                       "residual_update": r_upd, "gate": gate}
+                if self.track_residuals:
+                    rec["residual"] = r_upd
+                self._history.append(rec)
+                self.fact = fact
+                self._step += 1
+                return fact
+            rejected = (r_upd, gate)
+        self.op = new_op
+        fact = self._tracked_solve(key)
+        if rejected is not None:
+            # the fallback solve appended its own record; annotate it with
+            # why the cheap path was not taken.
+            self._history[-1]["update_rejected"] = True
+            self._history[-1]["residual_update"] = rejected[0]
+            self._history[-1]["gate"] = rejected[1]
+        return fact
 
     def _learn_refine_iters(self, info) -> None:
         """Re-fit the refine budget to the observed GK residual trace.
@@ -235,6 +372,13 @@ class Session:
                 self.spec.replace(max_iters=learned), like=self.op)
 
     def _tracked_solve(self, key: Optional[Array]) -> Factorization:
+        # budget learning reads the PREVIOUS solve's residual trace here —
+        # before this solve picks its plan — so the learning timeline
+        # matches eager processing while the solve that produced the trace
+        # returned without blocking on it.
+        if self._pending_info is not None:
+            info, self._pending_info = self._pending_info, None
+            self._learn_refine_iters(info)
         drift = self.drift() if self.fact is not None else None
         refine = drift is not None and drift <= self.restart_angle
         if refine:
@@ -251,22 +395,31 @@ class Session:
                                          with_info=True)
             kind = "cold" if drift is None else "restart"
         budget = self.refine_iters if refine else None
-        self._learn_refine_iters(info)
+        self._pending_info = info
+        # iterations/breakdown stay device scalars here — `history` /
+        # `meta()` materialize them on read, so latency-critical streams
+        # (track_residuals=False) never block on this record.
         rec = {"step": self._step, "kind": kind, "drift": drift,
-               "iterations": int(fact.iterations),
-               "breakdown": bool(fact.breakdown)}
+               "iterations": fact.iterations,
+               "breakdown": fact.breakdown}
         if budget is not None:
             rec["budget"] = budget
         if self.track_residuals:
             rec["residual"] = self._residual(fact)
-        self.history.append(rec)
+            self._ref_residual = rec["residual"]
+        else:
+            # the old reference described a superseded factorization; the
+            # update gate re-measures lazily when next needed.
+            self._ref_residual = None
+        self._history.append(rec)
         self.fact = fact
         self._step += 1
         return fact
 
-    def _residual(self, fact: Factorization) -> float:
+    def _residual(self, fact: Factorization, op=None) -> float:
+        op = self.op if op is None else op
         compute = jnp.promote_types(fact.U.dtype, jnp.float32)
-        ATU = self.op.rmatmat(fact.U.astype(compute))
+        ATU = op.rmatmat(fact.U.astype(compute))
         num = jnp.linalg.norm(ATU - fact.V.astype(compute)
                               * fact.s[None, :].astype(compute))
         return float(num / jnp.maximum(jnp.linalg.norm(fact.s), 1e-30))
@@ -276,19 +429,40 @@ class Session:
     def solves(self) -> int:
         return self._step
 
+    @property
+    def history(self) -> list[dict]:
+        """Per-step records.  Device scalars recorded by solves are
+        materialized (in place, once) on first read — reading history is
+        the sync point, not the solve that appended the record."""
+        for rec in self._history:
+            for k, v in rec.items():
+                if isinstance(v, (jax.Array, np.generic)):
+                    rec[k] = v.item()
+        return self._history
+
+    @history.setter
+    def history(self, value) -> None:
+        self._history = list(value)
+
     def counts(self) -> dict:
-        """{"cold": n, "refine": n, "restart": n} over the history."""
+        """Per-kind step counts over the history.  Always includes the
+        solver kinds (``cold``/``refine``/``restart``); ``update`` /
+        ``downdate`` keys appear once those paths have been taken."""
         out = {"cold": 0, "refine": 0, "restart": 0}
-        for rec in self.history:
-            out[rec["kind"]] += 1
+        for rec in self._history:
+            out[rec["kind"]] = out.get(rec["kind"], 0) + 1
         return out
 
     def meta(self) -> dict:
         """JSON-able session metadata (manifest ``extra`` payload)."""
+        c = self.counts()
         return {"spec": spec_to_dict(self.spec), "method": self.plan.method,
                 "refine_iters": self.refine_iters,
                 "auto_refine": self._auto_refine,
                 "restart_angle": self.restart_angle,
+                "track_residuals": self.track_residuals,
+                "update_tol": self.update_tol,
+                "updates": c.get("update", 0) + c.get("downdate", 0),
                 "step": self._step, "history": self.history}
 
     # --- persistence ----------------------------------------------------
@@ -322,6 +496,15 @@ class Session:
         self.history = list(meta["history"])
         self._auto_refine = bool(meta.get("auto_refine",
                                           self._auto_refine))
+        self.restart_angle = float(meta.get("restart_angle",
+                                            self.restart_angle))
+        self.track_residuals = bool(meta.get("track_residuals",
+                                             self.track_residuals))
+        if "update_tol" in meta:
+            tol = meta["update_tol"]
+            self.update_tol = None if tol is None else float(tol)
+        self._ref_residual = None
+        self._pending_info = None
         learned = int(meta.get("refine_iters", self.refine_iters))
         if learned != self.refine_iters:
             self.refine_iters = learned
@@ -333,7 +516,8 @@ class Session:
     def restore(cls, directory: str, A, *, key: Optional[Array] = None,
                 step: Optional[int] = None) -> "Session":
         """Rebuild a session around operand ``A`` from a checkpoint —
-        spec, factorization and history all come from the manifest."""
+        spec, factorization, policy knobs and history all come from the
+        manifest."""
         from repro.checkpoint.store import (latest_step,
                                             load_session_state)
         step = latest_step(directory) if step is None else step
@@ -343,7 +527,9 @@ class Session:
         fact, meta = load_session_state(directory, step)
         sess = cls(A, spec_from_dict(meta["spec"]), key=key,
                    refine_iters=meta.get("refine_iters"),
-                   restart_angle=meta.get("restart_angle", 0.5))
+                   restart_angle=meta.get("restart_angle", 0.5),
+                   track_residuals=meta.get("track_residuals", True),
+                   update_tol=meta.get("update_tol"))
         # carry the learned budget but keep learning if the original did
         sess._auto_refine = bool(meta.get("auto_refine", True))
         sess.fact = fact

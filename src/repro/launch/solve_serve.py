@@ -45,10 +45,16 @@ def run_traffic(server: SolveServer, requests, *, clients: int = 4,
                 req = next(it, None)
             if req is None:
                 return
+            if req.kind == "delta":
+                # structured tenant drift: ship only the low-rank factors
+                operand, kind = req.delta, "delta"
+            elif req.tenant is not None:
+                operand, kind = req.A, "factorize"
+            else:
+                operand, kind = req.A, req.kind
             for attempt in (0, 1):
                 try:
-                    server.solve(req.A, kind=req.kind if req.tenant is None
-                                 else "factorize", tenant=req.tenant,
+                    server.solve(operand, kind=kind, tenant=req.tenant,
                                  timeout=timeout)
                     with lock:
                         counts["ok"] += 1
@@ -86,6 +92,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--tenant-fraction", type=float, default=0.25)
     ap.add_argument("--estimate-fraction", type=float, default=0.0)
+    ap.add_argument("--structured-drift", action="store_true",
+                    help="tenant drifts are rank-k deltas shipped as "
+                         "kind='delta' requests (the serving stack's "
+                         "zero-iteration update path)")
+    ap.add_argument("--drift-rank", type=int, default=2,
+                    help="rank of each structured tenant drift")
     ap.add_argument("--quantum", type=int, default=32)
     ap.add_argument("--mode", choices=("exact", "shared"), default="exact")
     ap.add_argument("--max-batch", type=int, default=8)
@@ -114,7 +126,9 @@ def main(argv=None) -> dict:
     stream = synthetic_stream(
         args.requests, zipf_a=args.zipf_a, rank=args.rank,
         tenants=args.tenants, tenant_fraction=args.tenant_fraction,
-        estimate_fraction=args.estimate_fraction, seed=args.seed)
+        estimate_fraction=args.estimate_fraction,
+        structured_drift=args.structured_drift,
+        drift_rank=args.drift_rank, seed=args.seed)
     if not args.no_warmup:
         t0 = time.perf_counter()
         staged = server.warmup(DEFAULT_SHAPES,

@@ -95,19 +95,25 @@ def grad_spectrum(g: Array, k: int = 16, eps: float = 1e-6) -> dict:
         g = g.reshape(g.shape[0], -1)
     m, n = g.shape
     k = min(k, m, n)
-    res = gk_bidiag(DenseOp(g.astype(jnp.float32)), k, reorth_passes=2,
+    # run the recurrence past k (bounded slack) so near-degenerate spectra
+    # still resolve k clean Ritz values; the REPORTED rank is clamped to
+    # the k-vector actually returned — rank must never exceed len(sigma).
+    kk = min(4 * k, m, n)
+    res = gk_bidiag(DenseOp(g.astype(jnp.float32)), kk, reorth_passes=2,
                     key=jax.random.PRNGKey(0))  # deterministic diagnostic
     theta, _ = btb_eigh(res.alphas, res.betas, res.kprime)
     finite = jnp.where(jnp.isfinite(theta), jnp.clip(theta, 0.0, None), 0.0)
     sigma = jnp.sqrt(finite[:k])
     tol = jnp.max(finite) * eps
-    rank = jnp.sum(finite > tol).astype(jnp.int32)
+    rank = jnp.minimum(jnp.sum(finite > tol), k).astype(jnp.int32)
     # energy fraction against the FULL Frobenius energy, not just the
     # computed Ritz values (a white spectrum must not read as 100%)
     total = jnp.sum(jnp.square(g.astype(jnp.float32))) + 1e-30
     csum = jnp.cumsum(finite[:k])
     idx = jnp.clip(rank - 1, 0, k - 1)
-    energy_r = csum[idx] / total
+    # a zero / below-tolerance spectrum captures no energy at rank 0 — the
+    # unguarded csum[0]/total would report the top-1 fraction instead
+    energy_r = jnp.where(rank > 0, csum[idx] / total, 0.0)
     return {"sigma": sigma, "rank": rank, "energy_r": energy_r}
 
 

@@ -27,11 +27,11 @@ from repro.serve.bucket import (Bucketed, bucket_shape, embed, stack_buckets,
                                 unpad_factors)
 from repro.serve.server import ServeResult, SolveServer
 from repro.serve.tenant import TenantRegistry
-from repro.serve.traffic import Request, synthetic_stream
+from repro.serve.traffic import Request, lowrank_drift, synthetic_stream
 
 __all__ = [
     "Bucketed", "bucket_shape", "embed", "stack_buckets", "unpad_factors",
     "Cancelled", "ContinuousBatcher", "QueueFull", "Ticket",
     "TenantRegistry", "ServeResult", "SolveServer",
-    "Request", "synthetic_stream",
+    "Request", "lowrank_drift", "synthetic_stream",
 ]

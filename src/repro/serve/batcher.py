@@ -40,12 +40,22 @@ class Ticket:
 
     Created by :meth:`ContinuousBatcher.submit`; resolved (or failed) by
     the dispatch function on the worker thread.
+
+    State transitions (resolve / fail / cancel) are serialized by a
+    per-ticket lock: exactly ONE transition wins, so ``cancel()`` returns
+    True only when the cancel actually preempted a result — it can no
+    longer race the worker's ``_resolve`` and claim a delivered result was
+    cancelled.  The backpressure slot a ticket occupies in its batcher is
+    released exactly once (at cancel time, flush time, or shutdown —
+    whichever comes first).
     """
 
     __slots__ = ("group", "payload", "submitted_at", "dispatched_at",
-                 "latency_ms", "_done", "_result", "_error", "_cancelled")
+                 "latency_ms", "_done", "_result", "_error", "_cancelled",
+                 "_lock", "_released", "_batcher")
 
-    def __init__(self, group: Hashable, payload: Any):
+    def __init__(self, group: Hashable, payload: Any,
+                 batcher: Optional["ContinuousBatcher"] = None):
         self.group = group
         self.payload = payload
         self.submitted_at = time.perf_counter()
@@ -55,6 +65,9 @@ class Ticket:
         self._result: Any = None
         self._error: Optional[BaseException] = None
         self._cancelled = False
+        self._lock = threading.Lock()
+        self._released = False
+        self._batcher = batcher
 
     # --- client side ---------------------------------------------------
     @property
@@ -69,13 +82,19 @@ class Ticket:
         """Cancel if not already completed; True when the cancel won.
 
         A cancelled ticket never reaches the solver (the worker drops it
-        at flush time); any thread blocked in :meth:`result` gets
+        at flush time) and immediately stops occupying the batcher's
+        backpressure budget; any thread blocked in :meth:`result` gets
         :class:`Cancelled`.
         """
-        if self._done.is_set():
-            return False
-        self._cancelled = True
-        self._fail(Cancelled("request cancelled"))
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._cancelled = True
+            self.latency_ms = (time.perf_counter()
+                               - self.submitted_at) * 1e3
+            self._error = Cancelled("request cancelled")
+            self._done.set()
+        self._release_slot()
         return True
 
     def result(self, timeout: Optional[float] = None) -> Any:
@@ -91,18 +110,39 @@ class Ticket:
 
     # --- worker side ---------------------------------------------------
     def _resolve(self, result: Any) -> None:
-        if self._done.is_set():
-            return
-        self.latency_ms = (time.perf_counter() - self.submitted_at) * 1e3
-        self._result = result
-        self._done.set()
+        with self._lock:
+            if self._done.is_set():
+                return
+            self.latency_ms = (time.perf_counter()
+                               - self.submitted_at) * 1e3
+            self._result = result
+            self._done.set()
 
     def _fail(self, exc: BaseException) -> None:
-        if self._done.is_set():
-            return
-        self.latency_ms = (time.perf_counter() - self.submitted_at) * 1e3
-        self._error = exc
-        self._done.set()
+        with self._lock:
+            if self._done.is_set():
+                return
+            self.latency_ms = (time.perf_counter()
+                               - self.submitted_at) * 1e3
+            self._error = exc
+            self._done.set()
+
+    def _release_slot(self) -> None:
+        """Give the batcher's backpressure slot back, exactly once.
+
+        Callable from the client (cancel), the worker (flush) and the
+        shutdown drain; the per-ticket lock arbitrates, so concurrent
+        callers can never double-decrement ``_pending_n``.  Lock order is
+        always ticket → batcher (never the reverse), so no deadlock.
+        """
+        with self._lock:
+            if self._released:
+                return
+            self._released = True
+        b = self._batcher
+        if b is not None:
+            with b._lock:
+                b._pending_n -= 1
 
 
 DispatchFn = Callable[[Hashable, List[Ticket]], None]
@@ -154,7 +194,7 @@ class ContinuousBatcher:
                     f"{self._pending_n} requests already queued "
                     f"(max_queue={self.max_queue}); retry with backoff")
             self._pending_n += 1
-        ticket = Ticket(group, payload)
+        ticket = Ticket(group, payload, batcher=self)
         self._intake.put(ticket)
         return ticket
 
@@ -208,6 +248,7 @@ class ContinuousBatcher:
             for batch in pending.values():
                 for t in batch:
                     t._fail(Cancelled("batcher stopped"))
+                    t._release_slot()
             self._stopped.set()
 
     def _flush(self, pending, oldest, group: Hashable) -> None:
@@ -215,8 +256,10 @@ class ContinuousBatcher:
         oldest.pop(group, None)
         if not batch:
             return
-        with self._lock:
-            self._pending_n -= len(batch)
+        # cancelled tickets released their slot at cancel time; the rest
+        # release here — _release_slot is exactly-once per ticket.
+        for t in batch:
+            t._release_slot()
         live = [t for t in batch if not t.cancelled]
         if not live:
             return

@@ -15,6 +15,12 @@ serves three request kinds through a single dispatch worker:
 * tenant ``factorize`` — routed to the tenant's
   :class:`~repro.api.session.Session`; repeat requests run the tracked
   refine path (strictly fewer GK iterations than cold).
+* tenant ``delta`` — a *structured drift* against the tenant's tracked
+  state: the payload is the low-rank drift itself (``LowRankOp`` or raw
+  ``(U, s, Vt)`` factors), not a full operand.  Routed through
+  ``Session.delta``, which takes the zero-iteration rank-k update path
+  when the measured residual passes the parity gate (see
+  ``repro.core.update``) and falls back to refine/restart otherwise.
 
 Accuracy contract: in ``mode="exact"`` (default) every solver input is
 the caller's logical operand, bit-for-bit — padding is transport-only.
@@ -41,7 +47,7 @@ import numpy as np
 
 from repro.api.plan import SolverPlan, plan as _make_plan, plan_cache_stats
 from repro.api.spec import SVDSpec
-from repro.core.operators import DenseOp
+from repro.core.operators import DenseOp, LowRankOp
 from repro.runtime.telemetry import LatencyStats
 from repro.serve.batcher import ContinuousBatcher, QueueFull, Ticket
 from repro.serve.bucket import (DEFAULT_QUANTUM, Bucketed, embed,
@@ -50,7 +56,7 @@ from repro.serve.tenant import TenantRegistry
 
 Array = jax.Array
 
-_KINDS = ("factorize", "estimate")
+_KINDS = ("factorize", "estimate", "delta")
 _MODES = ("exact", "shared")
 
 
@@ -181,12 +187,26 @@ class SolveServer:
         if kind == "estimate" and tenant is not None:
             raise ValueError("estimate requests are stateless; "
                              "tenant routing applies to factorize only")
-        b = embed(A, self.quantum)
-        payload = {"bucketed": b, "kind": kind, "tenant": tenant,
-                   "seq": self._next_seq()}
+        if kind == "delta":
+            # structured drift against a tenant's tracked state: ``A`` is
+            # the drift itself — a LowRankOp or raw (U, s, Vt) factors —
+            # not an operand, so it bypasses bucketing entirely.  The
+            # group stays ("tenant", id): deltas serialize FIFO with the
+            # tenant's factorize requests on the dispatch worker.
+            if tenant is None:
+                raise ValueError("delta requests require tenant= routing; "
+                                 "there is no anonymous tracked state to "
+                                 "update")
+            payload = {"delta": A, "kind": kind, "tenant": tenant,
+                       "seq": self._next_seq()}
+            group: Hashable = ("tenant", str(tenant))
+        else:
+            b = embed(A, self.quantum)
+            payload = {"bucketed": b, "kind": kind, "tenant": tenant,
+                       "seq": self._next_seq()}
+            group = self._group(kind, tenant, b)
         try:
-            ticket = self.batcher.submit(self._group(kind, tenant, b),
-                                         payload)
+            ticket = self.batcher.submit(group, payload)
         except QueueFull:
             with self._lock:
                 self._counters["rejected"] += 1
@@ -363,12 +383,30 @@ class SolveServer:
             t._resolve(ServeResult(kind="estimate", value=res,
                                    batch=len(tickets)))
 
+    @staticmethod
+    def _as_lowrank(delta) -> LowRankOp:
+        if isinstance(delta, LowRankOp):
+            return delta
+        U, s, Vt = delta
+        return LowRankOp(jnp.asarray(U), jnp.asarray(s), jnp.asarray(Vt))
+
     def _dispatch_tenant(self, tickets: List[Ticket]) -> None:
         for t in tickets:
             tid = t.payload["tenant"]
-            A = t.payload["bucketed"].extract()
-            sess = self.tenants.get(tid, A)
-            fact = sess.update(A, key=self._request_key(t.payload["seq"]))
+            key = self._request_key(t.payload["seq"])
+            if t.payload["kind"] == "delta":
+                sess = self.tenants.touch(tid)
+                if sess is None or sess.fact is None:
+                    t._fail(RuntimeError(
+                        f"tenant {tid!r}: delta before any factorize — "
+                        "there is no tracked state to update"))
+                    continue
+                dop = self._as_lowrank(t.payload["delta"])
+                fact = sess.delta(dop, key=key)
+            else:
+                A = t.payload["bucketed"].extract()
+                sess = self.tenants.get(tid, A)
+                fact = sess.update(A, key=key)
             rec = sess.history[-1]
             t._resolve(ServeResult(
                 kind="tenant", value=fact, batch=len(tickets),

@@ -47,7 +47,8 @@ class TenantRegistry:
                  checkpoint_dir: Optional[str] = None,
                  key: Optional[Array] = None,
                  refine_iters: Optional[int] = None,
-                 restart_angle: float = 0.5):
+                 restart_angle: float = 0.5,
+                 update_tol: Optional[float] = None):
         if max_tenants < 1:
             raise ValueError(f"max_tenants must be >= 1, got {max_tenants}")
         self.spec = spec or SVDSpec()
@@ -55,6 +56,9 @@ class TenantRegistry:
         self.checkpoint_dir = checkpoint_dir
         self.refine_iters = refine_iters
         self.restart_angle = float(restart_angle)
+        # parity gate for the zero-iteration structured-drift path; None
+        # lets each session learn it from its own stream (see Session).
+        self.update_tol = update_tol
         self._key = key if key is not None else jax.random.key(0)
         self._sessions: "collections.OrderedDict[str, Session]" = \
             collections.OrderedDict()
@@ -98,16 +102,31 @@ class TenantRegistry:
         self._counters["creates"] += 1
         # track_residuals costs r extra matvecs + a host sync per solve —
         # a latency-critical serving session reads residuals from the
-        # in-graph ConvergenceInfo instead.
+        # in-graph ConvergenceInfo instead.  Structured-drift (delta)
+        # requests still hit the gated update path: the session measures
+        # its gate reference lazily, only when the first delta arrives.
         return Session(A, self.spec, key=key,
                        refine_iters=self.refine_iters,
                        restart_angle=self.restart_angle,
-                       track_residuals=False)
+                       track_residuals=False,
+                       update_tol=self.update_tol)
 
     def _checkpoint(self, tenant_id: str, sess: Session) -> None:
         directory = self._tenant_dir(tenant_id)
         if directory is not None and sess.fact is not None:
             sess.save(directory, keep=1)
+
+    def touch(self, tenant_id: str) -> Optional[Session]:
+        """The tenant's live session, bumped to most-recently-used; None
+        when not resident.  Delta (structured-drift) requests route here:
+        unlike :meth:`get` they carry no full operand to create a session
+        around, so a missing tenant is the caller's error to surface."""
+        with self._lock:
+            sess = self._sessions.get(tenant_id)
+            if sess is not None:
+                self._sessions.move_to_end(tenant_id)
+                self._counters["reuses"] += 1
+            return sess
 
     # --- maintenance ----------------------------------------------------
     def peek(self, tenant_id: str) -> Optional[Session]:

@@ -26,12 +26,19 @@ DEFAULT_SHAPES: Tuple[Tuple[int, int], ...] = (
 
 @dataclasses.dataclass
 class Request:
-    """One synthetic serve request."""
+    """One synthetic serve request.
+
+    ``kind="delta"`` carries the low-rank drift factors in ``delta``
+    (``(U, s, Vt)`` with ``U (m, k)``, ``s (k,)``, ``Vt (k, n)``); ``A``
+    is then the *post-drift* operand — kept for accuracy checking on the
+    consumer side, never shipped to the server.
+    """
 
     A: np.ndarray
     shape: Tuple[int, int]
     tenant: Optional[str] = None
     kind: str = "factorize"
+    delta: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
 
 
 def zipf_choice(rng: np.random.Generator, k: int, size: int,
@@ -58,6 +65,21 @@ def lowrank_operand(rng: np.random.Generator, shape: Tuple[int, int],
     return np.asarray(A, dtype=dtype)
 
 
+def lowrank_drift(rng: np.random.Generator, A: np.ndarray, *,
+                  drift: float, drift_rank: int, dtype=np.float32
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Rank-``drift_rank`` drift factors ``(U, s, Vt)`` with
+    ``||U diag(s) Vt||_F = drift * ||A||_F``."""
+    m, n = A.shape
+    k = max(1, min(drift_rank, m, n))
+    U = rng.standard_normal((m, k)).astype(dtype)
+    Vt = rng.standard_normal((k, n)).astype(dtype)
+    W = U @ Vt
+    scale = drift * np.linalg.norm(A) / max(np.linalg.norm(W), 1e-30)
+    s = np.full((k,), scale, dtype)
+    return U, s, Vt
+
+
 def synthetic_stream(n_requests: int, *,
                      shapes: Sequence[Tuple[int, int]] = DEFAULT_SHAPES,
                      zipf_a: float = 1.1,
@@ -66,6 +88,8 @@ def synthetic_stream(n_requests: int, *,
                      tenant_fraction: float = 0.25,
                      drift: float = 1e-3,
                      estimate_fraction: float = 0.0,
+                     structured_drift: bool = False,
+                     drift_rank: int = 2,
                      seed: int = 0) -> Iterator[Request]:
     """Yield ``n_requests`` synthetic :class:`Request`\\ s.
 
@@ -74,6 +98,13 @@ def synthetic_stream(n_requests: int, *,
     by ``drift`` (relative Frobenius) per request — small enough that the
     Session refine path stays engaged.  ``estimate_fraction`` converts
     that share of the anonymous stream into rank-estimate requests.
+
+    ``structured_drift=True`` makes every tenant drift a rank-
+    ``drift_rank`` *structured* perturbation shipped as a ``kind="delta"``
+    request (the factors, not the operand) — the regime where the serving
+    stack's zero-iteration update path engages.  Tenant first-contact
+    operands are then exactly rank-``rank`` (no additive noise), matching
+    how a real incremental stream starts from a factorized state.
     """
     rng = np.random.default_rng(seed)
     shapes = [tuple(s) for s in shapes]
@@ -85,12 +116,24 @@ def synthetic_stream(n_requests: int, *,
             A = tenant_state.get(tid)
             if A is None:
                 shape = shapes[picks[i]]
-                A = lowrank_operand(rng, shape, rank)
-            else:
-                step = rng.standard_normal(A.shape).astype(A.dtype)
-                scale = drift * np.linalg.norm(A) / max(
-                    np.linalg.norm(step), 1e-30)
-                A = A + scale * step
+                noise = 0.0 if structured_drift else 1e-3
+                A = lowrank_operand(rng, shape, rank, noise=noise)
+                tenant_state[tid] = A
+                yield Request(A=A, shape=tuple(A.shape), tenant=tid)
+                continue
+            if structured_drift:
+                U, s, Vt = lowrank_drift(rng, A, drift=drift,
+                                         drift_rank=drift_rank,
+                                         dtype=A.dtype)
+                A = (A + (U * s) @ Vt).astype(A.dtype)
+                tenant_state[tid] = A
+                yield Request(A=A, shape=tuple(A.shape), tenant=tid,
+                              kind="delta", delta=(U, s, Vt))
+                continue
+            step = rng.standard_normal(A.shape).astype(A.dtype)
+            scale = drift * np.linalg.norm(A) / max(
+                np.linalg.norm(step), 1e-30)
+            A = A + scale * step
             tenant_state[tid] = A
             yield Request(A=A, shape=tuple(A.shape), tenant=tid)
             continue
@@ -101,5 +144,5 @@ def synthetic_stream(n_requests: int, *,
                       kind=kind)
 
 
-__all__ = ["DEFAULT_SHAPES", "Request", "lowrank_operand",
-           "synthetic_stream", "zipf_choice"]
+__all__ = ["DEFAULT_SHAPES", "Request", "lowrank_drift",
+           "lowrank_operand", "synthetic_stream", "zipf_choice"]

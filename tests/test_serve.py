@@ -16,7 +16,8 @@ from repro.api import (SVDSpec, clear_plan_cache, plan, plan_cache_stats,
                        trace_count)
 from repro.serve import (Cancelled, ContinuousBatcher, QueueFull,
                          SolveServer, bucket_shape, embed, unpad_factors)
-from repro.serve.traffic import lowrank_operand, synthetic_stream
+from repro.serve.traffic import (lowrank_drift, lowrank_operand,
+                                 synthetic_stream)
 from test_solver_parity import ZOO
 
 KEY = jax.random.PRNGKey(3)
@@ -177,6 +178,72 @@ def test_batcher_stop_drains_queued_work():
         b.submit("g", 99)
 
 
+def test_batcher_resolve_cancel_race_exactly_one_wins(blocked_batcher):
+    """Regression: a client cancel racing the worker's resolve must pick
+    exactly one winner — never a resolved ticket that also reports
+    ``cancelled``, never a lost slot."""
+    b, started, release, _ = blocked_batcher
+    b.submit("g", "blocker")
+    assert started.wait(timeout=5.0)
+    for trial in range(50):
+        t = b.submit("g", trial)
+        outcome = {}
+        barrier = threading.Barrier(2)
+
+        def do_cancel():
+            barrier.wait()
+            outcome["cancel"] = t.cancel()
+
+        def do_resolve():
+            barrier.wait()
+            t._resolve("solved")
+
+        th = [threading.Thread(target=do_cancel),
+              threading.Thread(target=do_resolve)]
+        for x in th:
+            x.start()
+        for x in th:
+            x.join()
+        assert t.done
+        if outcome["cancel"]:
+            # cancel won: the result path must raise Cancelled forever
+            with pytest.raises(Cancelled):
+                t.result(timeout=0.0)
+            assert t.cancelled
+        else:
+            # resolve won: the cancel was truthful about losing
+            assert t.result(timeout=0.0) == "solved"
+            assert not t.cancelled
+        t._release_slot()        # the worker never flushes these tickets
+    # every trial slot came back exactly once (the parked blocker's slot
+    # was already released at flush time) — no leak, no double-decrement
+    assert b.pending == 0
+    release.set()
+
+
+def test_batcher_cancel_frees_backpressure_slot(blocked_batcher):
+    """Regression: cancelled tickets must give their queue slot back at
+    cancel time, not at the next flush — otherwise a burst of cancels
+    wedges the intake at max_queue."""
+    b, started, release, _ = blocked_batcher
+    b.submit("g", "blocker")
+    assert started.wait(timeout=5.0)
+    victims = [b.submit("g", i) for i in range(3)]   # max_queue reached
+    with pytest.raises(QueueFull):
+        b.submit("g", "overflow")
+    for v in victims:
+        assert v.cancel() is True
+        assert v.cancel() is False                   # idempotent
+    assert b.pending == 0                            # all slots returned
+    # the freed slots are immediately usable while the worker is parked
+    replacements = [b.submit("g", f"r{i}") for i in range(3)]
+    release.set()
+    for t in replacements:
+        assert t.result(timeout=5.0) == "ok"
+    b.stop()
+    assert b.pending == 0                            # never negative, drained
+
+
 def test_batcher_dispatch_error_fails_whole_batch():
     def dispatch(group, tickets):
         raise ValueError("solver exploded")
@@ -247,6 +314,46 @@ def test_tenant_repeat_requests_strictly_fewer_iterations():
     assert stats["tenant_requests"] == 3
     assert stats["tenants"]["creates"] == 1
     assert stats["tenants"]["reuses"] == 2
+
+
+def test_server_delta_requests_hit_update_path():
+    """Structured tenant drift shipped as kind="delta" takes the Session
+    update branch: zero GK iterations per drift, accuracy tracking the
+    dense SVD of the drifted operand."""
+    rng = np.random.default_rng(7)
+    A = lowrank_operand(rng, (48, 32), 4, noise=0.0)   # exact rank
+    with SolveServer(SERVE_SPEC, max_batch=2, window_ms=2.0,
+                     key=jax.random.key(8)) as server:
+        res0 = server.solve(A, tenant="acme", timeout=120.0)
+        assert res0.meta["kind"] == "cold"
+        for _ in range(3):
+            U, s, Vt = lowrank_drift(rng, A, drift=1e-3, drift_rank=2)
+            res = server.solve((U, s, Vt), kind="delta", tenant="acme",
+                               timeout=120.0)
+            A = A + (U * s) @ Vt
+            assert res.kind == "tenant"
+            assert res.meta["kind"] == "update"
+            assert res.meta["iterations"] == 0
+        stats = server.stats()
+    s_true = np.linalg.svd(A, compute_uv=False)[:4]
+    err = np.max(np.abs(np.asarray(res.value.s) - s_true)) / s_true[0]
+    assert err < 1e-4
+    assert stats["tenant_requests"] == 4
+    assert stats["tenants"]["creates"] == 1
+
+
+def test_server_delta_requires_tracked_state():
+    rng = np.random.default_rng(8)
+    A = lowrank_operand(rng, (48, 32), 4)
+    U, s, Vt = lowrank_drift(rng, A, drift=1e-3, drift_rank=2)
+    with SolveServer(SERVE_SPEC, key=jax.random.key(9)) as server:
+        # anonymous deltas are meaningless — rejected at submit
+        with pytest.raises(ValueError):
+            server.submit((U, s, Vt), kind="delta")
+        # a tenant with no prior factorize has no state to update
+        with pytest.raises(RuntimeError, match="delta before any"):
+            server.solve((U, s, Vt), kind="delta", tenant="ghost",
+                         timeout=120.0)
 
 
 def test_estimate_requests_are_stateless():

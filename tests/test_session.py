@@ -80,6 +80,8 @@ def test_drift_is_zero_for_unchanged_operator():
 
 
 def test_delta_lowrank_update():
+    """A structured low-rank drift takes the zero-iteration update branch
+    (PR 7 three-way policy) at the same accuracy gate as a GK solve."""
     A, _ = ZOO["lowrank_noise"]
     m, n = A.shape
     sess = session(A, SPEC, key=KEY)
@@ -89,7 +91,27 @@ def test_delta_lowrank_update():
     scale = 1e-3 * float(jnp.linalg.norm(A)) / float(
         jnp.linalg.norm(u) * jnp.linalg.norm(v))
     fact = sess.delta(LowRankOp(u, jnp.asarray([scale]), v))
+    assert sess.history[-1]["kind"] == "update"
+    assert sess.history[-1]["iterations"] == 0
+    assert sess.counts()["update"] == 1
+    A2 = A + scale * (u @ v)
+    assert _accuracy(fact, A2) <= STOL
+
+
+def test_delta_update_disabled_falls_back_to_refine():
+    """update_tol=0.0 disables the update path: the pre-PR-7 behavior
+    (fold + tracked GK solve) for every delta."""
+    A, _ = ZOO["lowrank_noise"]
+    m, n = A.shape
+    sess = session(A, SPEC, key=KEY, update_tol=0.0)
+    sess.solve()
+    u = jax.random.normal(jax.random.fold_in(KEY, 5), (m, 1))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (1, n))
+    scale = 1e-3 * float(jnp.linalg.norm(A)) / float(
+        jnp.linalg.norm(u) * jnp.linalg.norm(v))
+    fact = sess.delta(LowRankOp(u, jnp.asarray([scale]), v))
     assert sess.history[-1]["kind"] == "refine"
+    assert "update" not in sess.counts()
     A2 = A + scale * (u @ v)
     assert _accuracy(fact, A2) <= STOL
 

@@ -27,6 +27,26 @@ def test_grad_spectrum_full_rank(rng):
     assert float(out["energy_r"]) < 0.9     # white spectrum: top-8 is partial
 
 
+def test_grad_spectrum_zero_gradient():
+    """A dead layer (all-zero gradient) reports rank 0 and energy 0 —
+    not NaN from a 0/0 energy ratio."""
+    out = grad_spectrum(jnp.zeros((64, 48)), k=8)
+    assert int(out["rank"]) == 0
+    assert float(out["energy_r"]) == 0.0
+    assert bool(jnp.all(jnp.isfinite(out["sigma"])))
+
+
+def test_grad_spectrum_rank_clamped_to_k(rng):
+    """Regression: numerical rank above the probe width must clamp to k —
+    ``rank`` indexes the k-vector ``sigma``, so kprime > k would read out
+    of bounds (or report a rank the sketch never certified)."""
+    g = make_lowrank(rng, 96, 72, 8)        # true rank 8, probed with k=4
+    out = grad_spectrum(g, k=4)
+    assert int(out["rank"]) == 4
+    assert out["sigma"].shape == (4,)
+    assert 0.0 < float(out["energy_r"]) <= 1.0
+
+
 def test_summary_on_model_grads():
     cfg = get_arch("stablelm-1.6b").reduced()
     params, _ = M.init_model(cfg, jax.random.PRNGKey(0))

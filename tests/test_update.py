@@ -1,0 +1,313 @@
+"""Rank-k update / downdate path (PR 7): ``repro.core.update``, the
+``SolverPlan.update`` staging and the ``Session`` three-way policy.
+
+The acceptance battery: ``update_factorization`` on a rank-k drifted
+exact-rank operand must match a cold ``factorize`` of the drifted matrix
+to the parity gate (1e-5 * sigma_max on singular values, principal-angle
+cosines ~1) with ZERO GK iterations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lowrank
+from repro.api import (LowRankOp, Session, SVDSpec, clear_plan_cache,
+                       downdate_cols, downdate_rows, factorize, plan,
+                       session, trace_count, update_factorization)
+from repro.core.update import (col_removal_delta, delta_factors, delta_rank,
+                               materialize_lowrank, row_removal_delta)
+from test_solver_parity import ZOO
+
+KEY = jax.random.PRNGKey(77)
+
+M, N, R = 96, 64, 8
+SPEC = SVDSpec(method="fsvd", rank=R, max_iters=48)
+GATE = 1e-5          # the acceptance parity gate (vs sigma_max)
+
+
+def _exact(key=KEY, m=M, n=N, r=R):
+    return make_lowrank(key, m, n, r)
+
+
+def _delta(key, m=M, n=N, k=2, rel=1e-2, ref=None):
+    ku, kv = jax.random.split(key)
+    U = jax.random.normal(ku, (m, k))
+    Vt = jax.random.normal(kv, (k, n))
+    scale = 1.0 if ref is None else rel * float(
+        jnp.linalg.norm(ref)) / float(jnp.linalg.norm(U @ Vt))
+    return LowRankOp(U, jnp.full((k,), scale), Vt)
+
+
+def _sigma_err(fact, A) -> float:
+    s_true = jnp.linalg.svd(A, compute_uv=False)
+    return float(jnp.max(jnp.abs(fact.s - s_true[: fact.rank]))
+                 / s_true[0])
+
+
+def _subspace_cos(fact, A) -> float:
+    _, _, Vt = jnp.linalg.svd(A, full_matrices=False)
+    cos = jnp.linalg.svd(Vt[: fact.rank] @ fact.V, compute_uv=False)
+    return float(jnp.min(cos))
+
+
+# ---------------------------------------------------------------------------
+# core: update_factorization parity
+# ---------------------------------------------------------------------------
+
+def test_update_matches_cold_factorize_exact():
+    """Acceptance: rank-k update of an exact rank-r factorization matches
+    the dense SVD of the drifted matrix to the parity gate — zero GK."""
+    A = _exact()
+    fact = factorize(A, SPEC, key=KEY)
+    d = _delta(jax.random.fold_in(KEY, 1), ref=A)
+    upd = update_factorization(fact, d)
+    A2 = A + materialize_lowrank(d)
+    assert int(upd.iterations) == 0
+    assert upd.method == "update"
+    assert _sigma_err(upd, A2) <= GATE
+    assert _subspace_cos(upd, A2) >= 1.0 - 1e-5
+
+
+def test_update_on_zoo_lowrank_matches_gk_parity():
+    """On the parity zoo's gapped operand the update stays within the GK
+    battery's own accuracy gate (the unabsorbed noise tail is what the
+    Session gate then measures)."""
+    A, _ = ZOO["lowrank_noise"]
+    spec = SVDSpec(method="fsvd", rank=R, max_iters=48)
+    fact = factorize(A, spec, key=KEY)
+    d = _delta(jax.random.fold_in(KEY, 2), m=A.shape[0], n=A.shape[1],
+               rel=1e-3, ref=A)
+    upd = update_factorization(fact, d)
+    A2 = A + materialize_lowrank(d)
+    cold = factorize(A2, spec, key=jax.random.fold_in(KEY, 3))
+    assert int(upd.iterations) == 0
+    assert _sigma_err(upd, A2) <= max(5e-4, 2.0 * _sigma_err(cold, A2))
+
+
+def test_update_beta_decay():
+    """``beta`` scales the tracked part before the delta lands."""
+    A = _exact()
+    fact = factorize(A, SPEC, key=KEY)
+    d = _delta(jax.random.fold_in(KEY, 4), ref=A)
+    upd = update_factorization(fact, d, beta=0.5)
+    A2 = 0.5 * A + materialize_lowrank(d)
+    assert _sigma_err(upd, A2) <= GATE
+
+
+def test_update_with_scale_and_extras():
+    """``LowRankOp.scale`` and ``extra`` terms fold into the delta
+    factors; ``delta_rank`` counts them."""
+    A = _exact()
+    fact = factorize(A, SPEC, key=KEY)
+    d0 = _delta(jax.random.fold_in(KEY, 5), k=1, ref=A)
+    L = 1e-3 * jax.random.normal(jax.random.fold_in(KEY, 6), (M, 1))
+    Rf = jax.random.normal(jax.random.fold_in(KEY, 7), (1, N))
+    d = LowRankOp(d0.U, d0.s, d0.Vt, scale=2.0, extra=((L, Rf),))
+    assert delta_rank(d) == 2
+    C, D = delta_factors(d)
+    np.testing.assert_allclose(np.asarray(C @ D.T),
+                               np.asarray(materialize_lowrank(d)),
+                               rtol=1e-5, atol=1e-5)
+    upd = update_factorization(fact, d)
+    A2 = A + materialize_lowrank(d)
+    assert _sigma_err(upd, A2) <= GATE
+
+
+def test_downdate_rows_and_cols():
+    """Row/column removal is exact on the factored operator: zeroed
+    slices vanish, the rest matches the dense SVD of the slashed
+    matrix."""
+    A = _exact()
+    fact = factorize(A, SPEC, key=KEY)
+    rows = [3, 17, 40]
+    down = downdate_rows(fact, rows)
+    A2 = A.at[jnp.asarray(rows), :].set(0)
+    assert int(down.iterations) == 0
+    assert _sigma_err(down, A2) <= GATE
+    approx = (down.U * down.s[None, :]) @ down.V.T
+    assert float(jnp.max(jnp.abs(approx[jnp.asarray(rows), :]))) <= \
+        1e-4 * float(jnp.linalg.norm(A))
+
+    cols = [0, 5]
+    down_c = downdate_cols(fact, cols)
+    A3 = A.at[:, jnp.asarray(cols)].set(0)
+    assert _sigma_err(down_c, A3) <= GATE
+    d_r = row_removal_delta(fact, rows)
+    d_c = col_removal_delta(fact, cols)
+    assert delta_rank(d_r) == 3 and delta_rank(d_c) == 2
+
+
+# ---------------------------------------------------------------------------
+# plan staging
+# ---------------------------------------------------------------------------
+
+def test_plan_update_compiles_once_across_deltas_and_betas():
+    """One staged executable covers every same-signature delta and every
+    beta (beta is passed traced)."""
+    A = _exact()
+    p = plan(SPEC, like=A)
+    fact, _ = p.solve(A, key=KEY, with_info=True)
+    clear_plan_cache()
+    p = plan(SPEC, like=A)
+    fact = factorize(A, SPEC, key=KEY)
+    base = trace_count()
+    for t, beta in enumerate((1.0, 0.9, 1.0, 0.5)):
+        d = _delta(jax.random.fold_in(KEY, 30 + t), ref=A)
+        upd = p.update(fact, d, beta=beta)
+        A2 = beta * A + materialize_lowrank(d)
+        assert _sigma_err(upd, A2) <= GATE
+    assert trace_count() - base == 1
+    clear_plan_cache()
+
+
+def test_plan_update_rejects_non_lowrank_delta():
+    A = _exact()
+    p = plan(SPEC, like=A)
+    fact = factorize(A, SPEC, key=KEY)
+    with pytest.raises(TypeError):
+        p.update(fact, jnp.ones_like(A))
+
+
+# ---------------------------------------------------------------------------
+# session three-way policy
+# ---------------------------------------------------------------------------
+
+def test_session_delta_stream_zero_iterations():
+    """A stream of structured drifts rides the update branch end to end —
+    zero GK iterations after the cold solve, accuracy held."""
+    A = _exact()
+    sess = session(A, SPEC, key=KEY)
+    sess.solve()
+    cur = A
+    for t in range(4):
+        d = _delta(jax.random.fold_in(KEY, 50 + t), rel=1e-3, ref=cur)
+        fact = sess.delta(d)
+        cur = cur + materialize_lowrank(d)
+        assert sess.history[-1]["kind"] == "update"
+        assert sess.history[-1]["iterations"] == 0
+        assert _sigma_err(fact, cur) <= 1e-4
+    assert sess.counts()["update"] == 4
+    assert sess.meta()["updates"] == 4
+
+
+def test_session_gate_rejects_and_annotates():
+    """A pinned impossible gate forces rejection: the fallback GK solve
+    runs and the history records why the cheap path was not taken."""
+    A, _ = ZOO["lowrank_noise"]
+    sess = session(A, SVDSpec(method="fsvd", rank=R, max_iters=48),
+                   key=KEY, update_tol=1e-12)
+    sess.solve()
+    d = _delta(jax.random.fold_in(KEY, 60), m=A.shape[0], n=A.shape[1],
+               rel=1e-3, ref=A)
+    sess.delta(d)
+    rec = sess.history[-1]
+    assert rec["kind"] in ("refine", "restart")
+    assert rec["update_rejected"] is True
+    assert rec["residual_update"] > rec["gate"] == 1e-12
+    assert "update" not in sess.counts()
+
+
+def test_session_downdate():
+    A = _exact()
+    sess = session(A, SPEC, key=KEY)
+    with pytest.raises(RuntimeError):
+        sess.downdate(rows=[0])
+    sess.solve()
+    with pytest.raises(ValueError):
+        sess.downdate(rows=[0], cols=[1])
+    fact = sess.downdate(rows=[2, 9])
+    A2 = A.at[jnp.asarray([2, 9]), :].set(0)
+    assert sess.history[-1]["kind"] == "downdate"
+    assert sess.counts()["downdate"] == 1
+    assert _sigma_err(fact, A2) <= 1e-4
+    # the folded operand is the zeroed dense matrix: tracking continues
+    assert float(jnp.max(jnp.abs(sess.op.A[jnp.asarray([2, 9]), :]))) == 0.0
+
+
+def test_session_oversized_delta_falls_back():
+    """rank + delta_rank > min(shape) can't augment: the delta folds and
+    re-solves instead of crashing the thin-QR."""
+    m, n, r = 24, 10, 8
+    A = make_lowrank(jax.random.fold_in(KEY, 70), m, n, r)
+    sess = session(A, SVDSpec(method="fsvd", rank=r, max_iters=10),
+                   key=KEY)
+    sess.solve()
+    d = _delta(jax.random.fold_in(KEY, 71), m=m, n=n, k=4, rel=1e-3,
+               ref=A)
+    sess.delta(d)
+    assert sess.history[-1]["kind"] in ("refine", "restart")
+
+
+# ---------------------------------------------------------------------------
+# persistence of the policy knobs (satellite: restore/load_latest)
+# ---------------------------------------------------------------------------
+
+def test_restore_preserves_policy_knobs_and_updates(tmp_path):
+    """``Session.restore`` / ``load_latest`` carry ``track_residuals``,
+    ``restart_angle`` and ``update_tol`` — and the history (update counts
+    included) round-trips bit-equal."""
+    A = _exact()
+    sess = session(A, SPEC, key=KEY, track_residuals=False,
+                   restart_angle=0.3, update_tol=1e-3)
+    sess.solve()
+    d = _delta(jax.random.fold_in(KEY, 80), rel=1e-4, ref=A)
+    sess.delta(d)
+    assert sess.counts()["update"] == 1
+    meta = sess.meta()
+    assert meta["track_residuals"] is False
+    assert meta["restart_angle"] == 0.3
+    assert meta["update_tol"] == 1e-3
+    assert meta["updates"] == 1
+    sess.save(str(tmp_path))
+
+    A2 = A + materialize_lowrank(d)
+    back = Session.restore(str(tmp_path), A2, key=KEY)
+    assert back.track_residuals is False
+    assert back.restart_angle == 0.3
+    assert back.update_tol == 1e-3
+    assert back.history == sess.history
+    assert back.counts() == sess.counts()
+
+    fresh = session(A2, SPEC, key=KEY)          # default knobs
+    assert fresh.load_latest(str(tmp_path))
+    assert fresh.track_residuals is False
+    assert fresh.restart_angle == 0.3
+    assert fresh.update_tol == 1e-3
+    assert fresh.history == sess.history
+
+
+# ---------------------------------------------------------------------------
+# no-host-sync contract (satellite: lazy history scalars)
+# ---------------------------------------------------------------------------
+
+def test_untracked_solve_issues_no_extra_host_sync(monkeypatch):
+    """With ``track_residuals=False`` and a pinned refine budget, a warm
+    tracked solve converts at most ONE device scalar to host (the drift
+    policy read) — recording history must not add a sync per solve."""
+    from jax._src.array import ArrayImpl
+    A, _ = ZOO["lowrank_noise"]
+    drifts = [A + 1e-4 * jnp.linalg.norm(A) * make_lowrank(
+        jax.random.fold_in(KEY, 90 + t), *A.shape, 2) for t in (0, 1)]
+    sess = session(A, SPEC, key=KEY, track_residuals=False,
+                   refine_iters=16)
+    sess.solve()
+    sess.update(drifts[0])            # warm: both executables staged
+
+    calls = []
+
+    def _wrap(name, orig):
+        def wrapper(self, *a, **kw):
+            calls.append(name)
+            return orig(self, *a, **kw)
+        return wrapper
+
+    for name in ("__array__", "__int__", "__float__", "__bool__",
+                 "__index__"):
+        orig = getattr(ArrayImpl, name, None)
+        if orig is not None:
+            monkeypatch.setattr(ArrayImpl, name, _wrap(name, orig))
+    sess.update(drifts[1])
+    assert len(calls) <= 1, calls
+    # reading history IS the sync point
+    assert isinstance(sess.history[-1]["iterations"], int)
