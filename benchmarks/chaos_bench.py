@@ -1,0 +1,195 @@
+"""Chaos battery: the PR 6 Zipf traffic replay under fault injection.
+
+The reliability question the serve layer must answer before the ROADMAP's
+"production serving" north star means anything: when the dispatch worker
+crashes, hangs, and the solver throws transient faults *while traffic is
+running*, does the server (a) terminate every request with a result, a
+labeled degraded result, or a typed error — no deadlocks, no silently
+lost tickets; (b) keep availability (answered within deadline) at or
+above the 99% target; and (c) certify every degraded answer it returns —
+the HMT residual probe gate, cross-checked here against true singular
+values at a fixed accuracy gate?
+
+Each record replays the same synthetic stream under one fault mix
+(``repro.runtime.faults.chaos``: per-dispatch crash/hang probabilities +
+per-solve transient-fault probability), with a couple of deliberately
+NaN-poisoned operands mixed in to exercise the submit-time quarantine.
+The driver is ``launch.solve_serve.run_traffic`` — the same closed-loop
+client pool the CLI uses, retrying typed-retryable failures
+(``WorkerCrashed``, backpressure) up to 3 attempts, which is exactly the
+client contract the failure taxonomy promises.
+
+Section schema ``chaos/v1`` (validated by ``benchmarks.reanalyze``):
+records carry raw counts and the re-derivable ``availability`` =
+ok / (requests - quarantined - rejected), ``degraded_fraction`` =
+degraded / ok and ``all_terminated`` = outcomes summing to requests.
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench
+    PYTHONPATH=src python -m benchmarks.run --only chaos --emit-json \
+        BENCH_pr8.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table
+from repro.api import SVDSpec, clear_plan_cache
+from repro.launch.solve_serve import run_traffic
+from repro.runtime import faults
+from repro.serve import SolveServer
+from repro.serve.traffic import DEFAULT_SHAPES, synthetic_stream
+
+REQUESTS = 160
+QUICK_REQUESTS = 60
+RANK = 8
+ZIPF_A = 1.1
+TENANTS = 4
+TENANT_FRACTION = 0.25
+CLIENTS = 4
+DEADLINE_MS = 15000.0     # generous: availability measures fault handling,
+                          # not queueing at this offered load
+POISONED = 2              # NaN operands mixed into every replay
+AVAILABILITY_TARGET = 0.99
+SIGMA_GATE = 0.05         # degraded answers: max rel sigma error allowed
+
+# (label, {crash, hang, transient}): per-dispatch worker-crash/hang and
+# per-solve transient-fault probabilities for the chaos context.
+MIXES = [
+    ("baseline", {"crash": 0.00, "hang": 0.00, "transient": 0.00}),
+    ("faulty", {"crash": 0.03, "hang": 0.01, "transient": 0.05}),
+    ("storm", {"crash": 0.10, "hang": 0.03, "transient": 0.15}),
+]
+QUICK_MIXES = MIXES[:2]
+
+
+def _poison(reqs, n: int):
+    """NaN-poison the operands of ``n`` anonymous factorize requests (in
+    place on copies) — they must be quarantined at submit, not served."""
+    poisoned = 0
+    for r in reqs:
+        if poisoned >= n:
+            break
+        if r.tenant is None and r.kind == "factorize":
+            A = np.array(r.A, copy=True)
+            A[0, 0] = np.nan
+            r.A = A
+            poisoned += 1
+    return poisoned
+
+
+def _sigma_err(fact, A) -> float:
+    s_true = np.linalg.svd(np.asarray(A), compute_uv=False)
+    s_true = s_true[: np.asarray(fact.s).shape[-1]]
+    return float(np.max(np.abs(np.asarray(fact.s) - s_true)) / s_true[0])
+
+
+def run(requests: int = REQUESTS, mixes=None, *, rank: int = RANK,
+        seed: int = 0) -> dict:
+    key = jax.random.key(4321)
+    records = []
+    for label, mix in (mixes or MIXES):
+        reqs = list(synthetic_stream(
+            requests, shapes=DEFAULT_SHAPES, zipf_a=ZIPF_A, rank=rank,
+            tenants=TENANTS, tenant_fraction=TENANT_FRACTION, seed=7))
+        n_poisoned = _poison(reqs, POISONED)
+
+        spec = SVDSpec(method="fsvd", rank=rank)
+        server = SolveServer(spec, max_batch=8, window_ms=2.0,
+                             max_queue=4 * requests + 16, key=key,
+                             hang_timeout_s=1.0, breaker_threshold=5,
+                             breaker_reset_s=1.0, max_retries=2,
+                             retry_backoff_ms=5.0)
+        degraded_meta = []          # (probe, sigma_err) per degraded answer
+        sampled_full = []           # sigma errs of non-degraded answers
+
+        def collect(req, outcome, detail):
+            if outcome != "ok" or req.tenant is not None \
+                    or req.kind != "factorize":
+                return
+            err = _sigma_err(detail.value, req.A)
+            if detail.meta.get("degraded"):
+                degraded_meta.append((detail.meta["probe"], err))
+            elif len(sampled_full) < 16:
+                sampled_full.append(err)
+
+        try:
+            # warmup outside the fault window: compiles are deploy-time,
+            # and a 1s hang watchdog must not misread an XLA compile.
+            server.warmup(DEFAULT_SHAPES)
+            # hang_s > hang_timeout_s: an injected hang must overrun the
+            # watchdog, or it would measure as latency instead of a
+            # detected-and-recovered worker hang.
+            with faults.chaos(seed, dispatch_crash_p=mix["crash"],
+                              dispatch_hang_p=mix["hang"], hang_s=2.5,
+                              solve_transient_p=mix["transient"]):
+                t0 = time.perf_counter()
+                counts = run_traffic(
+                    server, reqs, clients=CLIENTS,
+                    timeout=DEADLINE_MS / 1e3, deadline_ms=DEADLINE_MS,
+                    on_result=collect)
+                wall_s = time.perf_counter() - t0
+            faults.disarm_all()
+            stats = server.stats()
+        finally:
+            faults.disarm_all()
+            server.close()
+
+        outcomes = (counts["ok"] + counts["rejected"] + counts["failed"]
+                    + counts["timeouts"])
+        quarantined = counts["errors"].get("PoisonedOperand", 0)
+        eligible = max(requests - quarantined - counts["rejected"], 1)
+        rec = {
+            "mix": label, "requests": requests, "rank": rank,
+            "crash_p": mix["crash"], "hang_p": mix["hang"],
+            "transient_p": mix["transient"],
+            "deadline_ms": DEADLINE_MS, "clients": CLIENTS,
+            "poisoned": n_poisoned, "wall_s": wall_s,
+            "ok": counts["ok"], "degraded": counts["degraded"],
+            "rejected": counts["rejected"], "failed": counts["failed"],
+            "timeouts": counts["timeouts"], "errors": counts["errors"],
+            "quarantined": quarantined,
+            "p50_ms": stats["latency_ms"]["p50_ms"],
+            "p99_ms": stats["latency_ms"]["p99_ms"],
+            "worker_restarts": stats["worker_restarts"],
+            "worker_crashes": stats["worker_crashes"],
+            "deadline_drops": stats["deadline_drops"],
+            "retries": stats["retries"],
+            "degraded_rejected": stats["degraded_rejected"],
+            "breaker_open_shed": stats["breaker_open_shed"],
+            "probe_gate": server.degraded_tol,
+            "probe_max": max((p for p, _ in degraded_meta), default=0.0),
+            "sigma_gate": SIGMA_GATE,
+            "degraded_err_max": max((e for _, e in degraded_meta),
+                                    default=0.0),
+            "full_err_max": max(sampled_full, default=0.0),
+        }
+        rec["availability"] = counts["ok"] / eligible
+        rec["degraded_fraction"] = (counts["degraded"] / counts["ok"]
+                                    if counts["ok"] else 0.0)
+        rec["all_terminated"] = outcomes == requests
+        rec["availability_target"] = AVAILABILITY_TARGET
+        rec["pass"] = (rec["all_terminated"]
+                       and rec["availability"] >= AVAILABILITY_TARGET
+                       and rec["quarantined"] == n_poisoned
+                       and rec["degraded_err_max"] <= SIGMA_GATE)
+        records.append(rec)
+
+    rows = [[r["mix"], r["requests"],
+             f"{r['availability']:.3f}", f"{r['degraded_fraction']:.3f}",
+             f"{r['p99_ms']:.0f}", r["worker_restarts"], r["retries"],
+             r["quarantined"], f"{r['degraded_err_max']:.1e}",
+             "yes" if r["all_terminated"] else "NO",
+             "PASS" if r["pass"] else "FAIL"]
+            for r in records]
+    print(fmt_table(["mix", "reqs", "avail", "degraded", "p99 ms",
+                     "restarts", "retries", "quar", "deg err", "drained",
+                     "gate"], rows))
+    clear_plan_cache()
+    return {"schema": "chaos/v1", "records": records}
+
+
+if __name__ == "__main__":
+    run()

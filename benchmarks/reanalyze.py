@@ -170,6 +170,55 @@ def _check_serve_section(path: str, sec: dict) -> int:
     return n
 
 
+_CHAOS_RAW = ("mix", "requests", "crash_p", "hang_p", "transient_p",
+              "deadline_ms", "ok", "degraded", "rejected", "failed",
+              "timeouts", "quarantined", "poisoned", "p99_ms",
+              "worker_restarts", "deadline_drops", "retries",
+              "probe_gate", "sigma_gate", "degraded_err_max")
+
+
+def _check_chaos_section(path: str, sec: dict) -> int:
+    """Validate a ``chaos/v1`` section: raw fault-mix outcome counts
+    present; derived ``availability`` / ``degraded_fraction`` /
+    ``all_terminated`` re-derivable from them."""
+    n = 0
+    for r in sec["records"]:
+        missing = [f for f in _CHAOS_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: chaos record missing {missing}")
+        eligible = max(r["requests"] - r["quarantined"] - r["rejected"], 1)
+        outcomes = r["ok"] + r["rejected"] + r["failed"] + r["timeouts"]
+        derived = (
+            ("availability", r["ok"] / eligible),
+            ("degraded_fraction",
+             r["degraded"] / r["ok"] if r["ok"] else 0.0),
+        )
+        for field, want in derived:
+            have = r.get(field)
+            if have is not None and abs(have - want) > 1e-6 * max(want, 1.0):
+                raise SystemExit(
+                    f"{path}: chaos mix={r['mix']!r}: stored {field}="
+                    f"{have:.4f} disagrees with raw counts ({want:.4f})")
+            r[field] = want
+        terminated = outcomes == r["requests"]
+        if r.get("all_terminated") is not None \
+                and bool(r["all_terminated"]) != terminated:
+            raise SystemExit(
+                f"{path}: chaos mix={r['mix']!r}: stored all_terminated="
+                f"{r['all_terminated']} but outcomes sum to {outcomes} of "
+                f"{r['requests']} requests")
+        r["all_terminated"] = terminated
+        print(f"[reanalyze] chaos mix={r['mix']!r} "
+              f"requests={r['requests']} (crash={r['crash_p']:.2f} "
+              f"hang={r['hang_p']:.2f} transient={r['transient_p']:.2f}): "
+              f"availability {r['availability']:.3f}, "
+              f"degraded {r['degraded_fraction']:.3f}, "
+              f"restarts {r['worker_restarts']}, "
+              f"drained={'yes' if terminated else 'NO'}")
+        n += 1
+    return n
+
+
 _UPDATE_RAW = ("m", "n", "rank", "k_drift", "steps", "cold_ms",
                "refine_ms", "update_ms", "cold_iters", "refine_iters",
                "updates")
@@ -246,6 +295,8 @@ def reanalyze_bench(path: str) -> int:
             n += _check_serve_section(path, sec)
         elif schema == "update/v1":
             n += _check_update_section(path, sec)
+        elif schema == "chaos/v1":
+            n += _check_chaos_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new
@@ -284,6 +335,12 @@ def _headline(schema, records) -> tuple[str, float]:
         sp = [r["refine_ms"] / max(r["update_ms"], 1e-9) for r in records]
         return "mean update-vs-refine speedup", (sum(sp) / len(sp)
                                                 if sp else 0.0)
+    if schema == "chaos/v1":
+        # the number that matters under faults: worst-mix availability
+        av = [r["ok"] / max(r["requests"] - r["quarantined"]
+                            - r["rejected"], 1) for r in records]
+        return "worst-mix availability under faults", (min(av) if av
+                                                       else 0.0)
     return "records", float(len(records))
 
 

@@ -29,7 +29,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
                              "kernels", "sparse", "gk_step", "dist",
-                             "session", "serve", "update"])
+                             "session", "serve", "update", "chaos"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
@@ -39,13 +39,15 @@ def main() -> None:
                          "BENCH_pr5.json for the tracked-session one, "
                          "--only serve --emit-json BENCH_pr6.json for the "
                          "serve-traffic one, --only update --emit-json "
-                         "BENCH_pr7.json for the rank-k-update one)")
+                         "BENCH_pr7.json for the rank-k-update one, "
+                         "--only chaos --emit-json BENCH_pr8.json for the "
+                         "fault-injection one)")
     args = ap.parse_args()
 
-    from benchmarks import (dist_bench, fig1, fig2, gk_step_bench,
-                            kernels_bench, roofline, serve_bench,
-                            session_bench, sparse_bench, table1, table2,
-                            update_bench)
+    from benchmarks import (chaos_bench, dist_bench, fig1, fig2,
+                            gk_step_bench, kernels_bench, roofline,
+                            serve_bench, session_bench, sparse_bench,
+                            table1, table2, update_bench)
 
     t0 = time.time()
     sections = []
@@ -86,6 +88,11 @@ def main() -> None:
             sizes=update_bench.QUICK_SIZES if args.quick else None,
             repeats=1 if args.quick else 3,
             steps=4 if args.quick else update_bench.STEPS)))
+    if args.only in (None, "chaos"):
+        sections.append(("chaos", lambda: chaos_bench.run(
+            requests=chaos_bench.QUICK_REQUESTS if args.quick
+            else chaos_bench.REQUESTS,
+            mixes=chaos_bench.QUICK_MIXES if args.quick else None)))
     if args.only in (None, "serve"):
         sections.append(("serve", lambda: serve_bench.run(
             requests=serve_bench.QUICK_REQUESTS if args.quick

@@ -48,6 +48,7 @@ from repro.core._keys import resolve_key
 from repro.core.operators import (GramOp, KroneckerOp, LowRankOp, Operator,
                                   ScaledOp, SparseOp, SumOp, TransposedOp,
                                   as_operator, sharding_mesh)
+from repro.runtime import faults as _faults
 
 Array = jax.Array
 
@@ -333,6 +334,7 @@ class SolverPlan:
         ConvergenceInfo)`` when ``with_info=True``.  ``callback`` receives
         ``on_info`` either way (and ``on_step`` from host-loop solvers).
         """
+        _faults.fire(_faults.PLAN_SOLVE)
         op = self._wrap(A)
         okey = self.operand_key(op) if self.staged else None
         if okey is None:
@@ -450,6 +452,7 @@ class SolverPlan:
         amortize staging, so a plan that cannot stage (host-loop method,
         non-pytree operand) is a caller error.
         """
+        _faults.fire(_faults.PLAN_SOLVE)
         if not self.staged:
             raise ValueError(
                 f"solve_batched requires a stageable plan; method="

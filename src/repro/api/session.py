@@ -83,6 +83,22 @@ def spec_from_dict(d: dict) -> SVDSpec:
     return SVDSpec(**d)
 
 
+def _load_newest_verified(directory: str):
+    """(step, fact, meta) from the newest session checkpoint that both
+    passes the CRC directory scan *and* actually loads; None when no step
+    survives.  The two-layer check matters: the scan certifies bytes at
+    scan time, the load re-verifies at read time — either failure falls
+    back to the next older verified step instead of surfacing garbage."""
+    from repro.checkpoint.store import load_session_state, valid_steps
+    for step in valid_steps(directory):
+        try:
+            fact, meta = load_session_state(directory, step)
+            return step, fact, meta
+        except Exception:        # noqa: BLE001 — corrupt step: try older
+            continue
+    return None
+
+
 def _cold_iters(spec: SVDSpec, shape) -> int:
     """The Krylov budget a cold solve actually runs (facade defaults —
     the ``k=None`` rule lives in ``repro.core.fsvd.default_k``)."""
@@ -477,13 +493,21 @@ class Session:
                                   self, keep=keep)
 
     def load_latest(self, directory: str) -> bool:
-        """Restore tracking state in place from the latest valid session
-        checkpoint under ``directory``; False when none exists."""
-        from repro.checkpoint.store import latest_step, load_session_state
-        step = latest_step(directory)
-        if step is None:
+        """Restore tracking state in place from the newest *verified*
+        session checkpoint under ``directory``; False when none exists.
+
+        Walks the verified steps newest-first: a checkpoint that passes
+        the directory scan but fails at read time (bit-rot between scan
+        and load, a truncated leaf) is skipped and the next older
+        verified step restores instead — recovery degrades to an earlier
+        state, never to a corrupt one.
+        """
+        from repro.runtime import faults
+        faults.fire(faults.SESSION_RESTORE)
+        loaded = _load_newest_verified(directory)
+        if loaded is None:
             return False
-        fact, meta = load_session_state(directory, step)
+        step, fact, meta = loaded
         if meta["spec"] != spec_to_dict(self.spec):
             import warnings
             warnings.warn(
@@ -517,14 +541,20 @@ class Session:
                 step: Optional[int] = None) -> "Session":
         """Rebuild a session around operand ``A`` from a checkpoint —
         spec, factorization, policy knobs and history all come from the
-        manifest."""
-        from repro.checkpoint.store import (latest_step,
-                                            load_session_state)
-        step = latest_step(directory) if step is None else step
+        manifest.  With ``step=None`` the newest checkpoint that passes
+        its CRC verification restores (corrupted newer steps are skipped,
+        same fallback as :meth:`load_latest`)."""
+        from repro.checkpoint.store import load_session_state
+        from repro.runtime import faults
+        faults.fire(faults.SESSION_RESTORE)
         if step is None:
-            raise FileNotFoundError(
-                f"no valid session checkpoint under {directory!r}")
-        fact, meta = load_session_state(directory, step)
+            loaded = _load_newest_verified(directory)
+            if loaded is None:
+                raise FileNotFoundError(
+                    f"no valid session checkpoint under {directory!r}")
+            step, fact, meta = loaded
+        else:
+            fact, meta = load_session_state(directory, step)
         sess = cls(A, spec_from_dict(meta["spec"]), key=key,
                    refine_iters=meta.get("refine_iters"),
                    restart_angle=meta.get("restart_angle", 0.5),

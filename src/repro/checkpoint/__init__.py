@@ -3,7 +3,9 @@ writes, reshard-on-restore (elastic mesh changes), and solver-session
 state (``repro.api.session``)."""
 from repro.checkpoint.store import (CheckpointManager, latest_step,
                                     load_checkpoint, load_session_state,
-                                    save_checkpoint, save_session_state)
+                                    save_checkpoint, save_session_state,
+                                    valid_steps)
 
 __all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
-           "save_checkpoint", "save_session_state", "load_session_state"]
+           "save_checkpoint", "save_session_state", "load_session_state",
+           "valid_steps"]

@@ -6,9 +6,20 @@ Protocol (crash-safe at every point):
   3. GC old steps beyond ``keep``.
 
 A checkpoint is *valid* iff its ``manifest.json`` exists and every leaf file
-it lists is present with the right byte size — half-written directories are
-ignored by ``latest_step`` and reaped by GC, so a training job killed
-mid-write restarts from the previous valid step.
+it lists is present with the right byte size AND the recorded CRC32 of its
+bytes — half-written directories are ignored by ``latest_step`` and reaped
+by GC, and a bit-flipped leaf (disk rot, torn write) is *rejected* rather
+than silently restored, so a training job killed mid-write (or fed a
+corrupted disk) restarts from the newest *verified* step.  Every file is
+fsynced before the atomic rename: without that, a crash shortly after
+``os.rename`` can surface a directory whose entries exist at full size but
+whose data blocks never hit the platter — exactly the same-size truncation
+``_is_valid``'s size check cannot see (the CRC can).
+
+Fault injection: the ``checkpoint.write`` failpoint
+(``repro.runtime.faults``) fires at the start of the protocol and
+``corrupt``-mode specs mangle leaf bytes in flight — the chaos battery's
+handle for crash-mid-write and bit-rot tests.
 
 Reshard-on-restore: leaves are stored as host numpy arrays with their pytree
 paths; ``load_checkpoint`` re-``device_put``s them under whatever sharding
@@ -21,6 +32,7 @@ training steps; ``wait()`` joins before the next save or shutdown.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import re
@@ -28,12 +40,20 @@ import shutil
 import tempfile
 import threading
 import time
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+
+def _faults():
+    # lazy: repro.runtime's package __init__ pulls in the trainer, which
+    # imports this module back — a module-level import would cycle.
+    from repro.runtime import faults
+    return faults
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -55,9 +75,25 @@ def _flatten(tree: PyTree) -> list[tuple[str, np.ndarray]]:
     return out
 
 
+def _leaf_bytes(arr: np.ndarray) -> bytes:
+    """Serialize one leaf to .npy bytes in memory — the CRC is computed
+    over exactly the bytes that hit disk, header included."""
+    buf = io.BytesIO()
+    np.save(buf, arr)
+    return buf.getvalue()
+
+
 def save_checkpoint(directory: str, step: int, tree: PyTree,
                     extra: Optional[dict] = None) -> str:
-    """Synchronous atomic save. Returns the final path."""
+    """Synchronous atomic save. Returns the final path.
+
+    Every leaf carries its CRC32 in the manifest; every file (leaves and
+    manifest) is fsynced, and so is the checkpoint directory around the
+    atomic rename — a crash at any instant leaves either the previous
+    valid step or this one, never a same-size-but-truncated hybrid.
+    """
+    fp = _faults()
+    fp.fire(fp.CHECKPOINT_WRITE)
     os.makedirs(directory, exist_ok=True)
     leaves = _flatten(tree)
     tmp = tempfile.mkdtemp(prefix=f"tmp_step_{step}.", dir=directory)
@@ -66,26 +102,54 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     try:
         for i, (name, arr) in enumerate(leaves):
             fname = f"leaf_{i:05d}.npy"
-            np.save(os.path.join(tmp, fname), arr)
+            raw = _leaf_bytes(arr)
+            # the corrupt-mode failpoint mangles bytes *after* the CRC is
+            # recorded — simulated bit-rot that _is_valid must catch
+            crc = zlib.crc32(raw)
+            raw = fp.corrupt(fp.CHECKPOINT_WRITE, raw)
+            with open(os.path.join(tmp, fname), "wb") as f:
+                f.write(raw)
+                f.flush()
+                os.fsync(f.fileno())
             manifest["leaves"].append(
                 {"name": name, "file": fname, "shape": list(arr.shape),
-                 "dtype": str(arr.dtype),
-                 "bytes": os.path.getsize(os.path.join(tmp, fname))})
+                 "dtype": str(arr.dtype), "bytes": len(raw), "crc32": crc})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        # fsync the tmp dir so its entries (names -> synced data) are
+        # durable before the rename publishes them
+        _fsync_dir(tmp)
         final = os.path.join(directory, f"step_{step}")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(directory)
         return final
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
 
 
-def _is_valid(path: str) -> bool:
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:          # platforms without directory fds
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _is_valid(path: str, *, verify_crc: bool = True) -> bool:
+    """Structural + integrity check: manifest parses, every listed leaf
+    exists at the recorded size, and (when the manifest records one — old
+    checkpoints predate it) the leaf bytes hash to the recorded CRC32.
+    A bit-flipped leaf is as invalid as a missing one."""
     mpath = os.path.join(path, "manifest.json")
     if not os.path.exists(mpath):
         return False
@@ -96,21 +160,34 @@ def _is_valid(path: str) -> bool:
             fp = os.path.join(path, leaf["file"])
             if not os.path.exists(fp) or os.path.getsize(fp) != leaf["bytes"]:
                 return False
+            if verify_crc and "crc32" in leaf:
+                with open(fp, "rb") as lf:
+                    if zlib.crc32(lf.read()) != leaf["crc32"]:
+                        return False
         return True
     except (json.JSONDecodeError, KeyError, OSError):
         return False
 
 
-def latest_step(directory: str) -> Optional[int]:
-    """Largest step with a *valid* checkpoint, or None."""
+def valid_steps(directory: str) -> list[int]:
+    """Every step number with a *verified* checkpoint, newest first —
+    restore paths walk this list so a corrupted newest step falls back to
+    the most recent one that still checks out."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         m = _STEP_RE.match(name)
         if m and _is_valid(os.path.join(directory, name)):
             steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Largest step with a *valid, checksum-verified* checkpoint, or
+    None."""
+    steps = valid_steps(directory)
+    return steps[0] if steps else None
 
 
 def load_checkpoint(directory: str, step: int, template: PyTree,
@@ -132,7 +209,17 @@ def load_checkpoint(directory: str, step: int, template: PyTree,
         name = "/".join(_key_name(p) for p in pth)
         if name not in by_name:
             raise KeyError(f"checkpoint {path} missing leaf {name!r}")
-        arr = np.load(os.path.join(path, by_name[name]["file"]))
+        entry = by_name[name]
+        with open(os.path.join(path, entry["file"]), "rb") as lf:
+            raw = lf.read()
+        if "crc32" in entry and zlib.crc32(raw) != entry["crc32"]:
+            # read-time integrity: rot between the _is_valid scan and the
+            # actual load (or a caller that skipped the scan) still fails
+            # loudly instead of restoring garbage
+            raise ValueError(
+                f"checkpoint {path}: leaf {name!r} fails its CRC32 check "
+                "(bit-rot or torn write); restore from an older step")
+        arr = np.load(io.BytesIO(raw))
         expect = tuple(np.shape(leaf)) if leaf is not None else arr.shape
         if tuple(arr.shape) != tuple(expect):
             raise ValueError(

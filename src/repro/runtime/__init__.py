@@ -1,5 +1,21 @@
-"""Runtime: train-state/step builders and the fault-tolerant training loop."""
-from repro.runtime.steps import TrainState, build_eval_step, build_train_step
-from repro.runtime.trainer import Trainer
+"""Runtime: train-state/step builders, the fault-tolerant training loop,
+serving telemetry and the fault-injection (failpoint) registry.
 
-__all__ = ["TrainState", "build_train_step", "build_eval_step", "Trainer"]
+Train-loop members resolve lazily (PEP 562): ``repro.runtime.faults`` is
+compiled into hot serving/checkpoint paths, and importing it must not
+drag the trainer/model stack into a solve server's process.
+"""
+from repro.runtime import faults  # dependency-free; safe eagerly
+
+__all__ = ["TrainState", "build_train_step", "build_eval_step", "Trainer",
+           "faults"]
+
+
+def __getattr__(name):
+    if name in ("TrainState", "build_train_step", "build_eval_step"):
+        from repro.runtime import steps
+        return getattr(steps, name)
+    if name == "Trainer":
+        from repro.runtime.trainer import Trainer
+        return Trainer
+    raise AttributeError(f"module 'repro.runtime' has no attribute {name!r}")

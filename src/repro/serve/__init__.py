@@ -4,11 +4,15 @@ The paper's target workloads issue *streams* of partial SVDs; PR 5's
 Plan/Session layer made one stream compile-once, this package serves many
 concurrent clients through the same process-wide plan cache:
 
-    bucket.py   shape-bucketing + zero-padded transport to canonical avals
-    batcher.py  continuous batching (thread + queue.Queue, no asyncio)
-    tenant.py   per-tenant Session state (LRU-evicted, checkpointable)
-    traffic.py  synthetic Zipf traffic shared by the CLI and the bench
-    server.py   the front end wiring intake -> bucket -> batch -> plan
+    bucket.py     shape-bucketing + zero-padded transport to canonical avals
+    batcher.py    continuous batching under a supervised, restartable
+                  dispatch worker (thread + queue.Queue, no asyncio)
+    resilience.py typed failure taxonomy, circuit breaker, retry backoff,
+                  HMT residual probe gating degraded answers
+    tenant.py     per-tenant Session state (LRU-evicted, checkpointable)
+    traffic.py    synthetic Zipf traffic shared by the CLI and the bench
+    server.py     the front end wiring intake -> bucket -> batch -> plan,
+                  plus deadlines / quarantine / breaker / degraded mode
 
 Quickstart::
 
@@ -25,6 +29,10 @@ from repro.serve.batcher import (Cancelled, ContinuousBatcher, QueueFull,
                                  Ticket)
 from repro.serve.bucket import (Bucketed, bucket_shape, embed, stack_buckets,
                                 unpad_factors)
+from repro.serve.resilience import (CircuitBreaker, CircuitOpen,
+                                    DeadlineExceeded, DegradedRejected,
+                                    PoisonedOperand, WorkerCrashed,
+                                    residual_probe)
 from repro.serve.server import ServeResult, SolveServer
 from repro.serve.tenant import TenantRegistry
 from repro.serve.traffic import Request, lowrank_drift, synthetic_stream
@@ -32,6 +40,8 @@ from repro.serve.traffic import Request, lowrank_drift, synthetic_stream
 __all__ = [
     "Bucketed", "bucket_shape", "embed", "stack_buckets", "unpad_factors",
     "Cancelled", "ContinuousBatcher", "QueueFull", "Ticket",
+    "CircuitBreaker", "CircuitOpen", "DeadlineExceeded", "DegradedRejected",
+    "PoisonedOperand", "WorkerCrashed", "residual_probe",
     "TenantRegistry", "ServeResult", "SolveServer",
     "Request", "lowrank_drift", "synthetic_stream",
 ]

@@ -1,0 +1,196 @@
+"""Serving resilience primitives: typed failure taxonomy, per-group
+circuit breaker, bounded retry backoff, and the HMT residual probe that
+gates degraded-mode answers.
+
+The failure taxonomy is the serve layer's contract that *every* ticket
+terminates with something a client can switch on:
+
+  :class:`DeadlineExceeded`   the request aged past its deadline before a
+                              worker could touch it (dropped at dispatch
+                              admission — an expired ticket must not burn
+                              a batch slot).
+  :class:`WorkerCrashed`      the dispatch worker died or hung while this
+                              request was in flight; the supervisor
+                              restarted the worker and failed only the
+                              in-flight batch.  Retryable by the client.
+  :class:`CircuitOpen`        the request's group breaker is shedding
+                              load and no degraded answer was possible.
+  :class:`PoisonedOperand`    the operand carries NaN/Inf and was
+                              quarantined at submit — it never entered a
+                              batch (one NaN row poisons every example of
+                              a vmapped stacked solve).
+  :class:`DegradedRejected`   a degraded (cheap-solve) answer was
+                              computed but failed the randomized residual
+                              probe — the server refuses to return an
+                              answer it cannot certify.
+
+The residual probe is Halko–Martinsson–Tropp posterior error estimation
+(PAPERS.md): for factors ``U diag(s) Vᵀ ≈ A`` and a few Gaussian probe
+vectors ``ω``, ``‖Aω − U diag(s) Vᵀ ω‖ / ‖Aω‖`` estimates the relative
+spectral defect of the approximation at the cost of ``probes`` extra
+matvecs — cheap enough to run on every degraded answer, host-side, with
+no device round-trip beyond the factors the answer already carries.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before dispatch admission."""
+
+
+class WorkerCrashed(RuntimeError):
+    """The dispatch worker died/hung with this request in flight; the
+    supervisor restarted the worker.  Safe to retry."""
+
+
+class CircuitOpen(RuntimeError):
+    """The group's circuit breaker is open (shedding load) and degraded
+    mode could not answer."""
+
+
+class PoisonedOperand(ValueError):
+    """The operand contains NaN/Inf; quarantined at submit."""
+
+
+class DegradedRejected(RuntimeError):
+    """The degraded-mode answer failed the residual-probe accuracy gate."""
+
+
+class CircuitBreaker:
+    """Per-group consecutive-failure circuit breaker.
+
+    closed     normal operation; ``threshold`` consecutive failures open
+               it.
+    open       shed load (callers take the degraded path or fail fast)
+               until ``reset_s`` elapses.
+    half-open  after the reset timer one trial batch is admitted; success
+               closes the breaker, failure re-opens it (and restarts the
+               timer).
+
+    All transitions are timestamp-driven inside :meth:`allow` — no
+    background thread.  Thread-safe; the dispatch worker is the only
+    writer in practice but stats readers race it.
+    """
+
+    def __init__(self, threshold: int = 5, reset_s: float = 5.0):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = int(threshold)
+        self.reset_s = float(reset_s)
+        self._lock = threading.Lock()
+        self._state = "closed"
+        self._failures = 0
+        self._opened_at = 0.0
+        self._opens = 0
+
+    def allow(self) -> bool:
+        """May a (non-degraded) dispatch proceed right now?  Flips open →
+        half-open when the reset timer has elapsed."""
+        with self._lock:
+            if self._state == "open":
+                if time.perf_counter() - self._opened_at >= self.reset_s:
+                    self._state = "half-open"
+                    return True
+                return False
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._state = "closed"
+            self._failures = 0
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            if self._state == "half-open" or self._failures >= self.threshold:
+                self._state = "open"
+                self._opened_at = time.perf_counter()
+                self._opens += 1
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            if self._state == "open" and \
+                    time.perf_counter() - self._opened_at >= self.reset_s:
+                return "half-open"
+            return self._state
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"state": self._state, "failures": self._failures,
+                    "opens": self._opens}
+
+
+def retry_with_backoff(fn, *, retries: int, backoff_s: float,
+                       retry_on=(Exception,), on_retry=None):
+    """Run ``fn()`` with up to ``retries`` retries on ``retry_on``
+    exceptions, sleeping ``backoff_s * 2**attempt`` between attempts
+    (bounded exponential backoff).  The final failure re-raises."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except retry_on:
+            if attempt >= retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt)
+            time.sleep(backoff_s * (2 ** attempt))
+            attempt += 1
+
+
+def residual_probe(A, fact, *, probes: int = 4,
+                   seed: int = 0) -> float:
+    """HMT-style randomized posterior residual of ``fact`` against ``A``:
+    ``‖AΩ − U diag(s) (VᵀΩ)‖_F / ‖AΩ‖_F`` over ``probes`` Gaussian
+    columns Ω.  ~0 for a faithful factorization, O(1) for garbage; the
+    degraded-mode gate compares it against ``degraded_tol``.
+
+    Host-side numpy on purpose: the probe certifies the *answer being
+    returned*, so it must not share fate (or executables) with the solver
+    path it is checking.
+    """
+    A = np.asarray(A)
+    U = np.asarray(fact.U)
+    s = np.asarray(fact.s)
+    V = np.asarray(fact.V)
+    rng = np.random.default_rng(seed)
+    omega = rng.standard_normal((A.shape[1], int(probes)))
+    omega = omega.astype(np.result_type(A.dtype, np.float32), copy=False)
+    ao = A @ omega
+    approx = U @ (s[:, None] * (V.T @ omega))
+    denom = float(np.linalg.norm(ao))
+    if denom <= 0.0:
+        # zero operand: any zero-ish factorization is exact
+        return float(np.linalg.norm(approx))
+    return float(np.linalg.norm(ao - approx) / denom)
+
+
+def finite_or_raise(tree, *, what: str = "operand") -> None:
+    """Quarantine gate: raise :class:`PoisonedOperand` when any float
+    leaf of ``tree`` carries NaN/Inf.  One poisoned example in a stacked
+    vmapped batch contaminates *every* co-batched result (NaN propagates
+    through the shared reductions), so this must run per-request at
+    submit time, before batching."""
+    import jax
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and \
+                not np.isfinite(arr).all():
+            raise PoisonedOperand(
+                f"{what} contains NaN/Inf and was quarantined; a "
+                "non-finite operand would poison every request in its "
+                "batch")
+
+
+__all__ = [
+    "CircuitBreaker", "CircuitOpen", "DeadlineExceeded", "DegradedRejected",
+    "PoisonedOperand", "WorkerCrashed", "finite_or_raise", "residual_probe",
+    "retry_with_backoff",
+]

@@ -28,11 +28,39 @@ the caller's logical operand, bit-for-bit — padding is transport-only.
 with the documented roundoff-level σ perturbation (see ``serve.bucket``).
 Rank estimates always run exact.
 
+Resilience (see ``serve.resilience`` for the failure taxonomy):
+
+* **quarantine** — ``submit`` rejects NaN/Inf operands with
+  :class:`~repro.serve.resilience.PoisonedOperand` before they can enter
+  a batch (one poisoned example contaminates every co-batched result of
+  a vmapped stacked solve).
+* **deadlines** — per-request (or server-default) deadlines are enforced
+  at *dispatch admission*: an expired ticket is failed with
+  :class:`~repro.serve.resilience.DeadlineExceeded` without burning a
+  batch slot or solver time.
+* **retry** — transient dispatch failures
+  (:class:`~repro.runtime.faults.TransientFault`) are retried with
+  bounded exponential backoff before the batch is failed.
+* **circuit breaker** — per-group consecutive-failure breaker; while
+  open, anonymous solve groups take the degraded path (or fail fast with
+  :class:`~repro.serve.resilience.CircuitOpen`), half-opening on a timer.
+* **degraded mode** — under breaker-open, deadline pressure, or primary
+  failure, anonymous solves are answered by a cheaper plan
+  (``method="rsvd"``, reduced oversample).  EVERY degraded answer is
+  gated by an HMT randomized residual probe: pass → the result is
+  labeled ``meta={"degraded": True, ...}``; fail →
+  :class:`~repro.serve.resilience.DegradedRejected`.  The server never
+  silently returns an uncertified cheap answer.
+* **supervision** — the batcher restarts a crashed/hung dispatch worker,
+  failing only the in-flight batch (see ``serve.batcher``).
+
 The stats endpoint (:meth:`SolveServer.stats`) reports requests/sec,
 p50/p99 latency (``runtime.telemetry.LatencyStats``), the bucket hit rate
 (fraction of requests landing on an already-staged (group, batch)
 signature — ground-truthed against ``plan_cache_stats`` in the tests),
-batch-size histogram, tenant-session counters and the plan-cache counters.
+batch-size histogram, tenant-session counters, the plan-cache counters,
+and the :meth:`SolveServer.health` block (breaker states, worker
+restarts, quarantines, deadline drops, degraded fraction).
 """
 from __future__ import annotations
 
@@ -48,8 +76,13 @@ import numpy as np
 from repro.api.plan import SolverPlan, plan as _make_plan, plan_cache_stats
 from repro.api.spec import SVDSpec
 from repro.core.operators import DenseOp, LowRankOp
+from repro.runtime.faults import TransientFault
 from repro.runtime.telemetry import LatencyStats
 from repro.serve.batcher import ContinuousBatcher, QueueFull, Ticket
+from repro.serve.resilience import (CircuitBreaker, CircuitOpen,
+                                    DeadlineExceeded, DegradedRejected,
+                                    finite_or_raise, residual_probe,
+                                    retry_with_backoff)
 from repro.serve.bucket import (DEFAULT_QUANTUM, Bucketed, embed,
                                 stack_buckets, unpad_factors)
 from repro.serve.tenant import TenantRegistry
@@ -106,6 +139,23 @@ class SolveServer:
     max_tenants     resident tenant-session LRU capacity.
     checkpoint_dir  evicted tenant sessions checkpoint here (optional).
     key             base PRNG key; per-request keys are folded in.
+    deadline_ms     default per-request deadline (None = no deadline);
+                    individual ``submit(..., deadline_ms=)`` overrides.
+    hang_timeout_s  restart the dispatch worker when a single dispatch
+                    overruns this (None disables hang detection).
+    max_retries     bounded retries for transient dispatch failures.
+    retry_backoff_ms  base backoff; doubles per attempt.
+    breaker_threshold consecutive batch failures that open a group's
+                    circuit breaker.
+    breaker_reset_s seconds an open breaker sheds before half-opening.
+    degraded        answer with the cheap plan under breaker-open /
+                    deadline pressure / primary failure (anonymous
+                    solves only); False fails fast instead.
+    degraded_tol    residual-probe gate: a degraded answer whose HMT
+                    probe exceeds this is rejected, never returned.
+    degrade_under_ms  take the degraded path outright when a ticket has
+                    less than this left on its deadline at admission
+                    (None = only under breaker-open / failure).
     """
 
     def __init__(self, spec: Optional[SVDSpec] = None, *,
@@ -117,6 +167,15 @@ class SolveServer:
                  max_tenants: int = 32,
                  checkpoint_dir: Optional[str] = None,
                  key: Optional[Array] = None,
+                 deadline_ms: Optional[float] = None,
+                 hang_timeout_s: Optional[float] = 30.0,
+                 max_retries: int = 2,
+                 retry_backoff_ms: float = 10.0,
+                 breaker_threshold: int = 5,
+                 breaker_reset_s: float = 5.0,
+                 degraded: bool = True,
+                 degraded_tol: float = 0.35,
+                 degrade_under_ms: Optional[float] = None,
                  **overrides):
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
@@ -130,6 +189,24 @@ class SolveServer:
         # estimates stage per shape with the in-graph loop: a server must
         # not stall its dispatch thread on per-iteration host round-trips.
         self._est_plan: SolverPlan = _make_plan(spec.replace(host_loop=False))
+        self.deadline_ms = deadline_ms
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_ms) / 1e3
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_reset_s = float(breaker_reset_s)
+        self.degraded_tol = float(degraded_tol)
+        self.degrade_under_s = (None if degrade_under_ms is None
+                                else float(degrade_under_ms) / 1e3)
+        self._breakers: Dict[Hashable, CircuitBreaker] = {}
+        # the degraded plan: same rank contract, cheapest in-graph solver
+        # (single-pass randomized SVD, small oversample).  Built eagerly so
+        # the first degraded batch doesn't pay plan construction inside a
+        # failure storm; its executables stage lazily (or via warmup).
+        self._deg_plan: Optional[SolverPlan] = None
+        if degraded:
+            self._deg_plan = _make_plan(spec.replace(
+                method="rsvd", host_loop=False,
+                oversample=min(spec.oversample, 4), power_iters=0))
         self.tenants = TenantRegistry(
             spec, max_tenants=max_tenants, checkpoint_dir=checkpoint_dir,
             key=key)
@@ -139,7 +216,10 @@ class SolveServer:
         self._counters = {"submitted": 0, "completed": 0, "rejected": 0,
                           "cancelled": 0, "timeouts": 0, "errors": 0,
                           "batches": 0, "tenant_requests": 0,
-                          "bucket_hits": 0, "bucket_misses": 0}
+                          "bucket_hits": 0, "bucket_misses": 0,
+                          "quarantined": 0, "deadline_drops": 0,
+                          "retries": 0, "degraded": 0,
+                          "degraded_rejected": 0, "breaker_open_shed": 0}
         self._batch_hist: Dict[int, int] = {}
         self._seen_signatures: set = set()
         self.latency = LatencyStats()
@@ -147,7 +227,7 @@ class SolveServer:
         self._closed = False
         self.batcher = ContinuousBatcher(
             self._dispatch, max_batch=max_batch, window_ms=window_ms,
-            max_queue=max_queue)
+            max_queue=max_queue, hang_timeout_s=hang_timeout_s)
 
     # --- intake ---------------------------------------------------------
     def _next_seq(self) -> int:
@@ -174,11 +254,17 @@ class SolveServer:
         return ("solve", b.logical_shape, dtype)
 
     def submit(self, A, *, kind: str = "factorize",
-               tenant: Optional[str] = None) -> Ticket:
+               tenant: Optional[str] = None,
+               deadline_ms: Optional[float] = None) -> Ticket:
         """Enqueue one request; returns its :class:`Ticket` immediately.
 
         Raises :class:`QueueFull` under backpressure — the request was
-        NOT accepted; retry with backoff.
+        NOT accepted; retry with backoff.  Raises
+        :class:`~repro.serve.resilience.PoisonedOperand` for NaN/Inf
+        operands (quarantined before they can contaminate a batch).
+        ``deadline_ms`` overrides the server default; expired requests
+        are dropped at dispatch admission with
+        :class:`~repro.serve.resilience.DeadlineExceeded`.
         """
         if self._closed:
             raise RuntimeError("server is closed")
@@ -187,6 +273,15 @@ class SolveServer:
         if kind == "estimate" and tenant is not None:
             raise ValueError("estimate requests are stateless; "
                              "tenant routing applies to factorize only")
+        try:
+            finite_or_raise(A, what=f"{kind} operand")
+        except Exception:
+            with self._lock:
+                self._counters["quarantined"] += 1
+            raise
+        if deadline_ms is None:
+            deadline_ms = self.deadline_ms
+        deadline_s = None if deadline_ms is None else float(deadline_ms) / 1e3
         if kind == "delta":
             # structured drift against a tenant's tracked state: ``A`` is
             # the drift itself — a LowRankOp or raw (U, s, Vt) factors —
@@ -206,7 +301,8 @@ class SolveServer:
                        "seq": self._next_seq()}
             group = self._group(kind, tenant, b)
         try:
-            ticket = self.batcher.submit(group, payload)
+            ticket = self.batcher.submit(group, payload,
+                                         deadline_s=deadline_s)
         except QueueFull:
             with self._lock:
                 self._counters["rejected"] += 1
@@ -219,10 +315,12 @@ class SolveServer:
 
     def solve(self, A, *, kind: str = "factorize",
               tenant: Optional[str] = None,
-              timeout: Optional[float] = 30.0) -> ServeResult:
+              timeout: Optional[float] = 30.0,
+              deadline_ms: Optional[float] = None) -> ServeResult:
         """Synchronous submit + wait.  On timeout the request is cancelled
         (it will never reach the solver) and ``TimeoutError`` re-raises."""
-        ticket = self.submit(A, kind=kind, tenant=tenant)
+        ticket = self.submit(A, kind=kind, tenant=tenant,
+                             deadline_ms=deadline_ms)
         try:
             return ticket.result(timeout)
         except TimeoutError:
@@ -295,8 +393,52 @@ class SolveServer:
         return staged
 
     # --- dispatch (runs on the batcher worker thread) -------------------
+    def _admit(self, tickets: List[Ticket]) -> List[Ticket]:
+        """Deadline admission: fail already-expired tickets NOW, before
+        they burn a batch slot or solver time, and return the survivors.
+        Dropping at admission (not at submit, not after the solve) is
+        what keeps an overloaded server's capacity pointed at requests
+        that can still meet their deadline."""
+        live, dropped = [], 0
+        for t in tickets:
+            if t.expired:
+                t._fail(DeadlineExceeded(
+                    f"deadline passed before dispatch (queued "
+                    f"{(time.perf_counter() - t.submitted_at) * 1e3:.1f}"
+                    "ms); dropped at admission"))
+                dropped += 1
+            else:
+                live.append(t)
+        if dropped:
+            with self._lock:
+                self._counters["deadline_drops"] += dropped
+        return live
+
+    def _breaker(self, group: Hashable) -> CircuitBreaker:
+        with self._lock:
+            br = self._breakers.get(group)
+            if br is None:
+                br = CircuitBreaker(self.breaker_threshold,
+                                    self.breaker_reset_s)
+                self._breakers[group] = br
+            return br
+
+    def _retrying(self, fn):
+        """Run ``fn`` with bounded exponential backoff on
+        :class:`~repro.runtime.faults.TransientFault` only — permanent
+        errors propagate immediately."""
+        def _count(_attempt):
+            with self._lock:
+                self._counters["retries"] += 1
+        return retry_with_backoff(
+            fn, retries=self.max_retries, backoff_s=self.retry_backoff_s,
+            retry_on=(TransientFault,), on_retry=_count)
+
     def _dispatch(self, group: Hashable, tickets: List[Ticket]) -> None:
         try:
+            tickets = self._admit(tickets)
+            if not tickets:
+                return
             if group[0] == "tenant":
                 self._dispatch_tenant(tickets)
             elif group[0] == "estimate":
@@ -330,6 +472,70 @@ class SolveServer:
 
     def _dispatch_solve(self, group: Hashable, tickets: List[Ticket]
                         ) -> None:
+        breaker = self._breaker(group)
+        if not breaker.allow():
+            # open breaker: shed to the degraded path (or fail fast) —
+            # don't feed a failing executable more batches until the
+            # half-open trial says it recovered.
+            with self._lock:
+                self._counters["breaker_open_shed"] += len(tickets)
+            self._degraded_dispatch(
+                group, tickets, reason="breaker_open",
+                fallback_error=CircuitOpen(
+                    f"circuit breaker open for group {group!r}; "
+                    "load shed — retry after the reset window"))
+            return
+        pressured: List[Ticket] = []
+        normal: List[Ticket] = []
+        if self.degrade_under_s is not None and self._deg_plan is not None:
+            for t in tickets:
+                rem = t.remaining_s()
+                (pressured if rem is not None
+                 and rem < self.degrade_under_s else normal).append(t)
+        else:
+            normal = list(tickets)
+        if pressured:
+            # not enough deadline left for the full solve: a certified
+            # cheap answer in time beats an accurate one too late.
+            self._degraded_dispatch(group, pressured,
+                                    reason="deadline_pressure")
+        if not normal:
+            return
+        try:
+            self._primary_solve(group, normal)
+        except BaseException as exc:   # noqa: BLE001 — degrade, don't die
+            breaker.record_failure()
+            self._degraded_dispatch(group, normal, reason="primary_failed",
+                                    fallback_error=exc)
+            return
+        breaker.record_success()
+
+    def _primary_solve(self, group: Hashable, tickets: List[Ticket]
+                       ) -> None:
+        n = len(tickets)
+        if not self.plan.staged:
+            # host-loop methods cannot vmap-batch: serve them one by one
+            # through the same plan (still compile-once per shape).
+            self._note_signature((group, 1), n)
+            for t in tickets:
+                A = t.payload["bucketed"].extract()
+                fact, info = self._retrying(
+                    lambda A=A, t=t: self.plan.solve(
+                        A, key=self._request_key(t.payload["seq"]),
+                        with_info=True))
+                t._resolve(ServeResult(kind="factorize", value=fact,
+                                       batch=1, info=info))
+            return
+        self._note_signature((group, _pow2_pad(n)), n)
+        facts, infos = self._solve_batch(self.plan, tickets)
+        for t, fi, ii in zip(tickets, facts, infos):
+            t._resolve(ServeResult(kind="factorize", value=fi, batch=n,
+                                   info=ii))
+
+    def _solve_batch(self, plan: SolverPlan, tickets: List[Ticket]):
+        """Pad, stack, solve once, unstack: per-ticket host-side
+        ``(facts, infos)`` lists.  Transient dispatch faults retry with
+        backoff inside this call."""
         n = len(tickets)
         shared = self.mode == "shared"
         if shared:
@@ -337,41 +543,75 @@ class SolveServer:
         else:
             ops = [t.payload["bucketed"].extract() for t in tickets]
         seqs = [t.payload["seq"] for t in tickets]
-        if not self.plan.staged:
-            # host-loop methods cannot vmap-batch: serve them one by one
-            # through the same plan (still compile-once per shape).
-            self._note_signature((group, 1), n)
-            for t, A, s in zip(tickets,
-                               (o.extract() if shared else o for o in ops),
-                               seqs):
-                fact, info = self.plan.solve(A, key=self._request_key(s),
-                                             with_info=True)
-                t._resolve(ServeResult(kind="factorize", value=fact,
-                                       batch=1, info=info))
-            return
         pad_to_n = _pow2_pad(n)
         ops = ops + [ops[-1]] * (pad_to_n - n)
         seqs = seqs + [seqs[-1]] * (pad_to_n - n)
-        self._note_signature((group, pad_to_n), n)
         # host-side stack + one device_put: no XLA compile per (shape,
         # batch) signature on the dispatch path (jnp.stack would stage a
         # fresh concatenate for each — ~30ms of compile per combination).
         stacked = stack_buckets(ops) if shared \
             else jax.device_put(np.stack([np.asarray(o) for o in ops]))
         keys = _FOLD_KEYS(self._base_key, jnp.asarray(seqs, jnp.uint32))
-        fact, info = self.plan.solve_batched(
-            DenseOp(stacked), keys=keys, with_info=True)
+        fact, info = self._retrying(
+            lambda: plan.solve_batched(DenseOp(stacked), keys=keys,
+                                       with_info=True))
         # one device->host sync for the whole batch, then per-ticket
         # numpy-view slicing: per-request jax slicing would issue ~10 tiny
         # device ops per ticket and dominate the dispatch loop.
         fact, info = jax.tree.map(np.asarray, (fact, info))
+        facts, infos = [], []
         for i, t in enumerate(tickets):
             fi = jax.tree.map(lambda x, i=i: x[i], fact)
             ii = jax.tree.map(lambda x, i=i: x[i], info)
             if shared:
                 fi = unpad_factors(fi, t.payload["bucketed"].logical_shape)
-            t._resolve(ServeResult(kind="factorize", value=fi, batch=n,
-                                   info=ii))
+            facts.append(fi)
+            infos.append(ii)
+        return facts, infos
+
+    def _degraded_dispatch(self, group: Hashable, tickets: List[Ticket],
+                           *, reason: str,
+                           fallback_error: Optional[BaseException] = None
+                           ) -> None:
+        """Answer with the cheap plan — but ONLY if the answer certifies.
+
+        Every degraded factorization is gated by the HMT residual probe
+        against the caller's logical operand; an answer that fails the
+        gate becomes :class:`DegradedRejected`, never a silent wrong
+        result.  Passing answers carry ``meta["degraded"]=True`` +
+        the probe value so clients (and ``stats()``) can see exactly
+        which fraction of traffic got the cheap path.
+        """
+        if self._deg_plan is None:
+            err = fallback_error or CircuitOpen(
+                f"group {group!r} unavailable and degraded mode disabled")
+            for t in tickets:
+                t._fail(err)
+            return
+        try:
+            facts, infos = self._solve_batch(self._deg_plan, tickets)
+        except BaseException as exc:   # noqa: BLE001 — terminate every ticket
+            for t in tickets:
+                t._fail(exc)
+            return
+        for t, fi, ii in zip(tickets, facts, infos):
+            A = np.asarray(t.payload["bucketed"].extract())
+            probe = residual_probe(A, fi, seed=t.payload["seq"])
+            if probe <= self.degraded_tol:
+                with self._lock:
+                    self._counters["degraded"] += 1
+                t._resolve(ServeResult(
+                    kind="factorize", value=fi, batch=len(tickets), info=ii,
+                    meta={"degraded": True, "reason": reason,
+                          "probe": probe}))
+            else:
+                with self._lock:
+                    self._counters["degraded_rejected"] += 1
+                t._fail(DegradedRejected(
+                    f"degraded answer failed the residual probe "
+                    f"({probe:.3g} > degraded_tol={self.degraded_tol:g}, "
+                    f"reason={reason}); refusing to return an "
+                    "uncertified result"))
 
     def _dispatch_estimate(self, group: Hashable, tickets: List[Ticket]
                            ) -> None:
@@ -394,19 +634,27 @@ class SolveServer:
         for t in tickets:
             tid = t.payload["tenant"]
             key = self._request_key(t.payload["seq"])
-            if t.payload["kind"] == "delta":
-                sess = self.tenants.touch(tid)
-                if sess is None or sess.fact is None:
-                    t._fail(RuntimeError(
-                        f"tenant {tid!r}: delta before any factorize — "
-                        "there is no tracked state to update"))
-                    continue
-                dop = self._as_lowrank(t.payload["delta"])
-                fact = sess.delta(dop, key=key)
-            else:
-                A = t.payload["bucketed"].extract()
-                sess = self.tenants.get(tid, A)
-                fact = sess.update(A, key=key)
+            try:
+                if t.payload["kind"] == "delta":
+                    sess = self.tenants.touch(tid)
+                    if sess is None or sess.fact is None:
+                        t._fail(RuntimeError(
+                            f"tenant {tid!r}: delta before any factorize "
+                            "— there is no tracked state to update"))
+                        continue
+                    dop = self._as_lowrank(t.payload["delta"])
+                    fact = self._retrying(
+                        lambda s=sess, d=dop, k=key: s.delta(d, key=k))
+                else:
+                    A = t.payload["bucketed"].extract()
+                    sess = self.tenants.get(tid, A)
+                    fact = self._retrying(
+                        lambda s=sess, A=A, k=key: s.update(A, key=k))
+            except Exception as exc:   # noqa: BLE001 — isolate per ticket:
+                # one tenant request failing (retries exhausted, rotten
+                # state, ...) must not fail the whole coalesced batch.
+                t._fail(exc)
+                continue
             rec = sess.history[-1]
             t._resolve(ServeResult(
                 kind="tenant", value=fact, batch=len(tickets),
@@ -415,10 +663,35 @@ class SolveServer:
                       "step": rec["step"]}))
 
     # --- stats / lifecycle ----------------------------------------------
+    def health(self) -> dict:
+        """Reliability counters: breaker states, worker restarts/crashes,
+        quarantines, deadline drops, retries and the degraded-answer
+        fraction.  A monitoring endpoint would scrape exactly this."""
+        with self._lock:
+            counters = dict(self._counters)
+            breakers = {"|".join(map(str, g)): br.snapshot()
+                        for g, br in self._breakers.items()}
+        completed = counters["completed"]
+        return {
+            "worker_restarts": self.batcher.restarts,
+            "worker_crashes": self.batcher.crashes,
+            "quarantined": counters["quarantined"],
+            "deadline_drops": counters["deadline_drops"],
+            "retries": counters["retries"],
+            "degraded": counters["degraded"],
+            "degraded_rejected": counters["degraded_rejected"],
+            "breaker_open_shed": counters["breaker_open_shed"],
+            "degraded_fraction":
+                counters["degraded"] / completed if completed else 0.0,
+            "breakers": breakers,
+        }
+
     def stats(self) -> dict:
         """JSON-able snapshot of the serving counters (the CLI's stats
-        endpoint payload)."""
+        endpoint payload).  Health counters are merged at top level AND
+        nested under ``"health"``."""
         now = time.perf_counter()
+        health = self.health()
         with self._lock:
             counters = dict(self._counters)
             hist = {str(k): v for k, v in sorted(self._batch_hist.items())}
@@ -427,6 +700,7 @@ class SolveServer:
         return {
             "uptime_s": elapsed,
             **counters,
+            **{k: v for k, v in health.items() if k != "breakers"},
             "requests_per_sec": counters["completed"] / elapsed,
             "latency_ms": self.latency.summary(),
             "batch_histogram": hist,
@@ -436,6 +710,7 @@ class SolveServer:
             "quantum": self.quantum,
             "tenants": self.tenants.stats(),
             "plan_cache": plan_cache_stats(),
+            "health": health,
         }
 
     def close(self, timeout: Optional[float] = 30.0) -> None:

@@ -64,7 +64,7 @@ class TenantRegistry:
             collections.OrderedDict()
         self._lock = threading.RLock()
         self._counters = {"creates": 0, "restores": 0, "evictions": 0,
-                          "reuses": 0}
+                          "reuses": 0, "restore_failures": 0}
 
     def _tenant_dir(self, tenant_id: str) -> Optional[str]:
         if self.checkpoint_dir is None:
@@ -99,6 +99,12 @@ class TenantRegistry:
                 return sess
             except FileNotFoundError:
                 pass
+            except Exception:    # noqa: BLE001 — a tenant must never be
+                # unservable because its checkpoint rotted or the restore
+                # failpoint fired: fall back to a fresh (cold) session.
+                # Session.restore already skipped to the newest VERIFIED
+                # step, so landing here means none survived.
+                self._counters["restore_failures"] += 1
         self._counters["creates"] += 1
         # track_residuals costs r extra matvecs + a host sync per solve —
         # a latency-critical serving session reads residuals from the

@@ -155,3 +155,121 @@ def test_session_state_before_first_solve(tmp_path):
     save_session_state(str(tmp_path), 0, sess)
     fact, meta = load_session_state(str(tmp_path), 0)
     assert fact is None and meta["step"] == 0
+
+
+# ---------------------------------------------------------------------------
+# PR 8: per-leaf CRC32 verification + write-path fault injection
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(autouse=True)
+def _clean_failpoints():
+    from repro.runtime import faults
+    faults.disarm_all()
+    yield
+    faults.disarm_all()
+
+
+def _flip_leaf_byte(step_dir):
+    """Same-size bit-rot: flip one byte in a leaf's data region (the
+    size check alone cannot see this — only the CRC can)."""
+    leaf = next(f for f in sorted(os.listdir(step_dir))
+                if f.endswith(".npy"))
+    path = os.path.join(str(step_dir), leaf)
+    with open(path, "r+b") as f:
+        f.seek(-4, os.SEEK_END)
+        old = f.read(1)
+        f.seek(-4, os.SEEK_END)
+        f.write(bytes([old[0] ^ 0xFF]))
+
+
+def test_crc_rejects_same_size_bitrot(tmp_path, tree):
+    """A flipped byte keeps the file size: pre-CRC validity would accept
+    it and restore garbage.  valid_steps/latest_step must skip the rotten
+    step, and a direct load of it must raise, never return wrong data."""
+    from repro.checkpoint import valid_steps
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    _flip_leaf_byte(tmp_path / "step_2")
+    assert valid_steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1
+    with pytest.raises(ValueError, match="CRC32"):
+        load_checkpoint(str(tmp_path), 2, tree)
+    out, _ = load_checkpoint(str(tmp_path), 1, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_write_crash_failpoint_leaves_no_partial_state(tmp_path, tree):
+    """A crash at checkpoint.write (before the atomic rename) must leave
+    the directory exactly as it was: older steps intact, no half-written
+    step visible to the scan."""
+    from repro.checkpoint import valid_steps
+    from repro.runtime import faults
+    from repro.runtime.faults import FaultInjected
+    save_checkpoint(str(tmp_path), 1, tree)
+    faults.arm(faults.CHECKPOINT_WRITE, mode="raise", p=1.0)
+    with pytest.raises(FaultInjected):
+        save_checkpoint(str(tmp_path), 2, tree)
+    faults.disarm_all()
+    assert valid_steps(str(tmp_path)) == [1]
+    assert not (tmp_path / "step_2").exists()
+
+
+def test_corrupt_failpoint_bitrot_is_detected(tmp_path, tree):
+    """corrupt-mode injection mangles leaf bytes AFTER their CRC is
+    recorded — exactly a torn write / bit-rot in flight.  The checkpoint
+    lands on disk but verification rejects it and recovery falls back."""
+    from repro.checkpoint import valid_steps
+    from repro.runtime import faults
+    save_checkpoint(str(tmp_path), 1, tree)
+    faults.arm(faults.CHECKPOINT_WRITE, mode="corrupt", p=1.0)
+    save_checkpoint(str(tmp_path), 2, tree)
+    faults.disarm_all()
+    assert (tmp_path / "step_2").exists()     # written...
+    assert valid_steps(str(tmp_path)) == [1]  # ...but never trusted
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_session_restore_falls_back_to_newest_verified(tmp_path):
+    """Session.restore walks verified steps newest-first: with the newest
+    checkpoint rotten it restores the older one instead of failing (the
+    serving tenant restore-on-evict path rides exactly this)."""
+    from repro.api import SVDSpec, session
+    from repro.api.session import Session
+    key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (20, 4)) @ jax.random.normal(k2, (4, 16))
+    sess = session(A, SVDSpec(method="fsvd", rank=3, max_iters=12), key=key)
+    sess.solve()
+    sess.save(str(tmp_path), step=1)
+    sess.update(A + 1e-4 * jax.random.normal(k2, A.shape))
+    sess.save(str(tmp_path), step=2)
+    _flip_leaf_byte(tmp_path / "step_2")
+    restored = Session.restore(str(tmp_path), A, key=key)
+    assert restored._step == 1                 # newer step was rotten
+    for a, b in zip(jax.tree.leaves(restored.fact),
+                    jax.tree.leaves(sess.fact)):
+        assert np.asarray(a).shape == np.asarray(b).shape
+
+
+def test_restore_failpoint_raises_and_tenant_registry_survives(tmp_path):
+    """The session.restore failpoint makes restore blow up; the tenant
+    registry must absorb that into a fresh (cold) session and count it —
+    a tenant is never unservable because its checkpoint path is."""
+    from repro.api import SVDSpec, session
+    from repro.runtime import faults
+    from repro.serve.tenant import TenantRegistry
+    key = jax.random.PRNGKey(13)
+    k1, k2 = jax.random.split(key)
+    A = jax.random.normal(k1, (20, 4)) @ jax.random.normal(k2, (4, 16))
+    spec = SVDSpec(method="fsvd", rank=3, max_iters=12)
+    sess = session(A, spec, key=key)
+    sess.solve()
+    sess.save(str(tmp_path / "t0"), step=1)
+    reg = TenantRegistry(spec, checkpoint_dir=str(tmp_path), key=key)
+    faults.arm(faults.SESSION_RESTORE, mode="raise", p=1.0)
+    got = reg.get("t0", A)                    # restore fails -> fresh
+    faults.disarm_all()
+    assert got.fact is None                   # cold, not restored
+    assert reg.stats()["restore_failures"] == 1
+    assert reg.stats()["creates"] == 1

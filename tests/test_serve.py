@@ -370,7 +370,7 @@ def test_estimate_requests_are_stateless():
 def test_server_counts_rejections(monkeypatch):
     server = SolveServer(SERVE_SPEC, key=jax.random.key(4))
     try:
-        def full(group, payload):
+        def full(group, payload, **kw):
             raise QueueFull("full")
         monkeypatch.setattr(server.batcher, "submit", full)
         with pytest.raises(QueueFull):
