@@ -256,6 +256,35 @@ def _check_update_section(path: str, sec: dict) -> int:
     return n
 
 
+_SKETCH_RAW = ("m", "n", "rank", "method", "passes", "sweeps", "ms",
+               "err_abs", "sigma_max")
+
+
+def _check_sketch_section(path: str, sec: dict) -> int:
+    """Validate a ``sketch/v1`` section: raw accuracy-vs-passes frontier
+    fields present, the stored relative error re-derivable from the raw
+    absolute error and σ_max."""
+    n = 0
+    for r in sec["records"]:
+        missing = [f for f in _SKETCH_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: sketch record missing {missing}")
+        want = r["err_abs"] / max(r["sigma_max"], 1e-30)
+        have = r.get("err_rel")
+        if have is not None and abs(have - want) > 1e-6 * max(want, 1e-30):
+            raise SystemExit(
+                f"{path}: sketch {r['m']}x{r['n']} {r['method']} "
+                f"passes={r['passes']}: stored err_rel={have:.4e} "
+                f"disagrees with err_abs/sigma_max ({want:.4e})")
+        r["err_rel"] = want
+        print(f"[reanalyze] sketch {r['m']}x{r['n']} r={r['rank']} "
+              f"{r['method']} passes={r['passes']} "
+              f"sweeps={r['sweeps']}: rel err {r['err_rel']:.2e} "
+              f"in {r['ms']:.2f} ms")
+        n += 1
+    return n
+
+
 def reanalyze_bench(path: str) -> int:
     """Validate a ``repro-bench/v1`` file and recompute derived fields."""
     bench = json.load(open(path))
@@ -297,6 +326,8 @@ def reanalyze_bench(path: str) -> int:
             n += _check_update_section(path, sec)
         elif schema == "chaos/v1":
             n += _check_chaos_section(path, sec)
+        elif schema == "sketch/v1":
+            n += _check_sketch_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new
@@ -341,6 +372,12 @@ def _headline(schema, records) -> tuple[str, float]:
                             - r["rejected"], 1) for r in records]
         return "worst-mix availability under faults", (min(av) if av
                                                        else 0.0)
+    if schema == "sketch/v1":
+        # the frontier's floor: what a SINGLE operator sweep costs in
+        # accuracy (gnystrom's whole reason to exist)
+        gny = [r["err_abs"] / max(r["sigma_max"], 1e-30)
+               for r in records if r["method"] == "gnystrom"]
+        return "worst single-pass rel err", max(gny) if gny else 0.0
     return "records", float(len(records))
 
 
@@ -376,13 +413,15 @@ def build_trajectory(directory: str = ".") -> dict:
         json.dump(report, f, indent=1)
     # the human-readable view
     print(f"\n[trajectory] {len(entries)} artifact(s) -> {out}")
-    print(f"{'artifact':<18} {'section':<10} {'schema':<12} "
-          f"{'headline':<30} value")
+    # backend is part of the row identity: a cpu-quick artifact and a
+    # tpu one for the same PR must never read as one perf trajectory
+    print(f"{'artifact':<18} {'backend':<8} {'section':<10} "
+          f"{'schema':<12} {'headline':<30} value")
     for e in entries:
         for s in e["sections"]:
-            print(f"{e['artifact']:<18} {s['section']:<10} "
-                  f"{str(s['schema']):<12} {s['headline']:<30} "
-                  f"{s['value']:.2f}")
+            print(f"{e['artifact']:<18} {str(e['backend']):<8} "
+                  f"{s['section']:<10} {str(s['schema']):<12} "
+                  f"{s['headline']:<30} {s['value']:.2f}")
     return report
 
 

@@ -29,7 +29,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
                              "kernels", "sparse", "gk_step", "dist",
-                             "session", "serve", "update", "chaos"])
+                             "session", "serve", "update", "chaos",
+                             "sketch"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
@@ -41,13 +42,14 @@ def main() -> None:
                          "serve-traffic one, --only update --emit-json "
                          "BENCH_pr7.json for the rank-k-update one, "
                          "--only chaos --emit-json BENCH_pr8.json for the "
-                         "fault-injection one)")
+                         "fault-injection one, --only sketch --emit-json "
+                         "BENCH_pr9.json for the sketch-solver frontier)")
     args = ap.parse_args()
 
     from benchmarks import (chaos_bench, dist_bench, fig1, fig2,
                             gk_step_bench, kernels_bench, roofline,
-                            serve_bench, session_bench, sparse_bench,
-                            table1, table2, update_bench)
+                            serve_bench, session_bench, sketch_bench,
+                            sparse_bench, table1, table2, update_bench)
 
     t0 = time.time()
     sections = []
@@ -98,6 +100,10 @@ def main() -> None:
             requests=serve_bench.QUICK_REQUESTS if args.quick
             else serve_bench.REQUESTS,
             mixes=serve_bench.QUICK_MIXES if args.quick else None,
+            repeats=1 if args.quick else 3)))
+    if args.only in (None, "sketch"):
+        sections.append(("sketch", lambda: sketch_bench.run(
+            sizes=sketch_bench.QUICK_SIZES if args.quick else None,
             repeats=1 if args.quick else 3)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(

@@ -1,0 +1,113 @@
+"""Accuracy-vs-passes frontier: rbk / gnystrom vs rsvd / fsvd.
+
+The PR 9 acceptance bench.  Every sketch solver is a point on one
+trade-off curve — how much accuracy does each additional pass over the
+operator buy?
+
+* **gnystrom** — ONE operator sweep (both sketches captured together):
+  the floor of the frontier; its error is the price of touching the
+  data exactly once.
+* **rbk** — block Krylov: 2·passes+1 sweeps, gap-independent gain per
+  pass (the Musco–Musco guarantee).
+* **rsvd** — HMT power iteration: 2·power_iters+2 sweeps, the classical
+  baseline rbk must dominate at equal sweep count.
+* **fsvd** — the GK bidiagonalization reference (iterative budget, not
+  sweep-comparable — included as the accuracy ceiling).
+
+All arms share the plan compile cache and are timed warm, so wall times
+compare solve cost, not tracing.  Section schema ``sketch/v1``
+(validated by ``benchmarks.reanalyze``): records carry the raw absolute
+error and σ_max so the relative error is re-derivable.
+
+    PYTHONPATH=src python -m benchmarks.sketch_bench
+    PYTHONPATH=src python -m benchmarks.run --only sketch --emit-json \
+        BENCH_pr9.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table
+from repro.api import SVDSpec, clear_plan_cache, factorize
+
+SIZES = [(512, 384, 16), (1024, 512, 16)]
+QUICK_SIZES = [(256, 160, 8)]
+
+PASSES = (0, 1, 2, 3)      # rbk passes / rsvd power_iters sweep grid
+DECAY = 0.85               # graded spectrum: σ_i = DECAY^i
+
+
+def _graded_matrix(key, m: int, n: int, decay: float = DECAY):
+    """Dense matrix with σ_i = decay^i — a spectrum where every extra
+    pass is visible (neither flat nor trivially low-rank)."""
+    k1, k2 = jax.random.split(key)
+    d = min(m, n)
+    U = jnp.linalg.qr(jax.random.normal(k1, (m, d)))[0]
+    V = jnp.linalg.qr(jax.random.normal(k2, (n, d)))[0]
+    return (U * (decay ** jnp.arange(d))[None, :]) @ V.T
+
+
+def _sweeps(method: str, passes: int) -> int:
+    """Operator sweeps actually performed (the x-axis of the frontier)."""
+    if method == "gnystrom":
+        return 1
+    if method == "rbk":
+        return 2 * passes + 1
+    if method == "rsvd":
+        return 2 * passes + 2       # sketch + final + 2 per power iter
+    return -1                        # fsvd: iterative, not sweep-priced
+
+
+def _time_arm(A, spec, key, repeats: int):
+    """(median_ms, err_abs) — warm solve (first call stages, uncounted)."""
+    f = factorize(A, spec, key=key)
+    jax.block_until_ready(f.s)
+    times = []
+    for rep in range(repeats):
+        t0 = time.perf_counter()
+        f = factorize(A, spec, key=jax.random.fold_in(key, rep))
+        jax.block_until_ready(f.s)
+        times.append((time.perf_counter() - t0) * 1e3)
+    return sorted(times)[len(times) // 2], f
+
+
+def run(sizes=None, repeats: int = 3, passes=PASSES) -> dict:
+    key = jax.random.PRNGKey(17)
+    records = []
+    for m, n, r in (sizes or SIZES):
+        A = _graded_matrix(jax.random.fold_in(key, m * n), m, n)
+        s_true = jnp.linalg.svd(A, compute_uv=False)
+        smax = float(s_true[0])
+
+        arms = [("gnystrom", 0, SVDSpec(method="gnystrom", rank=r)),
+                ("fsvd", 0, SVDSpec(method="fsvd", rank=r))]
+        for p in passes:
+            arms.append(("rbk", p,
+                         SVDSpec(method="rbk", rank=r, passes=p)))
+            arms.append(("rsvd", p,
+                         SVDSpec(method="rsvd", rank=r, power_iters=p)))
+
+        for method, p, spec in arms:
+            ms, f = _time_arm(A, spec, jax.random.fold_in(key, hash(
+                (method, p)) % (1 << 31)), repeats)
+            err = float(jnp.max(jnp.abs(f.s - s_true[:r])))
+            records.append({
+                "m": m, "n": n, "rank": r, "method": method,
+                "passes": p, "sweeps": _sweeps(method, p), "ms": ms,
+                "err_abs": err, "sigma_max": smax,
+                "err_rel": err / smax,
+            })
+    rows = [[f"{r['m']}x{r['n']}", r["rank"], r["method"], r["passes"],
+             r["sweeps"], f"{r['ms']:.2f}", f"{r['err_rel']:.2e}"]
+            for r in records]
+    print(fmt_table(["shape", "r", "method", "passes", "sweeps", "ms",
+                     "rel err"], rows))
+    clear_plan_cache()
+    return {"schema": "sketch/v1", "records": records}
+
+
+if __name__ == "__main__":
+    run()

@@ -40,8 +40,9 @@ from repro.api.session import Session, session
 from repro.api.spec import METHODS, SVDSpec
 from repro.core._keys import ImplicitKeyWarning, resolve_key
 from repro.core.operators import (DenseOp, GramOp, KroneckerOp, LowRankOp,
-                                  Operator, ScaledOp, SparseOp, SumOp,
-                                  TransposedOp, as_operator)
+                                  Operator, ScaledOp, SinglePassOp,
+                                  SparseOp, SumOp, TransposedOp,
+                                  as_operator)
 from repro.core.update import (downdate_cols, downdate_rows,
                                update_factorization)
 
@@ -62,6 +63,7 @@ __all__ = [
     "Factorization", "RankEstimate",
     "register_solver", "get_solver", "available_solvers",
     "Operator", "DenseOp", "LowRankOp", "SumOp", "ScaledOp",
-    "TransposedOp", "SparseOp", "KroneckerOp", "GramOp", "as_operator",
+    "TransposedOp", "SparseOp", "KroneckerOp", "GramOp", "SinglePassOp",
+    "as_operator",
     "resolve_key", "ImplicitKeyWarning",
 ]

@@ -58,10 +58,10 @@ HOST_SIDE_METHODS = frozenset({"fsvd_blocked"})
 
 # built-in in-graph methods the plan may stage + memoize.  Extensions that
 # register a jit-safe solver accepting the ``callback`` kwarg opt in here.
-_INGRAPH_METHODS = {"fsvd", "rsvd", "fsvd_sharded"}
+_INGRAPH_METHODS = {"fsvd", "rsvd", "fsvd_sharded", "rbk", "gnystrom"}
 
 # sketch-based methods always consume a PRNG key (no warm-start seam).
-_NEEDS_KEY = frozenset({"rsvd"})
+_NEEDS_KEY = frozenset({"rsvd", "rbk", "gnystrom"})
 
 # "auto" heuristic for *dense* operands: the GK solver tracks the paper's
 # accuracy; the sketch is cheaper per pass but its tail triplets degrade
@@ -104,18 +104,27 @@ def _is_matrix_free(op) -> bool:
 def resolve_method(spec: SVDSpec, like: Any = None) -> str:
     """Resolve ``method="auto"`` to a registered solver name.
 
-    Operator-aware: a *sharded* operand resolves to ``fsvd_sharded`` (the
-    shim that enforces the in-graph loop), and sparse / Kronecker / Gram
-    operands resolve to the streaming ``fsvd_blocked`` — only plain dense
-    (or low-rank / legacy-closure) operands consult the tol/power-iters
-    heuristic.  ``like`` is optional for backward compatibility; without
-    it the dense heuristic applies.
+    Operator-aware: an operand flagged ``single_pass_only`` resolves to
+    the one solver honouring that contract (``gnystrom``), a *sharded*
+    operand resolves to ``fsvd_sharded`` (the shim that enforces the
+    in-graph loop), and sparse / Kronecker / Gram operands resolve to the
+    streaming ``fsvd_blocked`` — only plain dense (or low-rank /
+    legacy-closure) operands consult the tol/power-iters heuristic.
+    ``like`` is optional for backward compatibility; without it the dense
+    heuristic applies.
+
+    Non-``Operator`` operands are normalized through ``as_operator``
+    (which still duck-passes legacy ``LinOp`` closures carrying *both*
+    ``mv`` and ``rmv``) — an incidental ``mv`` attribute alone must not
+    bypass backend/spec normalization and sharded/matrix-free detection.
     """
     if spec.method != "auto":
         return spec.method
     if like is not None:
-        op = like if isinstance(like, Operator) or hasattr(like, "mv") \
+        op = like if isinstance(like, Operator) \
             else as_operator(like, backend=spec.backend)
+        if getattr(op, "single_pass_only", False):
+            return "gnystrom"
         if sharding_mesh(op) is not None:
             return "fsvd_sharded"
         if _is_matrix_free(op):
@@ -190,7 +199,8 @@ def _operand_signature(op) -> Optional[tuple]:
     for leaf in leaves:
         shape = getattr(leaf, "shape", None)
         dtype = getattr(leaf, "dtype", None)
-        if shape is not None and dtype is not None:
+        if (shape is not None and dtype is not None
+                and isinstance(leaf, (jax.Array, np.ndarray))):
             sig.append((tuple(shape), str(dtype)))
         elif isinstance(leaf, (bool, int, float, complex)):
             sig.append(((), str(np.result_type(type(leaf)))))

@@ -19,6 +19,8 @@ from repro.core._keys import resolve_key
 from repro.core.fsvd import fsvd as _fsvd
 from repro.core.gk_block import fsvd_blocked as _fsvd_blocked
 from repro.core.rsvd import rsvd as _rsvd
+from repro.core.sketch import gnystrom as _gnystrom
+from repro.core.sketch import rbk as _rbk
 
 Array = jax.Array
 
@@ -54,6 +56,46 @@ def solve_rsvd(A, spec: SVDSpec, *, key: Optional[Array] = None,
         res.U, res.s, res.V,
         iterations=jnp.asarray(spec.power_iters, jnp.int32),
         breakdown=jnp.asarray(False), method="rsvd")
+
+
+@register_solver("rbk")
+def solve_rbk(A, spec: SVDSpec, *, key: Optional[Array] = None,
+              q1: Optional[Array] = None, callback=None) -> Factorization:
+    """Musco–Musco randomized block Krylov: sketch start, ``spec.passes``
+    expansions of ``Aᵀ(A·)``, Rayleigh–Ritz extraction — gap-independent
+    accuracy per pass where power-iterated R-SVD degrades.
+
+    ``q1`` is accepted for signature parity but unused — the Krylov space
+    starts from a fresh sketch block.
+    """
+    key = resolve_key(key, caller="factorize(method='rbk')")
+    res = _rbk(A, spec.rank, passes=spec.passes,
+               sketch_dim=spec.sketch_dim, kind=spec.sketch_kind,
+               oversample=spec.oversample, key=key, dtype=spec.dtype,
+               precision=spec.precision, backend=spec.backend,
+               callback=callback)
+    return Factorization(res.U, res.s, res.V, iterations=res.passes,
+                         breakdown=jnp.asarray(False), method="rbk")
+
+
+@register_solver("gnystrom")
+def solve_gnystrom(A, spec: SVDSpec, *, key: Optional[Array] = None,
+                   q1: Optional[Array] = None,
+                   callback=None) -> Factorization:
+    """Generalized Nyström: both sketches (``AΩ``, ``ΨᵀA``) captured in
+    ONE sweep over the operator, core solve via stabilized pseudo-inverse
+    — the solver for operands affordable to touch exactly once
+    (``Operator.single_pass_only``) and the serve breaker's shed plan.
+
+    ``q1`` is accepted for signature parity but unused.
+    """
+    key = resolve_key(key, caller="factorize(method='gnystrom')")
+    res = _gnystrom(A, spec.rank, sketch_dim=spec.sketch_dim,
+                    kind=spec.sketch_kind, oversample=spec.oversample,
+                    key=key, dtype=spec.dtype, precision=spec.precision,
+                    backend=spec.backend, callback=callback)
+    return Factorization(res.U, res.s, res.V, iterations=res.passes,
+                         breakdown=jnp.asarray(False), method="gnystrom")
 
 
 @register_solver("fsvd_blocked")

@@ -11,7 +11,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
-METHODS = ("auto", "fsvd", "rsvd", "fsvd_blocked", "fsvd_sharded")
+METHODS = ("auto", "fsvd", "rsvd", "fsvd_blocked", "fsvd_sharded", "rbk",
+           "gnystrom")
+
+SKETCH_KINDS = ("sparse_sign", "gaussian")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,8 +37,19 @@ class SVDSpec:
     relative_tol  scale tol by ||A|| (float32-safe reading of the paper's
                   absolute threshold; see core/gk.py).
     reorth_passes CGS passes per Lanczos step ("twice is enough").
-    oversample    R-SVD oversampling p (paper default 10).
+    oversample    R-SVD oversampling p (paper default 10); also the
+                  default sketch-width pad for "rbk" / "gnystrom" when
+                  ``sketch_dim`` is unset.
     power_iters   R-SVD subspace iterations q.
+    sketch_dim    rbk/gnystrom: sketch block width (rbk's Krylov block,
+                  gnystrom's right-panel width k; its co-range panel is
+                  2k).  None = ``rank + oversample`` clamped to
+                  ``min(m, n)``.
+    passes        rbk: number of ``Aᵀ(A·)`` Krylov expansions q — the
+                  operator sweep budget is ``2·passes + 1``.  (gnystrom
+                  ignores it: single-pass by construction.)
+    sketch_kind   "sparse_sign" (ζ nonzeros/col ±1/√ζ; streamable via the
+                  sketch kernel) or "gaussian" (dense HMT ensemble).
     backend       "xla" | "pallas" — how dense inputs are wrapped
                   (subsumes the old ``from_dense(use_kernels=...)``).
     block_size    fsvd_blocked: Krylov expansion block width b (None =
@@ -74,6 +88,9 @@ class SVDSpec:
     reorth_passes: int = 2
     oversample: int = 10
     power_iters: int = 0
+    sketch_dim: Optional[int] = None
+    passes: int = 2
+    sketch_kind: str = "sparse_sign"
     backend: str = "xla"
     block_size: Optional[int] = None
     max_basis: Optional[int] = None
@@ -89,6 +106,15 @@ class SVDSpec:
                 f"block_size must be >= 1, got {self.block_size}")
         if self.max_basis is not None and self.max_basis < 1:
             raise ValueError(f"max_basis must be >= 1, got {self.max_basis}")
+        if self.sketch_dim is not None and self.sketch_dim < 1:
+            raise ValueError(
+                f"sketch_dim must be >= 1, got {self.sketch_dim}")
+        if self.passes < 0:
+            raise ValueError(f"passes must be >= 0, got {self.passes}")
+        if self.sketch_kind not in SKETCH_KINDS:
+            raise ValueError(
+                f"sketch_kind must be one of {SKETCH_KINDS}, got "
+                f"{self.sketch_kind!r}")
         if self.backend not in ("xla", "pallas"):
             raise ValueError(
                 f"backend must be 'xla' or 'pallas', got {self.backend!r}")

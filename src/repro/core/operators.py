@@ -102,6 +102,11 @@ class Operator:
     _data_fields: Tuple[str, ...] = ()
     _meta_fields: Tuple[str, ...] = ()
 
+    # Streaming hint: True means the operand can only afford ONE sweep
+    # (out-of-core / streamed once) — ``resolve_method`` routes such
+    # operands to the single-pass ``gnystrom`` solver.
+    single_pass_only: bool = False
+
     # --- protocol -----------------------------------------------------
     @property
     def shape(self) -> tuple[int, int]:
@@ -157,6 +162,19 @@ class Operator:
 
     def rmatmat(self, Q: Array) -> Array:
         return jax.vmap(self.rmv, in_axes=1, out_axes=1)(Q)
+
+    def sketch_pass(self, omega, psi) -> tuple[Array, Array]:
+        """ONE sweep over the operator capturing both sketch directions:
+        ``(A Ω, Aᵀ Ψ)`` for test matrices Ω (n, k) and Ψ (m, l) from
+        ``repro.core.sketch`` — the single-pass seam ``gnystrom`` builds
+        on (and the unit the pass-budget guards count as one touch).
+
+        The default composes the block forms on the densified panels;
+        operators with a fused path (``DenseOp(backend="pallas")`` via the
+        sparse-sign sketch kernel, ``ShardedOp`` via one shard_map body
+        with a single psum) override it.
+        """
+        return self.matmat(omega.dense()), self.rmatmat(psi.dense())
 
     def to_dense(self) -> Array:
         return self.matmat(jnp.eye(self.n, dtype=self.dtype))
@@ -256,6 +274,13 @@ class DenseOp(Operator):
 
     def rmatmat(self, Q):
         return self.A.T @ Q
+
+    def sketch_pass(self, omega, psi):
+        if self.backend == "pallas":
+            # both directions through the gather-only sketch kernel:
+            # (A Ω)ᵀ = Ωᵀ Aᵀ and (Aᵀ Ψ)ᵀ = Ψᵀ A are each one Tᵀ X apply.
+            return omega.tapply(self.A.T).T, psi.tapply(self.A).T
+        return self.A @ omega.dense(), self.A.T @ psi.dense()
 
     def to_dense(self):
         return self.A
@@ -625,6 +650,53 @@ class KroneckerOp(Operator):
     @property
     def T(self):
         return KroneckerOp(self.a.T, self.b.T)
+
+
+@register_operator
+@dataclasses.dataclass(frozen=True, eq=False)
+class SinglePassOp(Operator):
+    """Marks an operand as affordable to sweep only ONCE (streamed from
+    disk / network, or simply too large to touch twice) — pure forwarding
+    otherwise.  ``resolve_method`` sees ``single_pass_only`` and routes to
+    the ``gnystrom`` solver, whose whole contract is one ``sketch_pass``.
+    """
+
+    inner: Operator
+
+    _data_fields = ("inner",)
+    _meta_fields = ()
+
+    single_pass_only = True
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.inner.shape
+
+    @property
+    def dtype(self):
+        return self.inner.dtype
+
+    def mv(self, p):
+        return self.inner.mv(p)
+
+    def rmv(self, q):
+        return self.inner.rmv(q)
+
+    def matmat(self, V):
+        return self.inner.matmat(V)
+
+    def rmatmat(self, Q):
+        return self.inner.rmatmat(Q)
+
+    def sketch_pass(self, omega, psi):
+        return self.inner.sketch_pass(omega, psi)
+
+    def to_dense(self):
+        return self.inner.to_dense()
+
+    @property
+    def T(self):
+        return SinglePassOp(self.inner.T)
 
 
 _GRAM_SIDES = ("ata", "aat")

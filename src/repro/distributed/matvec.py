@@ -218,6 +218,20 @@ def _matvec_fns(mesh: Mesh, sparse: bool):
             Z = jax.lax.psum(Z, rows)
         return Z
 
+    def _sketch(a, om, ps):
+        # one sweep over the local shard captures both directions: the
+        # row-sharded range panel Y = A Ω needs no reduction (rows are
+        # local), the co-range panel Z = Aᵀ Ψ is partial over the row
+        # shards — each shard applies its own row block of Ψ and ONE psum
+        # finishes it (a "model" axis adds the usual matvec-reduce psum).
+        Y = _local_mm(a, om)
+        if col is not None:
+            Y = jax.lax.psum(Y, col)
+        Z = _local_rmm(a, ps)
+        if rows:
+            Z = jax.lax.psum(Z, rows)
+        return Y, Z
+
     sm = functools.partial(compat.shard_map, mesh=mesh, check_vma=False)
     return {
         "mv": sm(_mv, in_specs=(a_spec, p_spec, q_spec, P()),
@@ -228,6 +242,9 @@ def _matvec_fns(mesh: Mesh, sparse: bool):
                  out_specs=P(rows or None, None)),
         "rmm": sm(_rmm, in_specs=(a_spec, P(rows or None, None)),
                   out_specs=P(col, None)),
+        "sketch": sm(_sketch,
+                     in_specs=(a_spec, P(col, None), P(rows or None, None)),
+                     out_specs=(P(rows or None, None), P(col, None))),
     }
 
 
@@ -411,6 +428,19 @@ class ShardedOp(Operator):
         mp, _ = self._padded_shape
         return self._fns()["rmm"](self._payload(),
                                   _pad_rows(jnp.asarray(Q), mp))[:n]
+
+    def sketch_pass(self, omega, psi):
+        """Both sketch directions in one shard_map body: per-shard panel
+        GEMMs + a single psum on a row-sharded mesh (zero-padding the
+        panels to the mesh tiling is exact — padded operand rows/cols are
+        zero)."""
+        m, n = self.shape
+        mp, np_ = self._padded_shape
+        Y, Z = self._fns()["sketch"](
+            self._payload(),
+            _pad_rows(jnp.asarray(omega.dense()), np_),
+            _pad_rows(jnp.asarray(psi.dense()), mp))
+        return Y[:m], Z[:n]
 
     # --- fused Lanczos half-steps (the scale-out seam) ---------------
     def lanczos_step(self, p, y, alpha, basis, *, passes: int = 2):

@@ -19,6 +19,7 @@ from repro.kernels import gk_matvec as _gk
 from repro.kernels import gk_step as _gs
 from repro.kernels import lowrank_update as _lr
 from repro.kernels import reorth as _ro
+from repro.kernels import sketch_matvec as _sk
 from repro.kernels import sparse_matvec as _sp
 
 Array = jax.Array
@@ -207,3 +208,23 @@ def sparse_matvec(vals: Array, cols: Array, x: Array, *,
     cp = _pad_to(_pad_to(cols, bm, 0), _sp.BL, 1)
     out = _sp.sparse_matvec(vp, cp, _col(x), bm=bm, interpret=_interpret())
     return out[:m, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def sketch_matmat(signs: Array, idx: Array, X: Array, *,
+                  bd: int = _sk.BD) -> Array:
+    """Y = Tᵀ @ X, T in the sparse-sign ELL pack (``core.sketch``) →
+    (d, b) f32.
+
+    Pads sketch rows to a ``bd`` multiple (zero-sign slots reading row 0
+    of X are exact) and the RHS column count to the f32 lane width; both
+    paddings slice off after the call.
+    """
+    d, _ = signs.shape
+    b = X.shape[1]
+    bd = min(bd, d) or 1
+    sp = _pad_to(signs, bd, 0)
+    ip = _pad_to(idx, bd, 0)
+    Xp = _pad_to(X, _sk.BN, 1)
+    out = _sk.sketch_matmat(sp, ip, Xp, bd=bd, interpret=_interpret())
+    return out[:d, :b]

@@ -59,3 +59,10 @@ def sparse_matvec(vals: Array, cols: Array, x: Array) -> Array:
     """y = A @ x for A in padded-ELL rows (vals/cols (m, L), x (n,))."""
     return jnp.sum(vals.astype(jnp.float32)
                    * x.astype(jnp.float32)[cols], axis=1)
+
+
+def sketch_matmat(signs: Array, idx: Array, X: Array) -> Array:
+    """Y = Tᵀ @ X for T in the sparse-sign ELL pack (signs/idx (d, ζ),
+    X (N, b)) — sketch row i sums its ζ signed source rows of X."""
+    return jnp.einsum("ds,dsb->db", signs.astype(jnp.float32),
+                      X.astype(jnp.float32)[idx])

@@ -1,0 +1,76 @@
+"""Sketch-row-blocked sparse-sign sketch application Pallas kernel.
+
+Sketch-based solvers (``rbk`` / ``gnystrom``) compress an operand through a
+tall random test matrix ``T`` of shape (N, d) with ζ nonzeros per column,
+each ±1/√ζ (Clarkson–Woodruff / Tropp sparse-sign ensemble).  Applying the
+sketch to a block ``X`` (N, b) is ``Y = Tᵀ X`` — like the sparse matvec in
+``sparse_matvec.py`` this is gather-bound, not FLOP-bound, so the kernel
+generalizes the same gather-only ELL layout from vector to block RHS:
+
+    Y[i, :] = Σ_s signs[i, s] * X[idx[i, s], :]          i = sketch row
+
+with ``idx``/``signs`` of shape (d, ζ) — row i lists the ζ source rows of X
+that sketch coordinate i reads, and their signed weights.  Each grid step
+owns ``bd`` sketch rows while X stays resident in VMEM; the slot loop is
+unrolled (ζ is a small static constant), so every step is a row gather plus
+a rank-1-broadcast multiply-accumulate — scatter never appears, which keeps
+the kernel TPU-shaped in both the forward (``AΩ`` needs ``Tᵀ`` applied to
+rows of Aᵀ) and co-range (``ΨᵀA``) directions.
+
+Unlike the SparseOp ELL pack (value-dependent row widths, built host-side),
+the sketch pack has *static* shape (d, ζ) for a given spec — it is built
+in-trace from a PRNG key by ``repro.core.sketch`` and therefore survives
+``jit`` / ``vmap`` whole.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# default tile: 128 sketch rows per grid step; ops.py pads the RHS block's
+# column count to a multiple of BN so (bd, b) tiles sit on f32 lane
+# boundaries.  ZETA is the default nonzeros-per-column of the ensemble.
+BD, BN = 128, 128
+ZETA = 8
+
+
+def _sketch_kernel(s_ref, i_ref, x_ref, o_ref):
+    """One sketch-row block: o = Σ_slots signs ⊙ X[idx]  (f32 accumulate).
+
+    The slot dimension is unrolled at trace time (ζ is static and small):
+    each term is a (bd,)-row gather from the resident X and a broadcast
+    multiply — 2-D ops only, no 3-D intermediates.
+    """
+    x = x_ref[...].astype(jnp.float32)                   # (N, b) resident
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for s in range(i_ref.shape[1]):
+        gathered = jnp.take(x, i_ref[:, s], axis=0)      # (bd, b)
+        acc = acc + s_ref[:, s].astype(jnp.float32)[:, None] * gathered
+    o_ref[...] = acc
+
+
+def sketch_matmat(signs: Array, idx: Array, X: Array, *,
+                  bd: int = BD, interpret: bool = True) -> Array:
+    """Y = Tᵀ @ X with T in the sparse-sign ELL pack.
+
+    signs/idx: (d, ζ); X: (N, b).  d must be a multiple of bd (``ops.py``
+    pads sketch rows with zero-sign slots, which contribute exactly 0).
+    """
+    d, L = signs.shape
+    assert d % bd == 0, (signs.shape, bd)
+    n = X.shape[1]
+    return pl.pallas_call(
+        _sketch_kernel,
+        grid=(d // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, L), lambda i: (i, 0)),
+            pl.BlockSpec((bd, L), lambda i: (i, 0)),
+            pl.BlockSpec(X.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        interpret=interpret,
+    )(signs, idx, X)

@@ -166,6 +166,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--hang-timeout-s", type=float, default=30.0,
                     help="watchdog restarts the dispatch worker when one "
                          "dispatch overruns this")
+    ap.add_argument("--degraded-method", default="gnystrom",
+                    help="in-graph solver backing the breaker's shed "
+                         "plan (reported in meta['method'])")
     ap.add_argument("--stats-every", type=float, default=0.0,
                     help="stream interim stats JSON every N seconds")
     ap.add_argument("--stats-json", default=None,
@@ -185,6 +188,7 @@ def main(argv=None) -> dict:
                          checkpoint_dir=args.checkpoint_dir,
                          deadline_ms=args.deadline_ms,
                          hang_timeout_s=args.hang_timeout_s,
+                         degraded_method=args.degraded_method,
                          key=jax.random.key(args.seed))
     stream = synthetic_stream(
         args.requests, zipf_a=args.zipf_a, rank=args.rank,

@@ -63,24 +63,32 @@ class LatencyStats:
         with self._lock:
             return self._count
 
+    # Readers snapshot under the lock and crunch OUTSIDE it: record() on
+    # the dispatch hot path takes the same lock, and an np.percentile over
+    # the full 8192-sample window (tens of µs, unboundedly worse under a
+    # descheduled reader) must never stall it.  The copy is O(window) but
+    # lock-held time is a bounded memcpy, not a sort.
+
     def percentile(self, p: float) -> float:
         with self._lock:
-            if not self._buf:
-                return 0.0
-            return float(np.percentile(np.asarray(self._buf), p))
+            data = np.asarray(self._buf)
+        if data.size == 0:
+            return 0.0
+        return float(np.percentile(data, p))
 
     def summary(self) -> dict:
         """{count, mean_ms, p50_ms, p99_ms, max_ms} snapshot."""
         with self._lock:
-            if self._count == 0:
-                return {"count": 0, "mean_ms": 0.0, "p50_ms": 0.0,
-                        "p99_ms": 0.0, "max_ms": 0.0}
+            count, total, mx = self._count, self._total, self._max
             data = np.asarray(self._buf)
-            return {"count": self._count,
-                    "mean_ms": self._total / self._count,
-                    "p50_ms": float(np.percentile(data, 50)),
-                    "p99_ms": float(np.percentile(data, 99)),
-                    "max_ms": self._max}
+        if count == 0:
+            return {"count": 0, "mean_ms": 0.0, "p50_ms": 0.0,
+                    "p99_ms": 0.0, "max_ms": 0.0}
+        return {"count": count,
+                "mean_ms": total / count,
+                "p50_ms": float(np.percentile(data, 50)),
+                "p99_ms": float(np.percentile(data, 99)),
+                "max_ms": mx}
 
 
 def grad_spectrum(g: Array, k: int = 16, eps: float = 1e-6) -> dict:

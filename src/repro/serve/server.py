@@ -45,8 +45,9 @@ Resilience (see ``serve.resilience`` for the failure taxonomy):
   open, anonymous solve groups take the degraded path (or fail fast with
   :class:`~repro.serve.resilience.CircuitOpen`), half-opening on a timer.
 * **degraded mode** — under breaker-open, deadline pressure, or primary
-  failure, anonymous solves are answered by a cheaper plan
-  (``method="rsvd"``, reduced oversample).  EVERY degraded answer is
+  failure, anonymous solves are answered by a cheaper plan (default
+  ``method="gnystrom"`` — a single operator sweep — configurable via
+  ``degraded_method``, reduced oversample).  EVERY degraded answer is
   gated by an HMT randomized residual probe: pass → the result is
   labeled ``meta={"degraded": True, ...}``; fail →
   :class:`~repro.serve.resilience.DegradedRejected`.  The server never
@@ -151,6 +152,9 @@ class SolveServer:
     degraded        answer with the cheap plan under breaker-open /
                     deadline pressure / primary failure (anonymous
                     solves only); False fails fast instead.
+    degraded_method in-graph solver backing the degraded plan (default
+                    "gnystrom": one operator sweep per shed answer);
+                    reported in ``meta["method"]``.
     degraded_tol    residual-probe gate: a degraded answer whose HMT
                     probe exceeds this is rejected, never returned.
     degrade_under_ms  take the degraded path outright when a ticket has
@@ -174,6 +178,7 @@ class SolveServer:
                  breaker_threshold: int = 5,
                  breaker_reset_s: float = 5.0,
                  degraded: bool = True,
+                 degraded_method: str = "gnystrom",
                  degraded_tol: float = 0.35,
                  degrade_under_ms: Optional[float] = None,
                  **overrides):
@@ -198,14 +203,17 @@ class SolveServer:
         self.degrade_under_s = (None if degrade_under_ms is None
                                 else float(degrade_under_ms) / 1e3)
         self._breakers: Dict[Hashable, CircuitBreaker] = {}
-        # the degraded plan: same rank contract, cheapest in-graph solver
-        # (single-pass randomized SVD, small oversample).  Built eagerly so
-        # the first degraded batch doesn't pay plan construction inside a
+        # the degraded plan: same rank contract, a cheap in-graph solver
+        # (default single-pass generalized Nyström — one operator sweep;
+        # ``degraded_method`` picks any registered in-graph method, e.g.
+        # "rsvd" for the pre-breaker behaviour).  Built eagerly so the
+        # first degraded batch doesn't pay plan construction inside a
         # failure storm; its executables stage lazily (or via warmup).
+        self.degraded_method = str(degraded_method)
         self._deg_plan: Optional[SolverPlan] = None
         if degraded:
             self._deg_plan = _make_plan(spec.replace(
-                method="rsvd", host_loop=False,
+                method=self.degraded_method, host_loop=False,
                 oversample=min(spec.oversample, 4), power_iters=0))
         self.tenants = TenantRegistry(
             spec, max_tenants=max_tenants, checkpoint_dir=checkpoint_dir,
@@ -603,7 +611,7 @@ class SolveServer:
                 t._resolve(ServeResult(
                     kind="factorize", value=fi, batch=len(tickets), info=ii,
                     meta={"degraded": True, "reason": reason,
-                          "probe": probe}))
+                          "method": self.degraded_method, "probe": probe}))
             else:
                 with self._lock:
                     self._counters["degraded_rejected"] += 1

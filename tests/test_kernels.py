@@ -260,3 +260,38 @@ def test_kernel_tile_override():
         np.testing.assert_allclose(np.asarray(got),
                                    np.asarray(ref.matvec_fused(A, p, y, 0.1)),
                                    rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# sparse-sign sketch apply (gather-only ELL: fixed ζ slots per sketch row)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,b", [(300, 64, 24), (128, 130, 16),
+                                   (70, 16, 48), (48, 48, 48)])
+def test_sketch_matmat_vs_ref(n, d, b):
+    from repro.core.sketch import make_sketch
+    sk = make_sketch(jax.random.PRNGKey(n * d + b), n, d,
+                     kind="sparse_sign", dtype=jnp.float32)
+    X = jax.random.normal(jax.random.PRNGKey(2), (n, b))
+    got = ops.sketch_matmat(sk.signs, sk.idx, X)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.sketch_matmat(sk.signs,
+                                                            sk.idx, X)),
+                               rtol=2e-5, atol=2e-5)
+    # both must equal the dense TᵀX with the scatter-built T (duplicate
+    # slot indices sum — same semantics on both paths)
+    dense = np.asarray(sk.dense())
+    np.testing.assert_allclose(np.asarray(got), dense.T @ np.asarray(X),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sketch_matmat_tile_override():
+    from repro.core.sketch import make_sketch
+    sk = make_sketch(jax.random.PRNGKey(9), 200, 96, kind="sparse_sign",
+                     dtype=jnp.float32)
+    X = jax.random.normal(jax.random.PRNGKey(10), (200, 32))
+    want = np.asarray(ref.sketch_matmat(sk.signs, sk.idx, X))
+    for bd in (32, 96, 256):
+        np.testing.assert_allclose(
+            np.asarray(ops.sketch_matmat(sk.signs, sk.idx, X, bd=bd)),
+            want, rtol=2e-5, atol=2e-5)

@@ -172,6 +172,58 @@ def test_auto_resolution_operator_aware(A):
     assert out.method == "fsvd_blocked"
 
 
+def test_auto_resolution_normalizes_non_operators(A):
+    """Regression: resolve_method used to duck-type with hasattr(like,
+    'mv'), so a NON-operator operand carrying a stray ``mv`` attribute
+    skipped ``as_operator`` normalization and took the spec-only dense
+    branch.  Anything that is not already an Operator must be normalized
+    first, so operand-aware routing sees the real operator kind."""
+    class _ArrayWithStrayMv(np.ndarray):
+        # not an Operator: `mv` here is unrelated to the matvec protocol
+        def mv(self):                          # pragma: no cover
+            return "not a matvec"
+
+    arr = np.asarray(A).view(_ArrayWithStrayMv)
+    loose = SVDSpec(method="auto", tol=1e-2)
+    # normalized through as_operator -> DenseOp -> dense heuristic
+    assert resolve_method(loose, arr) == "rsvd"
+    assert resolve_method(SVDSpec(method="auto"), arr) == "fsvd"
+
+
+def test_auto_resolution_single_pass_hint(A):
+    """Operators flagged single_pass_only route to the one-sweep solver
+    before any other operand-aware branch."""
+    from repro.api import SinglePassOp
+    op = SinglePassOp(DenseOp(A))
+    assert resolve_method(SVDSpec(method="auto"), op) == "gnystrom"
+    # the hint outranks the loose-tol dense heuristic too
+    assert resolve_method(SVDSpec(method="auto", tol=1e-2),
+                          op) == "gnystrom"
+    out = factorize(op, SVDSpec(method="auto", rank=4), key=KEY)
+    assert out.method == "gnystrom"
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:4]
+    np.testing.assert_allclose(np.asarray(out.s), np.asarray(s_true),
+                               rtol=1e-2)
+
+
+def test_compile_once_sketch_solvers(A, compile_counter):
+    """rbk and gnystrom stage through the plan cache with the same
+    compile-once contract as fsvd/rsvd: two solves, one trace each."""
+    rbk_spec = SVDSpec(method="rbk", rank=6, passes=3)
+    gny_spec = SVDSpec(method="gnystrom", rank=6)
+    k1, k2 = jax.random.split(KEY)
+    f1 = plan(rbk_spec, like=A).solve(A, key=k1)
+    f2 = plan(rbk_spec, like=A).solve(A, key=k2)
+    assert compile_counter() == 1
+    g1 = plan(gny_spec, like=A).solve(A, key=k1)
+    g2 = plan(gny_spec, like=A).solve(A, key=k2)
+    assert compile_counter() == 2
+    s_true = jnp.linalg.svd(A, compute_uv=False)[:6]
+    for f in (f1, f2, g1, g2):
+        np.testing.assert_allclose(np.asarray(f.s), np.asarray(s_true),
+                                   rtol=1e-2)
+
+
 @pytest.mark.distributed
 def test_auto_resolves_sharded_and_mesh_keys_cache(A, mesh8):
     import repro.distributed.gk_dist  # noqa: F401  (registers solver)

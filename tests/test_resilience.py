@@ -265,12 +265,31 @@ def test_primary_failure_degrades_with_probe_label(server):
     faults.disarm_all()
     assert res.meta["degraded"] is True
     assert res.meta["reason"] == "primary_failed"
+    assert res.meta["method"] == "gnystrom"      # the default shed plan
     assert res.meta["probe"] <= server.degraded_tol
     s_true = np.linalg.svd(_operand(9), compute_uv=False)[:4]
     err = np.max(np.abs(np.asarray(res.value.s) - s_true)) / s_true[0]
     assert err < 0.05                            # cheap but not wrong
     assert server.stats()["degraded"] == before + 1
     assert server.stats()["degraded_fraction"] > 0.0
+
+
+def test_degraded_method_is_configurable_and_reported():
+    """Regression: the breaker's shed plan used to hardcode rsvd.  The
+    method is now spec-configurable and every degraded answer reports
+    which solver produced it."""
+    srv = SolveServer(SERVE_SPEC, key=KEY, window_ms=2.0,
+                      retry_backoff_ms=1.0, degraded_method="rsvd")
+    try:
+        faults.arm(faults.PLAN_SOLVE, mode="raise", p=1.0, max_fires=1)
+        res = srv.solve(_operand(9), timeout=120.0)
+        faults.disarm_all()
+        assert res.meta["degraded"] is True
+        assert res.meta["method"] == "rsvd"
+        assert srv.degraded_method == "rsvd"
+    finally:
+        faults.disarm_all()
+        srv.close()
 
 
 def test_probe_gate_rejects_uncertifiable_degraded_answer(server):

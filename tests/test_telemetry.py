@@ -61,3 +61,49 @@ def test_summary_on_model_grads():
         assert s["sigma"].shape == (8,)
         assert bool(jnp.all(jnp.isfinite(s["sigma"])))
         assert 0 <= int(s["rank"]) <= 8
+
+
+def test_latency_stats_reader_does_not_block_recorders(monkeypatch):
+    """Regression: percentile()/summary() used to run np.percentile over
+    the whole window while holding the lock record() needs on the
+    dispatch hot path.  Park a reader inside a slow percentile and prove
+    records still land while it is stuck."""
+    import threading
+    import time
+
+    from repro.runtime import telemetry as T
+
+    stats = T.LatencyStats(window=256)
+    for i in range(64):
+        stats.record(float(i))
+
+    in_percentile = threading.Event()
+    release = threading.Event()
+    real_percentile = np.percentile
+
+    def slow_percentile(data, p, *args, **kwargs):
+        in_percentile.set()
+        assert release.wait(timeout=10.0), "recorder never released reader"
+        return real_percentile(data, p, *args, **kwargs)
+
+    monkeypatch.setattr(T.np, "percentile", slow_percentile)
+    out = {}
+    reader = threading.Thread(
+        target=lambda: out.setdefault("summary", stats.summary()))
+    reader.start()
+    try:
+        assert in_percentile.wait(timeout=10.0)
+        # reader is parked mid-percentile: the hot path must not care
+        t0 = time.monotonic()
+        for i in range(32):
+            stats.record(1000.0 + i)
+        elapsed = time.monotonic() - t0
+        assert stats.count == 96          # records landed while parked
+        assert elapsed < 5.0              # and never waited on the reader
+    finally:
+        release.set()
+        reader.join(timeout=10.0)
+    assert not reader.is_alive()
+    # the reader's snapshot predates the concurrent records
+    assert out["summary"]["count"] == 64
+    assert out["summary"]["max_ms"] == 63.0
