@@ -285,6 +285,53 @@ def _check_sketch_section(path: str, sec: dict) -> int:
     return n
 
 
+_SKETCHRES_RAW = ("m", "n", "rank", "steps", "nnz", "gate", "cold_ms",
+                  "refine_ms", "sketch_ms", "cold_iters", "refine_iters",
+                  "sketch_iters", "cold_err", "refine_err", "sketch_err",
+                  "sketch_accepts")
+
+
+def _check_sketchres_section(path: str, sec: dict) -> int:
+    """Validate a ``sketchres/v1`` section: raw three-arm (cold / refine /
+    sketch-reconstruct) entry-drift fields present, every stored speedup
+    ratio re-derivable from the raw wall times, and every accepted
+    reconstruction probe-verified (``max_probe <= gate`` — the invariant
+    that no unverified answer was ever served)."""
+    n = 0
+    for r in sec["records"]:
+        missing = [f for f in _SKETCHRES_RAW if f not in r]
+        if missing:
+            raise SystemExit(f"{path}: sketchres record missing {missing}")
+        if r["sketch_accepts"] and r.get("max_probe") is not None \
+                and r["max_probe"] > r["gate"]:
+            raise SystemExit(
+                f"{path}: sketchres {r['m']}x{r['n']}: accepted "
+                f"reconstruction with probe {r['max_probe']:.3e} above "
+                f"the gate {r['gate']:.3e} — unverified answer served")
+        derived = (
+            ("sketch_vs_refine", r["refine_ms"] /
+             max(r["sketch_ms"], 1e-9)),
+            ("sketch_vs_cold", r["cold_ms"] / max(r["sketch_ms"], 1e-9)),
+            ("refine_vs_cold", r["cold_ms"] / max(r["refine_ms"], 1e-9)),
+        )
+        for field, want in derived:
+            have = r.get(field)
+            if have is not None and abs(have - want) > 1e-6 * abs(want):
+                raise SystemExit(
+                    f"{path}: sketchres {r['m']}x{r['n']} r={r['rank']} "
+                    f"nnz={r['nnz']}: stored {field}={have:.4f} "
+                    f"disagrees with raw timings ({want:.4f})")
+            r[field] = want
+        print(f"[reanalyze] sketchres {r['m']}x{r['n']} r={r['rank']} "
+              f"steps={r['steps']} nnz={r['nnz']}: "
+              f"{r['sketch_vs_refine']:.2f}x vs refine, "
+              f"{r['sketch_vs_cold']:.2f}x vs cold "
+              f"({r['sketch_accepts']} probe-verified zero-iteration "
+              f"reconstructions)")
+        n += 1
+    return n
+
+
 def reanalyze_bench(path: str) -> int:
     """Validate a ``repro-bench/v1`` file and recompute derived fields."""
     bench = json.load(open(path))
@@ -328,6 +375,8 @@ def reanalyze_bench(path: str) -> int:
             n += _check_chaos_section(path, sec)
         elif schema == "sketch/v1":
             n += _check_sketch_section(path, sec)
+        elif schema == "sketchres/v1":
+            n += _check_sketchres_section(path, sec)
         else:
             # sections without derived fields (kernels, sparse, ...) are
             # carried as-is; an unknown schema is not an error, new
@@ -378,6 +427,10 @@ def _headline(schema, records) -> tuple[str, float]:
         gny = [r["err_abs"] / max(r["sigma_max"], 1e-30)
                for r in records if r["method"] == "gnystrom"]
         return "worst single-pass rel err", max(gny) if gny else 0.0
+    if schema == "sketchres/v1":
+        sp = [r["refine_ms"] / max(r["sketch_ms"], 1e-9) for r in records]
+        return "mean sketch-vs-refine speedup", (sum(sp) / len(sp)
+                                                if sp else 0.0)
     return "records", float(len(records))
 
 
@@ -401,8 +454,13 @@ def build_trajectory(directory: str = ".") -> dict:
         for sec_name, sec in sorted(bench.get("sections", {}).items()):
             label, value = _headline(sec.get("schema"),
                                      sec.get("records", []))
+            # backend rides on every section row, not just the artifact
+            # envelope: a flat consumer of the report (plot a metric over
+            # PRs, split by backend) gets a self-identifying record
+            # without joining back through the artifact entry.
             sections.append({"section": sec_name,
                              "schema": sec.get("schema"),
+                             "backend": bench.get("backend"),
                              "records": len(sec.get("records", [])),
                              "headline": label, "value": value})
         entries.append({"artifact": name, "backend": bench.get("backend"),

@@ -30,7 +30,7 @@ def main() -> None:
                     choices=["table1", "table2", "fig1", "fig2", "roofline",
                              "kernels", "sparse", "gk_step", "dist",
                              "session", "serve", "update", "chaos",
-                             "sketch"])
+                             "sketch", "sketchres"])
     ap.add_argument("--emit-json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="write section records to a standardized BENCH "
@@ -43,13 +43,16 @@ def main() -> None:
                          "BENCH_pr7.json for the rank-k-update one, "
                          "--only chaos --emit-json BENCH_pr8.json for the "
                          "fault-injection one, --only sketch --emit-json "
-                         "BENCH_pr9.json for the sketch-solver frontier)")
+                         "BENCH_pr9.json for the sketch-solver frontier, "
+                         "--only sketchres --emit-json BENCH_pr10.json "
+                         "for the sketch-resident entry-drift one)")
     args = ap.parse_args()
 
     from benchmarks import (chaos_bench, dist_bench, fig1, fig2,
                             gk_step_bench, kernels_bench, roofline,
                             serve_bench, session_bench, sketch_bench,
-                            sparse_bench, table1, table2, update_bench)
+                            sketchres_bench, sparse_bench, table1, table2,
+                            update_bench)
 
     t0 = time.time()
     sections = []
@@ -105,6 +108,12 @@ def main() -> None:
         sections.append(("sketch", lambda: sketch_bench.run(
             sizes=sketch_bench.QUICK_SIZES if args.quick else None,
             repeats=1 if args.quick else 3)))
+    if args.only in (None, "sketchres"):
+        sections.append(("sketchres", lambda: sketchres_bench.run(
+            sizes=sketchres_bench.QUICK_SIZES if args.quick else None,
+            repeats=1 if args.quick else 3,
+            steps=4 if args.quick else sketchres_bench.STEPS,
+            nnz=512 if args.quick else sketchres_bench.NNZ)))
     if args.only in (None, "roofline"):
         sections.append(("roofline-single", lambda: roofline.run(
             mesh="pod16x16")))

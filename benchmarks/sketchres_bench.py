@@ -1,0 +1,184 @@
+"""Sketch-reconstruct vs tracked refine vs cold factorize on entry drift.
+
+The PR 10 acceptance bench: a stream of *unstructured* drifts — per step
+``nnz`` COO entry updates of fixed relative Frobenius mass, the regime no
+low-rank factor pair can express (so the PR 7 update path is out of
+reach).  Three arms solve the identical stream:
+
+* **cold** — per-step ``factorize`` of the drifted operand (full Krylov
+  budget; shares the plan compile cache, so the comparison isolates
+  algorithmic cost).
+* **refine** — ``Session`` with ``sketch_tol=0.0``: the sketch path
+  disabled, so every entry batch folds into the operand and runs the
+  warm-started refine solve (reduced GK budget) — the pre-PR-10 best.
+* **sketch** — ``Session`` with a pinned ``sketch_tol``: entry batches
+  fold into the resident sketch pair through the count-sketch
+  scatter-add kernel and the answer is reconstructed from the panels —
+  **zero** GK iterations, O(nnz·ζ + (m+n)k²) per step — accepted only
+  when the HMT residual probe passes the gate (every served answer is
+  probe-verified; rejected/stale steps fall back to a real solve and are
+  counted).
+
+All three arms are held to the same accuracy gate (max singular-value
+error vs dense SVD of the true drifted matrix), so ``sketch < refine <
+cold`` is a like-for-like wall-time claim.
+
+Section schema ``sketchres/v1`` (validated by ``benchmarks.reanalyze``):
+records carry raw timings/iterations/accept counts and the re-derivable
+ratios ``sketch_vs_refine``/``sketch_vs_cold``/``refine_vs_cold``.
+
+    PYTHONPATH=src python -m benchmarks.sketchres_bench
+    PYTHONPATH=src python -m benchmarks.run --only sketchres --emit-json \
+        BENCH_pr10.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, make_lowrank
+from repro.api import Session, SVDSpec, clear_plan_cache, factorize
+
+SIZES = [(512, 384, 8), (1024, 512, 16)]
+QUICK_SIZES = [(256, 160, 8)]
+
+STEPS = 8          # entry-drift steps per sweep
+NNZ = 2048         # COO entries per step
+DRIFT = 1e-3       # per-step relative (Frobenius) drift mass
+SKETCH_TOL = 2e-2  # pinned probe gate — the parity bar all arms meet
+
+
+def _entry_stream(key, m: int, n: int, r: int, steps: int, nnz: int,
+                  drift: float):
+    """Exactly rank-r A_0, then ``steps`` cumulative COO entry batches.
+
+    Returns (operands, batches): ``operands[t+1]`` is ``operands[t]``
+    with ``batches[t]`` scattered in — the cold/refine arms consume the
+    operands, the sketch arm consumes only the triplets.
+    """
+    A = np.asarray(make_lowrank(key, m, n, r))
+    rng = np.random.default_rng(int(jax.random.randint(
+        jax.random.fold_in(key, 1), (), 0, 2**31 - 1)))
+    operands, batches = [jnp.asarray(A)], []
+    for _ in range(steps):
+        rows = rng.integers(0, m, nnz).astype(np.int32)
+        cols = rng.integers(0, n, nnz).astype(np.int32)
+        vals = rng.standard_normal(nnz).astype(np.float32)
+        vals *= drift * np.linalg.norm(A) / max(np.linalg.norm(vals), 1e-30)
+        A = A.copy()
+        np.add.at(A, (rows, cols), vals)
+        batches.append((jnp.asarray(rows), jnp.asarray(cols),
+                        jnp.asarray(vals)))
+        operands.append(jnp.asarray(A))
+    return ([jax.device_put(x) for x in operands],
+            [tuple(jax.device_put(x) for x in b) for b in batches])
+
+
+def _accuracy(fact, s_true) -> float:
+    return float(jnp.max(jnp.abs(fact.s - s_true[: fact.rank]))
+                 / s_true[0])
+
+
+def _cold_sweep(operands, s_true, spec, key):
+    """(total_ms, mean_iters, worst_err) for per-step cold factorize."""
+    facts = []
+    t0 = time.perf_counter()
+    for t, A in enumerate(operands):
+        f = factorize(A, spec, key=jax.random.fold_in(key, t))
+        jax.block_until_ready(f.s)
+        facts.append(f)
+    ms = (time.perf_counter() - t0) * 1e3
+    iters = sum(int(f.iterations) for f in facts) / len(facts)
+    err = max(_accuracy(f, s) for f, s in zip(facts, s_true))
+    return ms, iters, err
+
+
+def _session_sweep(operands, batches, s_true, spec, key, sketch_tol):
+    """One Session over the stream: solve A_0 cold, then one entries()
+    per step.  ``sketch_tol=0.0`` pins the refine arm (sketch disabled);
+    a positive gate lets the probe-verified reconstruct path engage."""
+    sess = Session(operands[0], spec, key=key, track_residuals=False,
+                   sketch_tol=sketch_tol)
+    facts = []
+    t0 = time.perf_counter()
+    f = sess.solve()
+    jax.block_until_ready(f.s)
+    facts.append(f)
+    for rows, cols, vals in batches:
+        f = sess.entries(rows, cols, vals)
+        jax.block_until_ready(f.s)
+        facts.append(f)
+    ms = (time.perf_counter() - t0) * 1e3
+    iters = sum(r["iterations"] for r in sess.history) / len(sess.history)
+    err = max(_accuracy(f, s) for f, s in zip(facts, s_true))
+    probes = [r["probe"] for r in sess.history if r.get("kind") == "sketch"]
+    return ms, iters, err, sess.counts(), probes
+
+
+def run(sizes=None, repeats: int = 3, steps: int = STEPS,
+        nnz: int = NNZ, drift: float = DRIFT) -> dict:
+    key = jax.random.PRNGKey(10)
+    records = []
+    for m, n, r in (sizes or SIZES):
+        spec = SVDSpec(method="fsvd", rank=r)
+        operands, batches = _entry_stream(jax.random.fold_in(key, m * n),
+                                          m, n, r, steps, nnz, drift)
+        s_true = [jnp.linalg.svd(A, compute_uv=False) for A in operands]
+        # one uncounted warm sweep per arm stages every executable (cold
+        # budget, refine budget, sketch + fold + reconstruct) — the
+        # measurement then isolates steady-state stream cost.
+        _cold_sweep(operands[:2], s_true[:2], spec, key)
+        _session_sweep(operands[:3], batches[:2], s_true[:3], spec, key,
+                       0.0)
+        _session_sweep(operands[:3], batches[:2], s_true[:3], spec, key,
+                       SKETCH_TOL)
+        cold_runs, refine_runs, sketch_runs = [], [], []
+        for rep in range(repeats):
+            cold_runs.append(_cold_sweep(
+                operands, s_true, spec, jax.random.fold_in(key, rep)))
+            refine_runs.append(_session_sweep(
+                operands, batches, s_true, spec,
+                jax.random.fold_in(key, 100 + rep), 0.0))
+            sketch_runs.append(_session_sweep(
+                operands, batches, s_true, spec,
+                jax.random.fold_in(key, 200 + rep), SKETCH_TOL))
+        cold_ms, cold_iters, cold_err = \
+            sorted(cold_runs)[len(cold_runs) // 2]
+        refine_ms, refine_iters, refine_err, _, _ = sorted(
+            refine_runs, key=lambda x: x[0])[len(refine_runs) // 2]
+        sketch_ms, sketch_iters, sketch_err, counts, probes = sorted(
+            sketch_runs, key=lambda x: x[0])[len(sketch_runs) // 2]
+        records.append({
+            "m": m, "n": n, "rank": r, "steps": steps, "nnz": nnz,
+            "drift": drift, "gate": SKETCH_TOL,
+            "cold_ms": cold_ms, "refine_ms": refine_ms,
+            "sketch_ms": sketch_ms,
+            "cold_iters": cold_iters, "refine_iters": refine_iters,
+            "sketch_iters": sketch_iters,
+            "cold_err": cold_err, "refine_err": refine_err,
+            "sketch_err": sketch_err,
+            "sketch_accepts": counts.get("sketch", 0),
+            "max_probe": max(probes) if probes else None,
+            "sketch_vs_refine": refine_ms / sketch_ms,
+            "sketch_vs_cold": cold_ms / sketch_ms,
+            "refine_vs_cold": cold_ms / refine_ms,
+        })
+    rows = [[f"{r['m']}x{r['n']}", r["rank"], r["steps"], r["nnz"],
+             f"{r['cold_ms']:.1f}", f"{r['refine_ms']:.1f}",
+             f"{r['sketch_ms']:.1f}", f"{r['sketch_accepts']}/{r['steps']}",
+             f"{r['sketch_vs_refine']:.2f}x",
+             f"{r['sketch_vs_cold']:.2f}x",
+             f"{r['cold_err']:.1e}", f"{r['sketch_err']:.1e}"]
+            for r in records]
+    print(fmt_table(["shape", "r", "steps", "nnz", "cold ms", "refine ms",
+                     "sketch ms", "accepted", "skt/refine", "skt/cold",
+                     "cold err", "sketch err"], rows))
+    clear_plan_cache()
+    return {"schema": "sketchres/v1", "records": records}
+
+
+if __name__ == "__main__":
+    run()

@@ -442,6 +442,92 @@ class SolverPlan:
         fn = _memoized(cache_key, build)
         return fn(fact, dop, jnp.asarray(beta, jnp.float32))
 
+    # --- sketch-resident seam (repro.sketchres) -----------------------
+    def sketch(self, A: Any = None, *, key: Optional[Array] = None,
+               budget: Optional[float] = None):
+        """ONE staged sweep over the operand → a resident ``SketchState``
+        sized by this plan's spec (``sketchres.sketch_operand``).  Keyed
+        by the operand signature, so every (re-)sketch of a given operand
+        shape shares one executable."""
+        from repro.sketchres import BUDGET, sketch_operand
+        op = self._wrap(A)
+        key = resolve_key(key, caller="plan.sketch")
+        budget = BUDGET if budget is None else budget
+        okey = _operand_signature(op)
+        spec = self.spec
+        if okey is None:
+            return sketch_operand(op, spec, key=key, budget=budget)
+        cache_key = ("sketch", spec, okey, budget)
+
+        def build():
+            def run(op, key):
+                _bump_traces()
+                return sketch_operand(op, spec, key=key, budget=budget)
+            return jax.jit(run)
+
+        return _memoized(cache_key, build)(op, key)
+
+    def sketch_fold(self, state, rows, cols, vals):
+        """Fold a COO entry batch into a ``SketchState`` through the
+        count-sketch scatter-add kernel — staged + memoized per (state
+        signature, padded entry count).  Batches are padded to power-of-
+        two lengths (``sketchres.pad_entries``; zero-value pads are exact
+        no-ops) so an arbitrary delta stream pays O(log E) traces total,
+        shared across every tenant with the same panel shapes."""
+        from repro.sketchres import apply_entries, pad_entries
+        rows, cols, vals = pad_entries(rows, cols, vals)
+        ssig = _operand_signature(state)
+        if ssig is None:
+            return apply_entries(state, rows, cols, vals)
+        cache_key = ("sketch_fold", ssig, rows.shape[0])
+
+        def build():
+            def run(state, rows, cols, vals):
+                _bump_traces()
+                return apply_entries(state, rows, cols, vals)
+            return jax.jit(run)
+
+        return _memoized(cache_key, build)(state, rows, cols, vals)
+
+    def sketch_fold_delta(self, state, delta):
+        """Fold a factored (or dense) drift block into a ``SketchState``
+        via two panel products — staged per (state, delta) signature."""
+        from repro.sketchres import apply_lowrank_delta
+        dop = as_operator(delta, backend=self.spec.backend)
+        ssig = _operand_signature(state)
+        dsig = _operand_signature(dop)
+        if ssig is None or dsig is None:
+            return apply_lowrank_delta(state, dop)
+        cache_key = ("sketch_fold_delta", ssig, dsig)
+
+        def build():
+            def run(state, dop):
+                _bump_traces()
+                return apply_lowrank_delta(state, dop)
+            return jax.jit(run)
+
+        return _memoized(cache_key, build)(state, dop)
+
+    def sketch_reconstruct(self, state):
+        """Zero-sweep ``Factorization`` from maintained panels
+        (``sketchres.reconstruct`` — stabilized-pinv Nyström core),
+        staged per (spec, state signature).  The answer is unverified by
+        construction; callers gate it (residual probe + staleness)."""
+        from repro.sketchres import reconstruct
+        spec = self.spec
+        ssig = _operand_signature(state)
+        if ssig is None:
+            return reconstruct(state, spec)
+        cache_key = ("sketch_reconstruct", spec, ssig)
+
+        def build():
+            def run(state):
+                _bump_traces()
+                return reconstruct(state, spec)
+            return jax.jit(run)
+
+        return _memoized(cache_key, build)(state)
+
     def solve_batched(self, ops: Any, *, keys: Optional[Array] = None,
                       q1s: Optional[Array] = None, with_info: bool = False):
         """Run the planned factorization over a *stacked* operand — one

@@ -12,8 +12,12 @@ training trajectory, a similarity matrix under live updates).  A
     f2 = sess.delta(LowRankOp(...))   # structured drift: rank-k update,
                                       # ZERO Krylov iterations when it
                                       # passes the parity gate
+    f3 = sess.entries(rows, cols, v)  # unstructured drift: fold the COO
+                                      # stream into a resident sketch,
+                                      # reconstruct — zero iterations when
+                                      # it passes the residual probe
 
-The decision is **three-way** per step:
+The decision is **four-way** per step:
 
   ============  =============================================  ==========
   branch        taken when                                     GK iters
@@ -22,9 +26,18 @@ The decision is **three-way** per step:
                 the measured residual-after-update passes the
                 parity gate (``update_tol``, learned when not
                 pinned)
+  ``sketch``    drift arrived as a COO entry stream via        0
+                :meth:`entries`, the resident sketch's
+                staleness odometer is under budget, AND the
+                reconstructed factorization passes the
+                residual probe (``sketch_tol``, learned when
+                not pinned)
   ``refine``    measured subspace drift ≤ ``restart_angle``    reduced
   ``restart``   drift above ``restart_angle`` (or no previous  full
-                factorization)
+                factorization); also the staleness fallback —
+                a tripped sketch re-sketches from the operand
+                and answers with a REAL solve, never an
+                unverified reconstruction
   ============  =============================================  ==========
 
 For refine/restart the session measures the **subspace angle** between the
@@ -169,6 +182,12 @@ class Session:
                   float pins an absolute residual gate; ``0.0`` disables
                   the update path entirely (every delta folds + re-solves,
                   the pre-PR-7 behavior).
+    sketch_tol    residual-probe gate for the sketch-reconstruct path
+                  taken by :meth:`entries`.  Same convention as
+                  ``update_tol``: ``None`` learns it (margin over the
+                  probe of the solver's own factorization), a positive
+                  float pins it, ``0.0`` disables the sketch path (every
+                  entry batch folds + re-solves).
     """
 
     def __init__(self, A, spec: Optional[SVDSpec] = None, *,
@@ -177,6 +196,7 @@ class Session:
                  restart_angle: float = 0.5,
                  track_residuals: bool = True,
                  update_tol: Optional[float] = None,
+                 sketch_tol: Optional[float] = None,
                  **overrides):
         spec = (spec or SVDSpec())
         if overrides:
@@ -198,6 +218,7 @@ class Session:
         self.restart_angle = float(restart_angle)
         self.track_residuals = track_residuals
         self.update_tol = None if update_tol is None else float(update_tol)
+        self.sketch_tol = None if sketch_tol is None else float(sketch_tol)
         self._key = key
         self._step = 0
         self.fact: Optional[Factorization] = None
@@ -207,6 +228,12 @@ class Session:
         # solve itself sync-free) and the solver-residual gate reference.
         self._pending_info = None
         self._ref_residual: Optional[float] = None
+        # sketch residency (the entries path): built lazily from the
+        # pre-drift operand on the first entries() call, folded in place
+        # after that, invalidated whenever the operand changes by a route
+        # the sketch cannot fold (update(), beta != 1 deltas).
+        self.sketch = None
+        self._ref_probe: Optional[float] = None
 
     # --- key stream ---------------------------------------------------
     def _next_key(self, key: Optional[Array]) -> Array:
@@ -252,6 +279,9 @@ class Session:
         simply compiles a fresh cache entry.
         """
         self.op = as_operator(A, backend=self.spec.backend)
+        # wholesale replacement: the resident sketch describes the old
+        # operand and nothing relates the two — drop it (rebuilt lazily).
+        self.sketch = None
         return self._tracked_solve(key)
 
     def delta(self, delta_op, *, beta: float = 1.0,
@@ -294,7 +324,122 @@ class Session:
             fold = lambda: DenseOp(A2, backend=base.backend)  # noqa: E731
         return self._apply_delta(dop, 1.0, key, kind="downdate", fold=fold)
 
-    # --- the three-way policy -----------------------------------------
+    def entries(self, rows, cols, vals, *,
+                key: Optional[Array] = None) -> Factorization:
+        """Apply an *unstructured* entrywise drift ``A[rows, cols] +=
+        vals`` (COO triplets) and solve — the fourth policy branch.
+
+        The session keeps a :class:`~repro.sketchres.state.SketchState`
+        resident next to the operand (built lazily from the pre-drift
+        operand on first use).  Each entry batch folds into BOTH the
+        operand and the sketch (``SolverPlan.sketch_fold`` — the
+        count-sketch scatter-add kernel, staged once per padded batch
+        length); the answer is then reconstructed from the sketch panels
+        alone with ZERO Krylov iterations and accepted only when
+
+        * the sketch's staleness odometer (cumulative folded Frobenius
+          mass vs. the coverage budget) has not tripped, and
+        * the HMT residual probe of the reconstruction against the
+          *post-drift* operand passes the gate (``sketch_tol``).
+
+        A staleness trip re-sketches from the updated operand (odometer
+        reset) and answers with a real tracked solve; a probe rejection
+        falls back to refine/restart with the rejection annotated on the
+        fallback record.  Either way the caller never receives an
+        unverified reconstruction.  Dense operands only: an entrywise
+        fold needs addressable storage.
+        """
+        if not isinstance(self.op, DenseOp):
+            raise TypeError(
+                "entries() folds COO triplets in place and needs a dense "
+                f"operand; got {type(self.op).__name__}. Materialize the "
+                "operand or express the drift as a LowRankOp via delta().")
+        rows = jnp.asarray(rows, jnp.int32).reshape(-1)
+        cols = jnp.asarray(cols, jnp.int32).reshape(-1)
+        vals = jnp.asarray(vals).reshape(-1)
+        if not (rows.shape == cols.shape == vals.shape):
+            raise ValueError("rows/cols/vals must have equal lengths; got "
+                             f"{rows.shape[0]}/{cols.shape[0]}/"
+                             f"{vals.shape[0]}")
+        enabled = self.sketch_tol is None or self.sketch_tol > 0.0
+        if enabled and self.sketch is None:
+            # sketch the PRE-drift operand: the fold below then brings the
+            # sketch exactly up to date with the post-drift operand, and
+            # the very first entries() call already answers from panels.
+            self.sketch = self.plan.sketch(
+                self.op, key=jax.random.fold_in(self._next_key(key), 1))
+        A2 = self.op.A.at[rows, cols].add(vals.astype(self.op.A.dtype))
+        new_op = DenseOp(A2, backend=self.op.backend)
+        if not enabled:
+            self.op = new_op
+            return self._tracked_solve(key)
+        from repro.sketchres import is_stale, staleness_ratio
+        # the learned gate's reference probes self.fact against the
+        # operand it described — the PRE-drift one — so form the gate
+        # before the operand swap.
+        gate = self._sketch_gate()
+        self.sketch = self.plan.sketch_fold(self.sketch, rows, cols, vals)
+        ratio = float(staleness_ratio(self.sketch))
+        self.op = new_op
+        if bool(is_stale(self.sketch)):
+            # folds are exact, but cumulative drift past the coverage
+            # budget means the panels may no longer capture the dominant
+            # subspace — re-sketch from the operand (odometer reset) and
+            # answer with a verified solve.
+            self.sketch = self.plan.sketch(
+                new_op, key=jax.random.fold_in(self._next_key(key), 2))
+            fact = self._tracked_solve(key)
+            self._history[-1]["sketch_stale"] = True
+            self._history[-1]["staleness"] = ratio
+            return fact
+        if gate is not None:
+            from repro.serve.resilience import residual_probe
+            fact = self.plan.sketch_reconstruct(self.sketch)
+            probe = residual_probe(np.asarray(new_op.A), fact,
+                                   probes=4, seed=self._step)
+            if probe <= gate:
+                rec = {"step": self._step, "kind": "sketch", "drift": None,
+                       "iterations": 0, "breakdown": False,
+                       "probe": probe, "gate": gate, "staleness": ratio}
+                if self.track_residuals:
+                    rec["residual"] = self._residual(fact)
+                self._history.append(rec)
+                self.fact = fact
+                self._step += 1
+                return fact
+            rejected = (probe, gate)
+        else:
+            # no reference factorization to learn the gate from yet (cold
+            # stream): solve for real — the solve both answers and anchors
+            # the probe reference for the next entries() call.
+            rejected = None
+        fact = self._tracked_solve(key)
+        if rejected is not None:
+            self._history[-1]["sketch_rejected"] = True
+            self._history[-1]["probe"] = rejected[0]
+            self._history[-1]["gate"] = rejected[1]
+        return fact
+
+    def _sketch_gate(self) -> Optional[float]:
+        """Residual-probe acceptance gate for the sketch branch; None when
+        it cannot be formed yet (learned gate with no prior solve)."""
+        if self.sketch_tol is not None:
+            return self.sketch_tol
+        if self.fact is None:
+            return None
+        if self._ref_probe is None:
+            # probe the solver-produced factorization once, lazily, against
+            # the operand it described — sketch-produced probes never
+            # ratchet the reference (same one-way rule as the update gate).
+            if not isinstance(self.op, DenseOp):
+                return None
+            from repro.serve.resilience import residual_probe
+            self._ref_probe = residual_probe(
+                np.asarray(self.op.A), self.fact, probes=4,
+                seed=self._step)
+        return max(_UPDATE_FLOOR, _UPDATE_MARGIN * self._ref_probe)
+
+    # --- the four-way policy ------------------------------------------
     def _fold(self, dop, beta):
         """The post-delta operand.  Dense operands absorb the delta (and
         any decay) in place — pytree structure, and therefore every staged
@@ -335,6 +480,18 @@ class Session:
         eligible = self._update_eligible(dop)
         gate = self._update_gate() if eligible else None
         new_op = self._fold(dop, beta) if fold is None else fold()
+        if self.sketch is not None:
+            if fold is None and beta == 1.0:
+                # sketches are linear in A: the same delta that folds into
+                # the operand folds into the panels (two panel GEMMs), so
+                # a later entries() call resumes from live panels.
+                self.sketch = self.plan.sketch_fold_delta(self.sketch, dop)
+            else:
+                # decayed (beta != 1) or custom-folded operands (downdate's
+                # exact zeroing, where ``dop`` is only the factorization's
+                # approximation of the change) diverge from what the panels
+                # would track — drop the sketch rather than let it lie.
+                self.sketch = None
         rejected = None
         if eligible:
             fact = self.plan.update(self.fact, dop, beta=beta)
@@ -427,6 +584,8 @@ class Session:
             # the old reference described a superseded factorization; the
             # update gate re-measures lazily when next needed.
             self._ref_residual = None
+        # a fresh solver factorization re-anchors the sketch gate too
+        self._ref_probe = None
         self._history.append(rec)
         self.fact = fact
         self._step += 1
@@ -478,7 +637,9 @@ class Session:
                 "restart_angle": self.restart_angle,
                 "track_residuals": self.track_residuals,
                 "update_tol": self.update_tol,
+                "sketch_tol": self.sketch_tol,
                 "updates": c.get("update", 0) + c.get("downdate", 0),
+                "sketches": c.get("sketch", 0),
                 "step": self._step, "history": self.history}
 
     # --- persistence ----------------------------------------------------
@@ -527,8 +688,15 @@ class Session:
         if "update_tol" in meta:
             tol = meta["update_tol"]
             self.update_tol = None if tol is None else float(tol)
+        if "sketch_tol" in meta:
+            tol = meta["sketch_tol"]
+            self.sketch_tol = None if tol is None else float(tol)
         self._ref_residual = None
         self._pending_info = None
+        # sketches are cheap to rebuild and expensive to checkpoint-verify;
+        # a restored session re-sketches lazily on its next entries() call.
+        self.sketch = None
+        self._ref_probe = None
         learned = int(meta.get("refine_iters", self.refine_iters))
         if learned != self.refine_iters:
             self.refine_iters = learned
@@ -559,7 +727,8 @@ class Session:
                    refine_iters=meta.get("refine_iters"),
                    restart_angle=meta.get("restart_angle", 0.5),
                    track_residuals=meta.get("track_residuals", True),
-                   update_tol=meta.get("update_tol"))
+                   update_tol=meta.get("update_tol"),
+                   sketch_tol=meta.get("sketch_tol"))
         # carry the learned budget but keep learning if the original did
         sess._auto_refine = bool(meta.get("auto_refine", True))
         sess.fact = fact

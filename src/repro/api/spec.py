@@ -111,6 +111,19 @@ class SVDSpec:
                 f"sketch_dim must be >= 1, got {self.sketch_dim}")
         if self.passes < 0:
             raise ValueError(f"passes must be >= 0, got {self.passes}")
+        if self.method == "rbk" and self.passes == 0:
+            raise ValueError(
+                "method='rbk' is the iterative randomized block-Krylov "
+                "solver and needs at least one pass over the operand; "
+                "passes=0 (sketch-only) is the gnystrom regime — use "
+                "method='gnystrom' instead")
+        if self.method in ("rbk", "gnystrom") and \
+                self.sketch_dim is not None and self.sketch_dim < self.rank:
+            raise ValueError(
+                f"sketch_dim={self.sketch_dim} cannot resolve rank="
+                f"{self.rank}: the sketch panel must span at least the "
+                "requested rank (sketch_dim >= rank; leave sketch_dim=None "
+                "for the oversampled default)")
         if self.sketch_kind not in SKETCH_KINDS:
             raise ValueError(
                 f"sketch_kind must be one of {SKETCH_KINDS}, got "

@@ -132,6 +132,32 @@ def make_sketch(key: Array, n: int, d: int, *, kind: str = "sparse_sign",
     return SparseSignSketch(idx, signs.astype(dtype), n, backend=backend)
 
 
+def nystrom_reconstruct(Y: Array, Zt: Array, C: Array
+                        ) -> tuple[Array, Array, Array]:
+    """Stabilized generalized-Nyström core solve: the SVD of
+    ``Y C⁺ Zt ≈ A`` from the range panel ``Y = AΩ`` (m, k), the co-range
+    panel ``Zt = ΨᵀA`` (l, n) and the core ``C = ΨᵀY`` (l, k).
+
+    The core pseudo-inverse is stabilized by an SVD cutoff at
+    ``_PINV_RCOND·σmax`` (sketch-noise core directions are dropped, not
+    inverted), Y is Householder-QR orthonormalized (backward-stable even
+    when the range panel is rank-deficient), and the small projected
+    matrix is SVD'd.  Shared by :func:`gnystrom` (fresh one-sweep solve)
+    and ``repro.sketchres.reconstruct`` (zero-sweep solve from maintained
+    panels).  Returns ``(U (m, k), s (k,), Vt (k, n))`` in f32.
+    """
+    C = C.astype(jnp.float32)
+    Zt = Zt.astype(jnp.float32)
+    Uc, sc, Vtc = jnp.linalg.svd(C, full_matrices=False)
+    keep = sc > _PINV_RCOND * sc[0]
+    sci = jnp.where(keep, 1.0 / jnp.where(keep, sc, 1.0), 0.0)
+    M = (Vtc.T * sci[None, :]) @ (Uc.T @ Zt)      # (k, n) = C⁺ Zt
+    Qy, Ry = jnp.linalg.qr(Y.astype(jnp.float32))
+    B = Ry @ M                                    # (k, n) projected core
+    Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)
+    return Qy @ Ub, s, Vt
+
+
 def _panel_dims(r: int, oversample: int, sketch_dim: Optional[int],
                 m: int, n: int) -> tuple[int, int]:
     """(k, l): right/left sketch widths for gnystrom — k defaults to the
@@ -279,20 +305,7 @@ def gnystrom(
     Y = Y.astype(store)                           # (m, k) range panel
     Zt = Z.astype(jnp.float32).T                  # (l, n) = ΨᵀA
     C = ps.tapply(Y).astype(jnp.float32)          # (l, k) = ΨᵀAΩ, no touch
-
-    # stabilized core pseudo-inverse: A ≈ Y C⁺ Zt
-    Uc, sc, Vtc = jnp.linalg.svd(C, full_matrices=False)
-    keep = sc > _PINV_RCOND * sc[0]
-    sci = jnp.where(keep, 1.0 / jnp.where(keep, sc, 1.0), 0.0)
-    M = (Vtc.T * sci[None, :]) @ (Uc.T @ Zt)      # (k, n) = C⁺ Zt
-
-    # Y = Qy Ry (Householder QR — backward-stable even when the range
-    # panel is rank-deficient; spurious null directions stay orthonormal
-    # and carry zero mass through Ry).
-    Qy, Ry = jnp.linalg.qr(Y.astype(jnp.float32))
-    B = Ry @ M                                    # (k, n) projected core
-    Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)
-    U = Qy @ Ub
+    U, s, Vt = nystrom_reconstruct(Y, Zt, C)
     if callback is not None:
         from repro.api.callbacks import ConvergenceInfo
         callback.on_info(ConvergenceInfo(

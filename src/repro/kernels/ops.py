@@ -15,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import count_sketch as _cs
 from repro.kernels import gk_matvec as _gk
 from repro.kernels import gk_step as _gs
 from repro.kernels import lowrank_update as _lr
@@ -228,3 +229,28 @@ def sketch_matmat(signs: Array, idx: Array, X: Array, *,
     Xp = _pad_to(X, _sk.BN, 1)
     out = _sk.sketch_matmat(sp, ip, Xp, bd=bd, interpret=_interpret())
     return out[:d, :b]
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "be"))
+def scatter_add(rows: Array, cols: Array, vals: Array,
+                shape: tuple[int, int], *, be: int = _cs.BE) -> Array:
+    """Dense (m, d) f32 accumulation of a COO entry stream; duplicate
+    coordinates sum (count-sketch collision semantics).
+
+    Pads the entry count to a ``be`` multiple with (row 0, col 0, val 0)
+    entries — exactly zero contribution — and the output panel to f32
+    tile multiples, sliced off after the call.
+    """
+    m, d = shape
+    E = rows.shape[0]
+    if E == 0:
+        return jnp.zeros((m, d), jnp.float32)
+    be = min(be, E)
+    rp = _pad_to(rows.reshape(-1, 1).astype(jnp.int32), be, 0)[:, 0]
+    cp = _pad_to(cols.reshape(-1, 1).astype(jnp.int32), be, 0)[:, 0]
+    vp = _pad_to(vals.reshape(-1, 1), be, 0)[:, 0]
+    mp = m + ((-m) % 8)
+    dp = d + ((-d) % 128)
+    out = _cs.scatter_add(rp, cp, vp, (mp, dp), be=be,
+                          interpret=_interpret())
+    return out[:m, :d]

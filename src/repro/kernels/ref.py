@@ -66,3 +66,17 @@ def sketch_matmat(signs: Array, idx: Array, X: Array) -> Array:
     X (N, b)) — sketch row i sums its ζ signed source rows of X."""
     return jnp.einsum("ds,dsb->db", signs.astype(jnp.float32),
                       X.astype(jnp.float32)[idx])
+
+
+def scatter_add(rows: Array, cols: Array, vals: Array,
+                shape: tuple[int, int]) -> Array:
+    """Dense (m, d) f32 accumulation of a COO stream — the einsum oracle
+    for the count-sketch scatter kernel.  Destinations are expanded to
+    one-hot matrices and contracted over the entry axis, so duplicate
+    coordinates *sum* (the semantics the kernel must match)."""
+    m, d = shape
+    R = (rows[:, None] == jnp.arange(m, dtype=rows.dtype)[None, :]
+         ).astype(jnp.float32)
+    H = (cols[:, None] == jnp.arange(d, dtype=cols.dtype)[None, :]
+         ).astype(jnp.float32) * vals.astype(jnp.float32)[:, None]
+    return jnp.einsum("em,ed->md", R, H)

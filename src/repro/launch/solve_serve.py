@@ -95,6 +95,9 @@ def run_traffic(server: SolveServer, requests, *, clients: int = 4,
             if req.kind == "delta":
                 # structured tenant drift: ship only the low-rank factors
                 operand, kind = req.delta, "delta"
+            elif req.kind == "entries":
+                # unstructured tenant drift: ship only the COO triplets
+                operand, kind = req.entries, "entries"
             elif req.tenant is not None:
                 operand, kind = req.A, "factorize"
             else:

@@ -90,7 +90,7 @@ from repro.serve.tenant import TenantRegistry
 
 Array = jax.Array
 
-_KINDS = ("factorize", "estimate", "delta")
+_KINDS = ("factorize", "estimate", "delta", "entries")
 _MODES = ("exact", "shared")
 
 
@@ -303,6 +303,24 @@ class SolveServer:
             payload = {"delta": A, "kind": kind, "tenant": tenant,
                        "seq": self._next_seq()}
             group: Hashable = ("tenant", str(tenant))
+        elif kind == "entries":
+            # unstructured drift as raw COO triplets (rows, cols, vals)
+            # against a tenant's tracked state: no operand transport, no
+            # bucketing — the triplets fold into the tenant session's
+            # resident sketch on the dispatch worker.  Same FIFO tenant
+            # group as delta.
+            if tenant is None:
+                raise ValueError("entries requests require tenant= "
+                                 "routing; there is no anonymous tracked "
+                                 "state to fold into")
+            try:
+                rows, cols, vals = A
+            except (TypeError, ValueError):
+                raise ValueError("entries requests ship a (rows, cols, "
+                                 "vals) COO triplet") from None
+            payload = {"entries": (rows, cols, vals), "kind": kind,
+                       "tenant": tenant, "seq": self._next_seq()}
+            group = ("tenant", str(tenant))
         else:
             b = embed(A, self.quantum)
             payload = {"bucketed": b, "kind": kind, "tenant": tenant,
@@ -653,6 +671,18 @@ class SolveServer:
                     dop = self._as_lowrank(t.payload["delta"])
                     fact = self._retrying(
                         lambda s=sess, d=dop, k=key: s.delta(d, key=k))
+                elif t.payload["kind"] == "entries":
+                    sess = self.tenants.touch(tid)
+                    if sess is None or sess.fact is None:
+                        t._fail(RuntimeError(
+                            f"tenant {tid!r}: entries before any "
+                            "factorize — there is no tracked state to "
+                            "fold into"))
+                        continue
+                    rows, cols, vals = t.payload["entries"]
+                    fact = self._retrying(
+                        lambda s=sess, r=rows, c=cols, v=vals, k=key:
+                        s.entries(r, c, v, key=k))
                 else:
                     A = t.payload["bucketed"].extract()
                     sess = self.tenants.get(tid, A)
@@ -664,11 +694,16 @@ class SolveServer:
                 t._fail(exc)
                 continue
             rec = sess.history[-1]
+            meta = {"kind": rec["kind"],
+                    "iterations": rec["iterations"],
+                    "step": rec["step"]}
+            for k in ("probe", "gate", "staleness", "sketch_stale",
+                      "sketch_rejected"):
+                if k in rec:
+                    meta[k] = rec[k]
             t._resolve(ServeResult(
                 kind="tenant", value=fact, batch=len(tickets),
-                meta={"kind": rec["kind"],
-                      "iterations": rec["iterations"],
-                      "step": rec["step"]}))
+                meta=meta))
 
     # --- stats / lifecycle ----------------------------------------------
     def health(self) -> dict:

@@ -31,7 +31,9 @@ class Request:
     ``kind="delta"`` carries the low-rank drift factors in ``delta``
     (``(U, s, Vt)`` with ``U (m, k)``, ``s (k,)``, ``Vt (k, n)``); ``A``
     is then the *post-drift* operand — kept for accuracy checking on the
-    consumer side, never shipped to the server.
+    consumer side, never shipped to the server.  ``kind="entries"``
+    carries an unstructured COO drift in ``entries`` (``(rows, cols,
+    vals)``) with the same ``A`` convention.
     """
 
     A: np.ndarray
@@ -39,6 +41,7 @@ class Request:
     tenant: Optional[str] = None
     kind: str = "factorize"
     delta: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+    entries: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
 
 
 def zipf_choice(rng: np.random.Generator, k: int, size: int,
@@ -63,6 +66,20 @@ def lowrank_operand(rng: np.random.Generator, shape: Tuple[int, int],
     s = np.logspace(0.0, -2.0, r)
     A = (U * s) @ V.T + noise * rng.standard_normal((m, n))
     return np.asarray(A, dtype=dtype)
+
+
+def entry_drift(rng: np.random.Generator, A: np.ndarray, *,
+                drift: float, nnz: int, dtype=np.float32
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unstructured COO drift: ``nnz`` uniformly placed entry updates
+    ``(rows, cols, vals)`` with ``||vals||_2 = drift * ||A||_F`` — the
+    sparse/entrywise regime no low-rank factor pair can express."""
+    m, n = A.shape
+    rows = rng.integers(0, m, size=nnz).astype(np.int32)
+    cols = rng.integers(0, n, size=nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(dtype)
+    scale = drift * np.linalg.norm(A) / max(np.linalg.norm(vals), 1e-30)
+    return rows, cols, (scale * vals).astype(dtype)
 
 
 def lowrank_drift(rng: np.random.Generator, A: np.ndarray, *,
@@ -90,6 +107,7 @@ def synthetic_stream(n_requests: int, *,
                      estimate_fraction: float = 0.0,
                      structured_drift: bool = False,
                      drift_rank: int = 2,
+                     entry_drift_nnz: int = 0,
                      seed: int = 0) -> Iterator[Request]:
     """Yield ``n_requests`` synthetic :class:`Request`\\ s.
 
@@ -105,7 +123,15 @@ def synthetic_stream(n_requests: int, *,
     stack's zero-iteration update path engages.  Tenant first-contact
     operands are then exactly rank-``rank`` (no additive noise), matching
     how a real incremental stream starts from a factorized state.
+
+    ``entry_drift_nnz > 0`` instead ships every tenant drift as a
+    ``kind="entries"`` request of that many COO triplets (unstructured —
+    no factor pair exists), engaging the sketch-resident path.  Mutually
+    exclusive with ``structured_drift``.
     """
+    if structured_drift and entry_drift_nnz > 0:
+        raise ValueError("structured_drift and entry_drift_nnz are "
+                         "mutually exclusive drift regimes")
     rng = np.random.default_rng(seed)
     shapes = [tuple(s) for s in shapes]
     picks = zipf_choice(rng, len(shapes), n_requests, a=zipf_a)
@@ -116,10 +142,22 @@ def synthetic_stream(n_requests: int, *,
             A = tenant_state.get(tid)
             if A is None:
                 shape = shapes[picks[i]]
-                noise = 0.0 if structured_drift else 1e-3
+                incremental = structured_drift or entry_drift_nnz > 0
+                noise = 0.0 if incremental else 1e-3
                 A = lowrank_operand(rng, shape, rank, noise=noise)
                 tenant_state[tid] = A
                 yield Request(A=A, shape=tuple(A.shape), tenant=tid)
+                continue
+            if entry_drift_nnz > 0:
+                rows, cols, vals = entry_drift(rng, A, drift=drift,
+                                               nnz=entry_drift_nnz,
+                                               dtype=A.dtype)
+                A = A.copy()
+                np.add.at(A, (rows, cols), vals)
+                tenant_state[tid] = A
+                yield Request(A=A, shape=tuple(A.shape), tenant=tid,
+                              kind="entries",
+                              entries=(rows, cols, vals))
                 continue
             if structured_drift:
                 U, s, Vt = lowrank_drift(rng, A, drift=drift,
@@ -144,5 +182,5 @@ def synthetic_stream(n_requests: int, *,
                       kind=kind)
 
 
-__all__ = ["DEFAULT_SHAPES", "Request", "lowrank_drift",
+__all__ = ["DEFAULT_SHAPES", "Request", "entry_drift", "lowrank_drift",
            "lowrank_operand", "synthetic_stream", "zipf_choice"]

@@ -1,0 +1,25 @@
+"""Sketch-resident operators: maintained count/range sketches that turn
+unstructured drift into zero-iteration factorizations.
+
+PR 7's update path needs drift as explicit low-rank factors; everything
+else (dense or entrywise drift) used to force a refine/restart solve.
+This package keeps a :class:`~repro.sketchres.state.SketchState` resident
+next to the operand — the Tropp–Webber sketch pair ``Y = AΩ`` /
+``Z = ΨᵀA`` plus the test matrices' seeds — and exploits the linearity of
+both sketches in ``A``: a COO entry stream folds in at O(nnz·ζ) through
+the ``kernels/count_sketch`` scatter-add kernel, dense or factored block
+drift at one panel GEMM, and :func:`~repro.sketchres.state.reconstruct`
+re-derives the factorization from the panels alone (the PR 9 stabilized-
+pinv generalized-Nyström core) without ever touching the operator —
+``iterations=0, method="sketch"``.
+"""
+from repro.sketchres.state import (BUDGET, SketchState, apply_dense_delta,
+                                   apply_entries, apply_lowrank_delta,
+                                   is_stale, pad_entries, reconstruct,
+                                   sketch_operand, staleness_ratio)
+
+__all__ = [
+    "BUDGET", "SketchState", "apply_dense_delta", "apply_entries",
+    "apply_lowrank_delta", "is_stale", "pad_entries", "reconstruct",
+    "sketch_operand", "staleness_ratio",
+]

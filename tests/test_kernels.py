@@ -295,3 +295,69 @@ def test_sketch_matmat_tile_override():
         np.testing.assert_allclose(
             np.asarray(ops.sketch_matmat(sk.signs, sk.idx, X, bd=bd)),
             want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# COO scatter-add (count-sketch fold primitive — the first scatter kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,m,d", [(300, 37, 20), (128, 128, 128),
+                                   (1, 5, 3), (513, 260, 130)])
+def test_scatter_add_vs_ref(E, m, d):
+    ks = jax.random.split(jax.random.PRNGKey(E * m + d), 3)
+    rows = jax.random.randint(ks[0], (E,), 0, m, jnp.int32)
+    cols = jax.random.randint(ks[1], (E,), 0, d, jnp.int32)
+    vals = jax.random.normal(ks[2], (E,))
+    got = ops.scatter_add(rows, cols, vals, (m, d))
+    want = ref.scatter_add(rows, cols, vals, (m, d))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+    dense = np.zeros((m, d), np.float64)
+    np.add.at(dense, (np.asarray(rows), np.asarray(cols)),
+              np.asarray(vals, np.float64))
+    np.testing.assert_allclose(np.asarray(got), dense, rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_add_duplicate_slots_bitexact():
+    """Forced collisions: duplicate coordinates SUM, and on dyadic values
+    (exact f32 addition) the kernel matches the dense einsum oracle
+    bit-for-bit — the acceptance contract for count-sketch semantics."""
+    rows = jnp.asarray([3, 3, 3, 0, 3, 1, 1], jnp.int32)
+    cols = jnp.asarray([1, 1, 1, 0, 1, 2, 2], jnp.int32)
+    vals = jnp.asarray([0.25, 0.5, 1.25, -2.0, -0.75, 8.0, -8.0],
+                       jnp.float32)
+    got = np.asarray(ops.scatter_add(rows, cols, vals, (5, 4)))
+    want = np.asarray(ref.scatter_add(rows, cols, vals, (5, 4)))
+    np.testing.assert_array_equal(got, want)
+    assert got[3, 1] == np.float32(1.25)       # 0.25+0.5+1.25-0.75
+    assert got[1, 2] == np.float32(0.0)        # +8 and -8 annihilate
+    assert got[0, 0] == np.float32(-2.0)
+
+
+def test_scatter_add_empty_and_padding():
+    """E=0 returns zeros; block-multiple padding entries (0,0,0) are exact
+    — an all-duplicates stream at (0, 0) must not double-count pads."""
+    z = ops.scatter_add(jnp.zeros((0,), jnp.int32),
+                        jnp.zeros((0,), jnp.int32),
+                        jnp.zeros((0,), jnp.float32), (4, 6))
+    np.testing.assert_array_equal(np.asarray(z), np.zeros((4, 6)))
+    E = 200                                     # pads to 256 at be=128
+    rows = jnp.zeros((E,), jnp.int32)
+    cols = jnp.zeros((E,), jnp.int32)
+    vals = jnp.ones((E,), jnp.float32)
+    got = np.asarray(ops.scatter_add(rows, cols, vals, (3, 3)))
+    assert got[0, 0] == np.float32(E)
+    assert np.abs(got).sum() == np.float32(E)
+
+
+def test_scatter_add_block_override():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    E, m, d = 400, 50, 60
+    rows = jax.random.randint(ks[0], (E,), 0, m, jnp.int32)
+    cols = jax.random.randint(ks[1], (E,), 0, d, jnp.int32)
+    vals = jax.random.normal(ks[2], (E,))
+    want = np.asarray(ref.scatter_add(rows, cols, vals, (m, d)))
+    for be in (32, 100, 512):
+        np.testing.assert_allclose(
+            np.asarray(ops.scatter_add(rows, cols, vals, (m, d), be=be)),
+            want, rtol=2e-6, atol=2e-6)

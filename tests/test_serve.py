@@ -16,8 +16,8 @@ from repro.api import (SVDSpec, clear_plan_cache, plan, plan_cache_stats,
                        trace_count)
 from repro.serve import (Cancelled, ContinuousBatcher, QueueFull,
                          SolveServer, bucket_shape, embed, unpad_factors)
-from repro.serve.traffic import (lowrank_drift, lowrank_operand,
-                                 synthetic_stream)
+from repro.serve.traffic import (entry_drift, lowrank_drift,
+                                 lowrank_operand, synthetic_stream)
 from test_solver_parity import ZOO
 
 KEY = jax.random.PRNGKey(3)
@@ -354,6 +354,60 @@ def test_server_delta_requires_tracked_state():
         with pytest.raises(RuntimeError, match="delta before any"):
             server.solve((U, s, Vt), kind="delta", tenant="ghost",
                          timeout=120.0)
+
+
+def test_server_entries_requests_hit_sketch_path():
+    """Unstructured tenant drift shipped as kind="entries" COO triplets
+    (no operand transport) engages the Session sketch-reconstruct branch:
+    zero GK iterations once the probe reference is anchored, accuracy
+    tracking the dense SVD of the drifted operand."""
+    rng = np.random.default_rng(11)
+    A = lowrank_operand(rng, (48, 32), 4, noise=0.0)   # exact rank
+    with SolveServer(SERVE_SPEC, max_batch=2, window_ms=2.0,
+                     key=jax.random.key(12)) as server:
+        res0 = server.solve(A, tenant="acme", timeout=120.0)
+        assert res0.meta["kind"] == "cold"
+        metas = []
+        for _ in range(4):
+            rows, cols, vals = entry_drift(rng, A, drift=5e-4, nnz=64)
+            A = A.copy()
+            np.add.at(A, (rows, cols), vals)
+            res = server.solve((rows, cols, vals), kind="entries",
+                               tenant="acme", timeout=120.0)
+            assert res.kind == "tenant"
+            metas.append(res.meta)
+        stats = server.stats()
+    sketched = [m for m in metas if m["kind"] == "sketch"]
+    assert len(sketched) >= 2
+    for m in sketched:
+        assert m["iterations"] == 0
+        assert m["probe"] <= m["gate"]          # probe-verified, always
+        assert 0.0 < m["staleness"] < 1.0
+    s_true = np.linalg.svd(A, compute_uv=False)[:4]
+    err = np.max(np.abs(np.asarray(res.value.s) - s_true)) / s_true[0]
+    assert err < 5e-3
+    assert stats["tenant_requests"] == 5
+    assert stats["tenants"]["creates"] == 1
+
+
+def test_server_entries_requires_tenant_and_tracked_state():
+    rng = np.random.default_rng(12)
+    A = lowrank_operand(rng, (48, 32), 4)
+    rows, cols, vals = entry_drift(rng, A, drift=1e-3, nnz=16)
+    with SolveServer(SERVE_SPEC, key=jax.random.key(13)) as server:
+        with pytest.raises(ValueError, match="tenant"):
+            server.submit((rows, cols, vals), kind="entries")
+        with pytest.raises(ValueError, match="COO triplet"):
+            server.submit(A, kind="entries", tenant="acme")
+        with pytest.raises(RuntimeError, match="entries before any"):
+            server.solve((rows, cols, vals), kind="entries",
+                         tenant="ghost", timeout=120.0)
+        # NaN values quarantine at submit, like any operand
+        bad = vals.copy()
+        bad[0] = np.nan
+        with pytest.raises(Exception, match="quarantined"):
+            server.submit((rows, cols, bad), kind="entries",
+                          tenant="acme")
 
 
 def test_estimate_requests_are_stateless():

@@ -1,0 +1,101 @@
+"""Hypothesis property battery for the count-sketch kernel and the
+sketch-resident fold path (PR 10 satellite).
+
+Three properties, straight from the math:
+
+* **Unbiasedness** — the hashed-sign ensemble is an oblivious embedding,
+  ``E[T Tᵀ] = I``, so averaging ``T Tᵀ x`` over independent seeds must
+  converge on ``x`` at the Monte-Carlo rate.
+* **Duplicate-slot exactness** — the scatter-add kernel must agree with
+  the dense one-hot einsum oracle *bit for bit* under forced hash
+  collisions (entries drawn from a tiny index set, dyadic values so
+  every partial sum is exactly representable — any disagreement is a
+  summation-semantics bug, not roundoff).
+* **Fold/sketch commutation** — folding a COO batch into a resident
+  sketch equals sketching the updated operand with the same seeds, to
+  f32 roundoff.  This is the invariant the whole serving path rests on.
+
+Skips cleanly when hypothesis is absent (dev/CI requirement).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property sweep needs hypothesis (dev requirement)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.api import SVDSpec  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+from repro.sketchres import apply_entries, sketch_operand  # noqa: E402
+from repro.sketchres.state import _dense, _hashed  # noqa: E402
+
+SPEC = SVDSpec(method="gnystrom", rank=4, oversample=4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 10), st.integers(0, 2**31 - 1))
+def test_hashed_ensemble_unbiased(n, seed):
+    """E[T Tᵀ x] = x: the seed-averaged reconstruction converges on the
+    identity at the 1/√K Monte-Carlo rate."""
+    d, K = 64, 160
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    x /= np.linalg.norm(x)
+    acc = np.zeros(n, np.float64)
+    base = jax.random.PRNGKey(seed)
+    for i in range(K):
+        slots, signs = _hashed(jax.random.fold_in(base, i), n, d, 4)
+        T = np.asarray(_dense(slots, signs, d), np.float64)
+        acc += T @ (T.T @ x)
+    err = np.linalg.norm(acc / K - x)
+    # per-seed variance of (TTᵀx)_i is O(‖x‖²/d); K-fold averaging takes
+    # the error to ~√(n/(dK)) ≈ 0.03 here — 0.2 is a 6σ-ish margin
+    assert err < 0.2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 2**31 - 1))
+def test_scatter_add_duplicates_bitexact_vs_oracle(e, m, d, seed):
+    """Forced collisions (tiny destination grid) with dyadic values: the
+    Pallas kernel, the ops wrapper and the dense-einsum oracle must agree
+    bit for bit — duplicates SUM."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.integers(0, m, e), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, d, e), jnp.int32)
+    # dyadic grid: every value and every partial sum is exact in f32
+    vals = jnp.asarray(rng.integers(-8, 9, e) * 0.25, jnp.float32)
+    want = np.asarray(ref.scatter_add(rows, cols, vals, (m, d)))
+    got = np.asarray(ops.scatter_add(rows, cols, vals, (m, d)))
+    np.testing.assert_array_equal(got, want)
+    # and against the integer ground truth (no float semantics at all)
+    dense = np.zeros((m, d), np.float64)
+    np.add.at(dense, (np.asarray(rows), np.asarray(cols)),
+              np.asarray(vals, np.float64))
+    np.testing.assert_array_equal(got, dense.astype(np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 40), st.integers(8, 40), st.integers(1, 120),
+       st.integers(0, 2**31 - 1))
+def test_fold_commutes_with_sketch(m, n, e, seed):
+    """apply_entries(sketch(A), Δ) == sketch(A + Δ) with the same seeds,
+    to f32 roundoff — sketch linearity, the fold's correctness law."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    rows = rng.integers(0, m, e).astype(np.int32)
+    cols = rng.integers(0, n, e).astype(np.int32)
+    vals = rng.standard_normal(e).astype(np.float32)
+    folded = apply_entries(sketch_operand(A, SPEC, key=key),
+                           rows, cols, vals)
+    A2 = np.asarray(A).copy()
+    np.add.at(A2, (rows, cols), vals)
+    fresh = sketch_operand(jnp.asarray(A2), SPEC, key=key)
+    for got, want in ((folded.Y, fresh.Y), (folded.Z, fresh.Z)):
+        scale = max(float(jnp.linalg.norm(want)), 1e-12)
+        diff = float(jnp.linalg.norm(got.astype(jnp.float32)
+                                     - want.astype(jnp.float32)))
+        assert diff < 1e-5 * scale
